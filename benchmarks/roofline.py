@@ -1,0 +1,110 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the
+dry-run's compiled artifacts (reports/dryrun/*.json).
+
+  compute term    = HLO_FLOPs / (chips x 197e12 FLOP/s bf16)
+  memory term     = HLO_bytes / (chips x 819e9 B/s HBM)
+  collective term = collective_bytes / (chips x 50e9 B/s ICI per link)
+
+cost_extrapolated numbers are already per-device (XLA SPMD module), so the
+terms below divide only where the artifact is whole-program.  MODEL_FLOPS
+(6*N*D dense / 6*N_active*D MoE) gives the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from benchmarks.common import save_report
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12      # bf16 per chip (v5e)
+HBM_BW = 819e9           # B/s per chip
+ICI_BW = 50e9            # B/s per link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
+                          "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    cell = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * cell.global_batch  # decode: one token per sequence
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if not rec.get("ok"):
+        return None
+    ext = rec.get("cost_extrapolated") or {}
+    if "flops" not in ext:
+        return None  # multi-pod pass proves sharding/memory only (§Dry-run)
+    chips = 1
+    for v in rec["mesh_shape"].values():
+        chips *= v
+    # cost_analysis is per-partition (per-device) after SPMD
+    t_compute = ext["flops"] / PEAK_FLOPS
+    t_memory = ext["bytes_accessed"] / HBM_BW
+    t_coll = ext["collective_bytes"] / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"]) / chips
+    useful = mf / max(ext["flops"], 1.0)
+    bound = max(terms.values())
+    roofline_fraction = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    mem = rec["memory"]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        **{k: float(v) for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "useful_flop_ratio": useful,
+        "roofline_fraction": roofline_fraction,
+        "hbm_bytes_per_dev": mem["argument_bytes"] + mem["temp_bytes"],
+        "collectives": rec["collectives"],
+    }
+
+
+def run():
+    t0 = time.perf_counter()
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyze_record(rec)
+        if row is not None:
+            rows.append(row)
+    elapsed = time.perf_counter() - t0
+    save_report("roofline", rows)
+    if not rows:
+        return {"name": "roofline", "us_per_call": 0.0,
+                "derived": "no_dryrun_records", "rows": []}
+    worst = min(rows, key=lambda r: r["roofline_fraction"])
+    return {
+        "name": "roofline",
+        "us_per_call": elapsed * 1e6 / max(len(rows), 1),
+        "derived": f"cells={len(rows)}_worst={worst['arch']}:"
+                   f"{worst['shape']}@{worst['roofline_fraction']:.3f}",
+        "rows": rows,
+    }
+
+
+if __name__ == "__main__":
+    out = run()
+    print(f"{'arch':22s} {'shape':12s} {'mesh':6s} {'compute':>9s} "
+          f"{'memory':>9s} {'coll':>9s} dominant{'':4s} {'useful':>7s} "
+          f"{'roofline':>8s}")
+    for r in out["rows"]:
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+              f"{r['compute_s']:9.2e} {r['memory_s']:9.2e} "
+              f"{r['collective_s']:9.2e} {r['dominant']:12s} "
+              f"{r['useful_flop_ratio']:7.2f} {r['roofline_fraction']:8.3f}")

@@ -1,0 +1,44 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Detailed rows are written to
+reports/bench/*.json; each module is also runnable standalone for full
+output (``python -m benchmarks.fig7_frontier`` etc.).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig7_frontier, fig8_mae, fig9_policy, fig10_slo,
+                            roofline, table1_errors, table2_profiling_cost,
+                            table3_overhead)
+
+    benches = [
+        ("fig8_mae", fig8_mae.run),
+        ("table1_errors", table1_errors.run),
+        ("table2_profiling_cost", table2_profiling_cost.run),
+        ("fig7_frontier", fig7_frontier.run),
+        ("fig9_policy", fig9_policy.run),
+        ("fig10_slo", fig10_slo.run),
+        ("table3_overhead", table3_overhead.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        try:
+            out = fn()
+            print(f"{out['name']},{out['us_per_call']:.1f},{out['derived']}")
+            sys.stdout.flush()
+        except Exception as e:
+            failures += 1
+            print(f"{name},nan,FAILED:{type(e).__name__}:{e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

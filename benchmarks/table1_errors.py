@@ -1,0 +1,44 @@
+"""Paper Table 1: column-level error summary at 2% cost coverage."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import profile, save_report, truth, workload
+from repro.core.estimators import ESTIMATORS
+
+
+def run(workflow: str = "nl2sql_8", coverage: float = 0.02):
+    trie, _ = workload(workflow)
+    tr = truth(workflow)
+    d = trie.depth > 0
+    prof = profile(workflow, coverage)
+    rows = []
+    t0 = time.perf_counter()
+    for name, fn in ESTIMATORS.items():
+        err = fn(trie, prof)[d] - tr[d]
+        rows.append({
+            "method": name,
+            "mean_signed_pct": float(err.mean() * 100),
+            "mean_abs_pct": float(np.abs(err).mean() * 100),
+            "max_abs_pct": float(np.abs(err).max() * 100),
+        })
+    elapsed = time.perf_counter() - t0
+    save_report(f"table1_errors_{workflow}", rows)
+    vine = next(r for r in rows if r["method"] == "vinelm")
+    return {
+        "name": "table1_errors",
+        "us_per_call": elapsed * 1e6 / len(rows),
+        "derived": f"vinelm_signed={vine['mean_signed_pct']:+.2f}%"
+                   f"_mae={vine['mean_abs_pct']:.2f}%",
+        "rows": rows,
+    }
+
+
+if __name__ == "__main__":
+    out = run()
+    print(f"{'method':18s} {'signed':>9s} {'mae':>8s} {'max':>8s}")
+    for r in out["rows"]:
+        print(f"{r['method']:18s} {r['mean_signed_pct']:+8.2f}% "
+              f"{r['mean_abs_pct']:7.2f}% {r['max_abs_pct']:7.2f}%")

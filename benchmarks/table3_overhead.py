@@ -1,0 +1,73 @@
+"""Paper Table 3: per-replan controller overhead.
+
+Measures (a) the host (numpy) re-rooted search per replanning step, matching
+the paper's measurement, and (b) the batched jit/vmap TPU-native planner
+(DESIGN.md §2.1) amortized per request — the form that scales to fleets.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import exact_ann, save_report, workload
+from repro.core.controller import Objective, select_path
+from repro.core.controller_jax import TrieDevice, make_batched_planner
+
+
+def run(batch: int = 256, iters: int = 50):
+    rows = []
+    total_t0 = time.perf_counter()
+    for wf in ("mathqa_4", "nl2sql_2", "nl2sql_8"):
+        trie, _ = workload(wf)
+        ann = exact_ann(wf)
+        obj = Objective("max_acc",
+                        lat_cap=float(np.quantile(ann.lat[trie.terminal], 0.7)))
+        rng = np.random.default_rng(0)
+        roots = rng.integers(0, trie.n_nodes, size=batch).astype(np.int32)
+        lat = rng.uniform(0, 3, size=batch).astype(np.float32)
+
+        # host path (per-request, paper's setting)
+        t0 = time.perf_counter()
+        n = 200
+        for i in range(n):
+            select_path(trie, ann, obj, root=int(roots[i % batch]),
+                        elapsed_lat=float(lat[i % batch]))
+        host_us = (time.perf_counter() - t0) / n * 1e6
+
+        # batched jit planner
+        td = TrieDevice.build(trie, ann)
+        plan = make_batched_planner(td, obj)
+        ed = np.zeros(td.n_engines, np.float32)
+        ec = np.zeros(batch, np.float32)
+        out = plan(roots, lat, ec, ed)
+        out.block_until_ready()  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = plan(roots, lat, ec, ed)
+        out.block_until_ready()
+        jax_us_batch = (time.perf_counter() - t0) / iters * 1e6
+        rows.append({
+            "workflow": wf, "n_nodes": trie.n_nodes,
+            "host_us_per_replan": round(host_us, 1),
+            "jax_us_per_batch256": round(jax_us_batch, 1),
+            "jax_us_per_request": round(jax_us_batch / batch, 2),
+        })
+    elapsed = time.perf_counter() - total_t0
+    save_report("table3_overhead", rows)
+    worst = max(r["host_us_per_replan"] for r in rows)
+    return {
+        "name": "table3_overhead",
+        "us_per_call": elapsed * 1e6 / max(len(rows), 1),
+        "derived": f"max_host_replan={worst:.0f}us",
+        "rows": rows,
+    }
+
+
+if __name__ == "__main__":
+    out = run()
+    for r in out["rows"]:
+        print(f"{r['workflow']:10s} nodes={r['n_nodes']:5d} "
+              f"host={r['host_us_per_replan']:8.1f}us/replan "
+              f"jax_batch256={r['jax_us_per_batch256']:9.1f}us "
+              f"({r['jax_us_per_request']:.2f}us/req)")

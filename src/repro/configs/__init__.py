@@ -1,0 +1,48 @@
+"""Architecture config registry: ``get_config("<arch-id>", smoke=...)``.
+
+Arch ids match the assignment table; each module exports the exact CONFIG
+plus a reduced SMOKE config of the same family for CPU tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import SHAPES, ArchConfig, ShapeCell  # re-export
+
+_MODULES = {
+    "zamba2-2.7b": "zamba2_2p7b",
+    "llava-next-34b": "llava_next_34b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "yi-9b": "yi_9b",
+    "qwen2-72b": "qwen2_72b",
+    "minicpm3-4b": "minicpm3_4b",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "arctic-480b": "arctic_480b",
+    "mamba2-1.3b": "mamba2_1p3b",
+    "whisper-base": "whisper_base",
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+def get_config(arch_id: str, smoke: bool = False, **overrides) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    cfg = mod.SMOKE if smoke else mod.CONFIG
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def shape_cells_for(arch_id: str) -> list[str]:
+    """Shape cells this arch runs; the rest are documented skips.
+
+    long_500k needs sub-quadratic attention -> only ssm/hybrid run it
+    (DESIGN.md §3.2).  All assigned archs contain decoders, so decode
+    cells apply everywhere else.
+    """
+    cfg = get_config(arch_id)
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        cells.append("long_500k")
+    return cells

@@ -1,0 +1,40 @@
+"""VineLM core: trie-based fine-grained control for agentic workflows.
+
+The paper's primary contribution, as a composable library:
+
+- `workflow`       — workflow-template DSL (stages, loops, model pools)
+- `trie`           — execution trie in SoA/preorder layout + annotations
+- `workload`       — calibrated synthetic ground-truth generator
+- `profiler`       — cascade sampling, checkpointing, subtree fill-in
+- `estimators`     — 6 column-mean estimators incl. cascade decomposition
+- `controller`     — oracle search + online re-rooted receding-horizon
+- `controller_jax` — batched jit/vmap TPU-native replanner
+- `murakkab`       — coarse workflow-level control baseline
+- `runtime`        — request execution loop (policy x executor)
+- `presets`        — NL2SQL-8 / NL2SQL-2 / MathQA-4 workloads
+"""
+from repro.core.controller import Objective, OnlineController, select_path, select_path_dfs
+from repro.core.estimators import ESTIMATORS, annotate, estimate_accuracy
+from repro.core.monitor import DriftMonitor, DriftReport
+from repro.core.murakkab import murakkab_nodes
+from repro.core.profiler import exhaustive_cost, profile_cascade
+from repro.core.runtime import make_workload_executor, run_cohort, run_request, summarize
+from repro.core.trie import Trie, TrieAnnotations
+from repro.core.workflow import (
+    ModelSpec,
+    ToolStage,
+    WorkflowTemplate,
+    make_refinement_workflow,
+    make_reflection_workflow,
+)
+from repro.core.workload import Workload, generate_workload
+
+__all__ = [
+    "ESTIMATORS", "ModelSpec", "Objective", "OnlineController", "ToolStage",
+    "Trie", "TrieAnnotations", "Workload", "WorkflowTemplate", "annotate",
+    "DriftMonitor", "DriftReport",
+    "estimate_accuracy", "exhaustive_cost", "generate_workload",
+    "make_refinement_workflow", "make_reflection_workflow",
+    "make_workload_executor", "murakkab_nodes", "profile_cascade",
+    "run_cohort", "run_request", "select_path", "select_path_dfs", "summarize",
+]

@@ -1,0 +1,163 @@
+"""JAX/TPU-native batched trie controller (DESIGN.md §2.1).
+
+The paper's controller is a per-request CPU DFS (Table 3).  At fleet scale,
+thousands of in-flight requests replan after every stage; we therefore
+express the re-rooted constrained search as fixed-shape masked reductions
+over the structure-of-arrays trie:
+
+- descendants of the realized prefix u are the preorder interval
+  [u, u + subtree_size[u])  -> two vectorized comparisons;
+- budget feasibility and the accuracy floor are elementwise masks;
+- the paper's monotone pruning becomes algebraic masking (same optimum,
+  data-parallel instead of search-order dependent);
+- live engine-delay inflation uses a dense (N, max_depth) path-model table
+  instead of pointer chasing;
+- the whole replan is one jitted XLA program, `vmap`-ed over a batch of
+  requests with different prefixes, elapsed budgets, and live engine delays.
+
+`benchmarks/table3_overhead.py` measures per-replan latency of this path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.controller import Objective
+from repro.core.trie import Trie, TrieAnnotations
+
+_BIG = 1e30
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrieDevice:
+    """Trie + annotations as device arrays (immutable during serving)."""
+
+    terminal: jnp.ndarray         # (N,) float32 0/1
+    depth: jnp.ndarray            # (N,) float32
+    acc: jnp.ndarray              # (N,)
+    cost: jnp.ndarray             # (N,)
+    lat: jnp.ndarray              # (N,)
+    subtree_size: jnp.ndarray     # (N,) int32
+    path_models: jnp.ndarray      # (N, Dmax) int32, -1 padded
+    engine_of_model: jnp.ndarray  # (M,) int32
+
+    def tree_flatten(self):
+        return (
+            (self.terminal, self.depth, self.acc, self.cost, self.lat,
+             self.subtree_size, self.path_models, self.engine_of_model),
+            None,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @staticmethod
+    def build(trie: Trie, ann: TrieAnnotations,
+              restrict_nodes: np.ndarray | None = None) -> "TrieDevice":
+        terminal = trie.terminal.copy()
+        if restrict_nodes is not None:
+            keep = np.zeros(trie.n_nodes, dtype=bool)
+            keep[restrict_nodes] = True
+            terminal &= keep
+        engines = sorted({m.engine for m in trie.template.models})
+        eidx = {e: i for i, e in enumerate(engines)}
+        eom = np.array([eidx[m.engine] for m in trie.template.models],
+                       dtype=np.int32)
+        dmax = trie.template.max_depth
+        pm = np.full((trie.n_nodes, dmax), -1, dtype=np.int32)
+        for u in range(1, trie.n_nodes):
+            path = trie.path(u)
+            pm[u, : len(path)] = path
+        return TrieDevice(
+            terminal=jnp.asarray(terminal, jnp.float32),
+            depth=jnp.asarray(trie.depth, jnp.float32),
+            acc=jnp.asarray(ann.acc, jnp.float32),
+            cost=jnp.asarray(ann.cost, jnp.float32),
+            lat=jnp.asarray(ann.lat, jnp.float32),
+            subtree_size=jnp.asarray(trie.subtree_size, jnp.int32),
+            path_models=jnp.asarray(pm, jnp.int32),
+            engine_of_model=jnp.asarray(eom, jnp.int32),
+        )
+
+    @property
+    def n_engines(self) -> int:
+        return int(np.asarray(self.engine_of_model).max()) + 1
+
+
+def _cum_engine_delay(td: TrieDevice, engine_delays: jnp.ndarray) -> jnp.ndarray:
+    """delay(u) = sum over the u-path's stages of delta_engine(model)."""
+    per_model = engine_delays[td.engine_of_model]                  # (M,)
+    pm = td.path_models                                            # (N, D)
+    vals = jnp.where(pm >= 0, per_model[jnp.maximum(pm, 0)], 0.0)  # (N, D)
+    return vals.sum(axis=1)
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def _select_single(
+    td: TrieDevice,
+    u: jnp.ndarray,              # () int32 realized prefix node
+    elapsed_lat: jnp.ndarray,    # ()
+    elapsed_cost: jnp.ndarray,   # ()
+    engine_delays: jnp.ndarray,  # (E,)
+    acc_floor: jnp.ndarray,      # ()  (ignored for max_acc)
+    cost_cap: jnp.ndarray,       # ()  (+inf if absent)
+    lat_cap: jnp.ndarray,        # ()  (+inf if absent)
+    *,
+    kind: str,
+) -> jnp.ndarray:
+    n = td.acc.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    lo = u
+    hi = u + td.subtree_size[u]
+    delay = _cum_engine_delay(td, engine_delays)
+    d_lat = (td.lat - td.lat[u]) + (delay - delay[u])
+    d_cost = td.cost - td.cost[u]
+    feas = (td.terminal > 0.5) & (idx >= lo) & (idx < hi)
+    feas &= d_lat <= (lat_cap - elapsed_lat) + 1e-6
+    # cost budgets are expectation-based plan-level constraints (§3.3):
+    # absolute C(v) <= cap, not re-conditioned on realized spend
+    feas &= td.cost <= cost_cap + 1e-6
+    if kind == "min_cost":
+        feas &= td.acc >= acc_floor - 1e-6
+        # lexicographic (cost, lat, depth) via scaled composite key
+        key = d_cost + 1e-7 * d_lat + 1e-12 * td.depth
+    else:
+        key = -td.acc + 1e-7 * d_cost + 1e-12 * d_lat
+    key = jnp.where(feas, key, _BIG)
+    best = jnp.argmin(key)
+    return jnp.where(jnp.any(feas), best.astype(jnp.int32), jnp.int32(-1))
+
+
+def make_batched_planner(td: TrieDevice, obj: Objective):
+    """Returns plan(prefixes, elapsed_lat, elapsed_cost, engine_delays) ->
+    best terminating node per request (int32, -1 infeasible), jitted and
+    vmapped over the request batch."""
+    acc_floor = jnp.float32(obj.acc_floor if obj.acc_floor is not None else -1.0)
+    cost_cap = jnp.float32(obj.cost_cap if obj.cost_cap is not None else _BIG)
+    lat_cap = jnp.float32(obj.lat_cap if obj.lat_cap is not None else _BIG)
+    single = partial(_select_single, kind=obj.kind)
+
+    @jax.jit
+    def plan(prefixes, elapsed_lat, elapsed_cost, engine_delays):
+        return jax.vmap(
+            lambda u, el, ec: single(
+                td, u, el, ec, engine_delays, acc_floor, cost_cap, lat_cap
+            )
+        )(prefixes, elapsed_lat, elapsed_cost)
+
+    return plan
+
+
+def next_model_for(trie: Trie, u: int, target: int) -> int:
+    """First model on the path u -> target (host-side, O(depth))."""
+    if target < 0 or target == u:
+        return -1
+    chain = trie.ancestors(target)
+    i = chain.index(u)
+    return int(trie.model[chain[i + 1]])

@@ -1,0 +1,409 @@
+"""Trie annotation estimators (paper §4.2, §5.3, Appendix A).
+
+Six estimators of the per-path expected accuracy (column means of the
+request-path table A), in the paper's order:
+
+1. ``direct_average``   — raw mean of direct cascade observations.  Badly
+   pessimistic for deep paths: those columns are observed only on the hard
+   subpopulation where every earlier stage failed (MNAR, eq. (3)).
+2. ``prefix_avg``       — prefix-success closure (subtree fill-in) then
+   column average.  Optimistic: fill-in injects the easy successes but the
+   observed failures still come from the hard subpopulation.
+3. ``prefix_impute``    — fill-in, then low-rank soft-impute matrix
+   completion, then column means.
+4. ``prefix_gbt``       — fill-in, then gradient-boosted stumps on
+   hand-designed path/observation features (in-repo replacement for the
+   paper's XGBoost baseline).
+5. ``vinelm_lite``      — cascade decomposition (eq. (7)-(9)): treat direct
+   column means as *conditional* accuracies and reconstruct path means via
+   mu(u) = mu(parent) + (1 - mu(parent)) * q(last | prefix fails).
+6. ``vinelm``           — cascade decomposition + rank-1 SVD smoothing of
+   the sparse deep conditional blocks (§A.4).
+
+All return a vector ``mu`` over trie nodes with ``mu[0] = 0``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.profiler import ProfileResult
+from repro.core.trie import Trie, TrieAnnotations
+
+
+# ----------------------------------------------------------------------
+# shared helpers
+# ----------------------------------------------------------------------
+def _col_stats(values: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Column means & counts of an int8 matrix with -1 = missing."""
+    mask = values >= 0
+    cnt = mask.sum(axis=0)
+    s = np.where(mask, values, 0).sum(axis=0)
+    mean = np.divide(s, np.maximum(cnt, 1), dtype=np.float64)
+    return mean, cnt
+
+
+def _fallback_by_depth_model(
+    trie: Trie, est: np.ndarray, have: np.ndarray
+) -> np.ndarray:
+    """Fill missing per-node values with (depth, model)-group means, then
+    depth means, then the global mean."""
+    out = est.copy()
+    depth = trie.depth
+    model = trie.model
+    global_mean = est[have].mean() if have.any() else 0.5
+    for d in np.unique(depth[depth > 0]):
+        sel_d = depth == d
+        d_have = sel_d & have
+        d_mean = est[d_have].mean() if d_have.any() else global_mean
+        for m in np.unique(model[sel_d]):
+            sel = sel_d & (model == m)
+            g_have = sel & have
+            g_mean = est[g_have].mean() if g_have.any() else d_mean
+            out[sel & ~have] = g_mean
+    return out
+
+
+def _monotone_floor(trie: Trie, mu: np.ndarray) -> np.ndarray:
+    """Clip to [0,1]; used by baselines (no monotonicity enforcement —
+    the paper's baselines are biased and that is the point)."""
+    return np.clip(mu, 0.0, 1.0)
+
+
+# ----------------------------------------------------------------------
+# 1-2: averaging estimators
+# ----------------------------------------------------------------------
+def direct_average(trie: Trie, profile: ProfileResult) -> np.ndarray:
+    mean, cnt = _col_stats(profile.obs)
+    mu = _fallback_by_depth_model(trie, mean, cnt > 0)
+    mu[0] = 0.0
+    return _monotone_floor(trie, mu)
+
+
+def prefix_avg(trie: Trie, profile: ProfileResult) -> np.ndarray:
+    mean, cnt = _col_stats(profile.observed_filled())
+    mu = _fallback_by_depth_model(trie, mean, cnt > 0)
+    mu[0] = 0.0
+    return _monotone_floor(trie, mu)
+
+
+# ----------------------------------------------------------------------
+# 3: fill-in + low-rank soft-impute
+# ----------------------------------------------------------------------
+def _truncated_svd(X: np.ndarray, r: int, seed: int = 0):
+    """Randomized truncated SVD (no scipy in this container)."""
+    rng = np.random.default_rng(seed)
+    n, m = X.shape
+    k = min(r + 6, min(n, m))
+    Omega = rng.standard_normal((m, k))
+    Y = X @ Omega
+    for _ in range(2):  # power iterations for accuracy
+        Y = X @ (X.T @ Y)
+    Q, _ = np.linalg.qr(Y)
+    B = Q.T @ X
+    Ub, s, Vt = np.linalg.svd(B, full_matrices=False)
+    U = Q @ Ub
+    return U[:, :r], s[:r], Vt[:r]
+
+
+def prefix_impute(
+    trie: Trie,
+    profile: ProfileResult,
+    *,
+    rank: int = 4,
+    iters: int = 15,
+    ridge: float = 2.0,
+) -> np.ndarray:
+    """Low-rank matrix completion with row/column biases, fit on observed
+    entries by alternating ridge least squares (standard recommender-style
+    completion; the strongest fair version of the paper's baseline)."""
+    filled = profile.observed_filled().astype(np.float64)
+    mask = filled >= 0
+    n_q, n = filled.shape
+    rng = np.random.default_rng(0)
+    g = filled[mask].mean() if mask.any() else 0.5
+    br = np.zeros(n_q)
+    bc = np.zeros(n)
+    U = 0.01 * rng.standard_normal((n_q, rank))
+    V = 0.01 * rng.standard_normal((n, rank))
+    W = mask.astype(np.float64)
+    Y = np.where(mask, filled, 0.0)
+    for _ in range(iters):
+        # biases (closed form given factors)
+        resid = Y - (g + bc[None, :] + (U @ V.T)) * W
+        br = (resid * W).sum(1) / (W.sum(1) + ridge)
+        resid = Y - (g + br[:, None] + (U @ V.T)) * W
+        bc = (resid * W).sum(0) / (W.sum(0) + ridge)
+        R = Y - (g + br[:, None] + bc[None, :]) * W
+        # ALS: per-row then per-col ridge solves
+        for i in range(n_q):
+            m = mask[i]
+            if not m.any():
+                continue
+            Vm = V[m]
+            A = Vm.T @ Vm + ridge * np.eye(rank)
+            U[i] = np.linalg.solve(A, Vm.T @ R[i, m])
+        for j in range(n):
+            m = mask[:, j]
+            if not m.any():
+                continue
+            Um = U[m]
+            A = Um.T @ Um + ridge * np.eye(rank)
+            V[j] = np.linalg.solve(A, Um.T @ R[m, j])
+    X = np.clip(g + br[:, None] + bc[None, :] + U @ V.T, 0.0, 1.0)
+    X = np.where(mask, filled, X)
+    mu = X.mean(axis=0)
+    mu[0] = 0.0
+    return _monotone_floor(trie, mu)
+
+
+# ----------------------------------------------------------------------
+# 4: fill-in + gradient-boosted stumps (XGBoost stand-in)
+# ----------------------------------------------------------------------
+class _GBTStumps:
+    """Tiny gradient-boosted regression stumps, squared loss."""
+
+    def __init__(self, rounds: int = 200, lr: float = 0.08, n_thresh: int = 16):
+        self.rounds, self.lr, self.n_thresh = rounds, lr, n_thresh
+        self.stumps: list[tuple[int, float, float, float]] = []
+        self.base = 0.0
+
+    def fit(self, F: np.ndarray, y: np.ndarray) -> "_GBTStumps":
+        self.base = float(y.mean())
+        pred = np.full_like(y, self.base)
+        for _ in range(self.rounds):
+            resid = y - pred
+            best = None  # (sse, j, t, left, right)
+            for j in range(F.shape[1]):
+                col = F[:, j]
+                qs = np.quantile(col, np.linspace(0.05, 0.95, self.n_thresh))
+                for t in np.unique(qs):
+                    m = col <= t
+                    if m.all() or not m.any():
+                        continue
+                    l, r = resid[m].mean(), resid[~m].mean()
+                    sse = ((resid[m] - l) ** 2).sum() + ((resid[~m] - r) ** 2).sum()
+                    if best is None or sse < best[0]:
+                        best = (sse, j, float(t), float(l), float(r))
+            if best is None:
+                break
+            _, j, t, l, r = best
+            self.stumps.append((j, t, l, r))
+            pred = pred + self.lr * np.where(F[:, j] <= t, l, r)
+        return self
+
+    def predict(self, F: np.ndarray) -> np.ndarray:
+        pred = np.full(F.shape[0], self.base)
+        for j, t, l, r in self.stumps:
+            pred = pred + self.lr * np.where(F[:, j] <= t, l, r)
+        return pred
+
+
+def _column_features(trie: Trie, profile: ProfileResult) -> np.ndarray:
+    """Hand-designed features per trie node (paper §5.3: depth, observation
+    counts, column means, prefix values, sibling statistics, model power)."""
+    filled = profile.observed_filled()
+    fmean, fcnt = _col_stats(filled)
+    dmean, dcnt = _col_stats(profile.obs)
+    fmean = _fallback_by_depth_model(trie, fmean, fcnt > 0)
+    n = trie.n_nodes
+    par = trie.parent.copy()
+    par[0] = 0
+    parent_est = fmean[par]
+    # model power proxy: depth-1 filled mean of the same model
+    d1 = trie.nodes_at_depth(1)
+    power = np.zeros(trie.n_models)
+    for u in d1:
+        power[trie.model[u]] = fmean[u]
+    power_f = np.where(trie.model >= 0, power[np.maximum(trie.model, 0)], 0.0)
+    # sibling mean
+    sib = np.zeros(n)
+    for u in range(n):
+        kids = trie.child[u][trie.child[u] >= 0]
+        if kids.size:
+            sib[kids] = fmean[kids].mean()
+    # observed-row hardness: mean success of the rows observed in the column
+    obs = profile.obs
+    row_succ = np.where(obs >= 0, obs, 0).sum(axis=1) / np.maximum(
+        (obs >= 0).sum(axis=1), 1
+    )
+    hardness = np.zeros(n)
+    for u in range(n):
+        rows = obs[:, u] >= 0
+        hardness[u] = row_succ[rows].mean() if rows.any() else row_succ.mean()
+    F = np.stack(
+        [
+            trie.depth.astype(np.float64),
+            dcnt.astype(np.float64),
+            fcnt.astype(np.float64),
+            fmean,
+            parent_est,
+            power_f,
+            sib,
+            hardness,
+            np.where(dcnt > 0, dmean, -1.0),
+        ],
+        axis=1,
+    )
+    return F
+
+
+def prefix_gbt(trie: Trie, profile: ProfileResult, *, rounds: int = 200) -> np.ndarray:
+    F = _column_features(trie, profile)
+    filled = profile.observed_filled()
+    fmean, fcnt = _col_stats(filled)
+    n_q = filled.shape[0]
+    calib = profile.calibration_rows
+    if calib is not None and len(calib) >= 8:
+        # calibration rows are exhaustively profiled, so their column means
+        # are unbiased (high-variance) targets across *all* depths
+        sub = filled[calib]
+        tgt_mean, tgt_cnt = _col_stats(sub)
+        train = (tgt_cnt >= max(4, int(0.8 * len(calib)))) & (trie.depth > 0)
+        targets = tgt_mean
+    else:
+        # no calibration: train on near-fully-observed columns, whose filled
+        # means are unbiased irrespective of the MNAR pattern
+        train = (fcnt >= 0.85 * n_q) & (trie.depth > 0)
+        targets = fmean
+    if train.sum() < 6:
+        train = (fcnt >= np.quantile(fcnt[trie.depth > 0], 0.8)) & (trie.depth > 0)
+        targets = fmean
+    model = _GBTStumps(rounds=rounds).fit(F[train], targets[train])
+    mu = model.predict(F)
+    mu[0] = 0.0
+    return _monotone_floor(trie, mu)
+
+
+# ----------------------------------------------------------------------
+# 5-6: cascade decomposition (VineLM-Lite) and + rank-1 smoothing (VineLM)
+# ----------------------------------------------------------------------
+def _conditional_means(trie: Trie, profile: ProfileResult):
+    """Direct column means = unbiased conditional accuracies (eq. (3))."""
+    return _col_stats(profile.obs)
+
+
+def _compose(trie: Trie, q_hat: np.ndarray) -> np.ndarray:
+    """mu(u) = mu(parent) + (1 - mu(parent)) * q_hat(u)   (eq. (7)-(9))."""
+    mu = np.zeros(trie.n_nodes)
+    for u in range(1, trie.n_nodes):
+        p = trie.parent[u]
+        mu[u] = mu[p] + (1.0 - mu[p]) * q_hat[u]
+    return mu
+
+
+def vinelm_lite(trie: Trie, profile: ProfileResult) -> np.ndarray:
+    q_mean, q_cnt = _conditional_means(trie, profile)
+    q_hat = _fallback_by_depth_model(trie, q_mean, q_cnt > 0)
+    q_hat = np.clip(q_hat, 0.0, 1.0)
+    q_hat[0] = 0.0
+    return _compose(trie, q_hat)
+
+
+def vinelm(
+    trie: Trie,
+    profile: ProfileResult,
+    *,
+    smooth_min_obs: int = 30,
+    rank: int = 1,
+) -> np.ndarray:
+    """Cascade decomposition with rank-1 smoothing of sparse depth blocks.
+
+    For each depth d whose median per-column direct-observation count is
+    below ``smooth_min_obs`` (paper: the depth-3 block at 5% coverage has
+    ~20-80 observations per column), assemble the conditional matrix
+    Q_d[prefix, model], initialize unobserved entries with column means, and
+    project onto the rank-1 manifold (§A.4, eq. (10)).  Well-observed blocks
+    keep their raw conditional means to avoid introducing bias.
+    """
+    q_mean, q_cnt = _conditional_means(trie, profile)
+    q_hat = _fallback_by_depth_model(trie, q_mean, q_cnt > 0)
+    q_hat = np.clip(q_hat, 0.0, 1.0)
+    q_hat[0] = 0.0
+
+    max_depth = int(trie.depth.max())
+    for d in range(2, max_depth + 1):
+        nodes_d = trie.nodes_at_depth(d)
+        med = np.median(q_cnt[nodes_d]) if nodes_d.size else np.inf
+        if med >= smooth_min_obs:
+            continue
+        prefixes = trie.nodes_at_depth(d - 1)
+        M = trie.n_models
+        pidx = {int(u): i for i, u in enumerate(prefixes)}
+        Q = np.full((len(prefixes), M), np.nan)
+        W = np.zeros((len(prefixes), M))
+        for v in nodes_d:
+            i = pidx[int(trie.parent[v])]
+            m = int(trie.model[v])
+            if q_cnt[v] > 0:
+                Q[i, m] = q_mean[v]
+                W[i, m] = q_cnt[v]
+        # column-mean initialization for unobserved entries
+        col = np.nanmean(np.where(np.isnan(Q), np.nan, Q), axis=0)
+        col = np.where(np.isnan(col), np.nanmean(col) if not np.all(np.isnan(col)) else 0.5, col)
+        Qf = np.where(np.isnan(Q), col[None, :], Q)
+        # rank-r projection (paper: rank-1)
+        U, s, Vt = np.linalg.svd(Qf, full_matrices=False)
+        Qs = (U[:, :rank] * s[:rank]) @ Vt[:rank]
+        Qs = np.clip(Qs, 0.0, 1.0)
+        for v in nodes_d:
+            i = pidx[int(trie.parent[v])]
+            q_hat[v] = Qs[i, int(trie.model[v])]
+    return _compose(trie, q_hat)
+
+
+# ----------------------------------------------------------------------
+# registry + full annotation (accuracy + reconstructed cost & latency)
+# ----------------------------------------------------------------------
+ESTIMATORS = {
+    "direct_average": direct_average,
+    "prefix_avg": prefix_avg,
+    "prefix_impute": prefix_impute,
+    "prefix_gbt": prefix_gbt,
+    "vinelm_lite": vinelm_lite,
+    "vinelm": vinelm,
+}
+
+
+def estimate_accuracy(name: str, trie: Trie, profile: ProfileResult, **kw) -> np.ndarray:
+    return ESTIMATORS[name](trie, profile, **kw)
+
+
+def _stage_means_filled(trie: Trie, profile: ProfileResult):
+    """(D, M) cost/latency means with model-mean then global fallbacks."""
+    cm, lm = profile.stage_cost_mean(), profile.stage_lat_mean()
+    cnt = profile.stage_count
+    out_c, out_l = cm.copy(), lm.copy()
+    have = cnt > 0
+    for arr_src, arr_out in ((cm, out_c), (lm, out_l)):
+        g = arr_src[have].mean() if have.any() else 0.0
+        for m in range(arr_src.shape[1]):
+            col_have = have[:, m]
+            col_mean = arr_src[col_have, m].mean() if col_have.any() else g
+            arr_out[~col_have, m] = col_mean
+    return out_c, out_l
+
+
+def annotate(
+    trie: Trie, profile: ProfileResult, name: str = "vinelm", **kw
+) -> TrieAnnotations:
+    """Full trie annotation from a sparse profile.
+
+    Accuracy via the chosen estimator; cost reconstructed as
+    C(u) = C(parent) + (1 - mu(parent)) * c(d, m)   (early-stop discounted);
+    latency as T(u) = T(parent) + tau(d, m)         (conditional, undiscounted)
+    — the paper's §3.3 semantics, with (d, m) means from profiler telemetry.
+    """
+    mu = estimate_accuracy(name, trie, profile, **kw)
+    cmean, lmean = _stage_means_filled(trie, profile)
+    n = trie.n_nodes
+    cost = np.zeros(n)
+    lat = np.zeros(n)
+    tpl = trie.template
+    for u in range(1, n):
+        p = int(trie.parent[u])
+        d = int(trie.depth[u]) - 1
+        m = int(trie.model[u])
+        tc, tl = tpl.tool_cost_latency(d)
+        cost[u] = cost[p] + (1.0 - mu[p]) * (cmean[d, m] + tc)
+        lat[u] = lat[p] + lmean[d, m] + tl
+    return TrieAnnotations(acc=mu, cost=cost, lat=lat)

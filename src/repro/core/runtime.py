@@ -1,0 +1,126 @@
+"""Workflow runtime: executes requests under a control policy (paper §4.3).
+
+The runtime owns the typed workflow state (realized prefix node, elapsed
+latency/cost, retry position, transcript) and interleaves execution and
+control: invoke stage -> observe outcome -> advance prefix -> replan.
+
+Stage execution is pluggable: the synthetic executor reads the workload's
+ground-truth stage tables (optionally inflated by a live load model); the
+real executor in `repro.serving` drives actual JAX models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.controller import Objective, OnlineController
+from repro.core.trie import Trie, TrieAnnotations
+
+
+@dataclasses.dataclass
+class ExecutionResult:
+    success: bool
+    total_cost: float
+    total_lat: float
+    models: list[int]
+    n_stages: int
+    replan_overhead_s: float
+    slo_violated: bool
+
+
+# executor(q, depth, model, t_now) -> (success, cost, latency)
+StageExecutor = Callable[[int, int, int, float], tuple[bool, float, float]]
+
+
+def make_workload_executor(workload, slowdown_fn=None) -> StageExecutor:
+    """Executor backed by the synthetic workload tables.  ``slowdown_fn``
+    maps (engine, t_now) -> multiplicative latency slowdown, modelling
+    transient backend load (paper §5.4's utilization-conditioned curve)."""
+
+    def executor(q: int, depth: int, model: int, t_now: float):
+        s, c, lat = workload.execute_stage(q, depth, model)
+        if slowdown_fn is not None:
+            engine = workload.template.models[model].engine
+            lat = lat * float(slowdown_fn(engine, t_now))
+        return s, c, lat
+
+    return executor
+
+
+def run_request(
+    trie: Trie,
+    ann: TrieAnnotations,
+    obj: Objective,
+    q: int,
+    executor: StageExecutor,
+    *,
+    policy: str = "dynamic",
+    restrict_nodes: np.ndarray | None = None,
+    load_probe: Callable[[float], dict[str, float]] | None = None,
+    t_start: float = 0.0,
+) -> ExecutionResult:
+    """Serve one request under the given objective and control policy."""
+    ctl = OnlineController(trie, ann, obj, policy=policy,
+                           restrict_nodes=restrict_nodes)
+    u = 0
+    elapsed_lat = 0.0
+    elapsed_cost = 0.0
+    overhead = 0.0
+    models: list[int] = []
+    success = False
+    while True:
+        delays = load_probe(t_start + elapsed_lat) if load_probe else None
+        step = ctl.plan(u, elapsed_lat, elapsed_cost, engine_delays=delays)
+        overhead += step.replan_time_s
+        if step.next_model < 0:
+            break
+        d = int(trie.depth[u])  # 0-based invocation position of next stage
+        s, c, lat = executor(q, d, step.next_model, t_start + elapsed_lat)
+        elapsed_cost += c
+        elapsed_lat += lat
+        models.append(step.next_model)
+        u = int(trie.child[u, step.next_model])
+        if s:
+            success = True
+            break
+        if int(trie.depth[u]) >= trie.template.max_depth:
+            break
+    slo = obj.lat_cap is not None and elapsed_lat > obj.lat_cap + 1e-9
+    return ExecutionResult(
+        success=success,
+        total_cost=elapsed_cost,
+        total_lat=elapsed_lat,
+        models=models,
+        n_stages=len(models),
+        replan_overhead_s=overhead,
+        slo_violated=bool(slo),
+    )
+
+
+def run_cohort(
+    trie: Trie,
+    ann: TrieAnnotations,
+    obj: Objective,
+    requests: np.ndarray,
+    executor: StageExecutor,
+    **kw,
+) -> list[ExecutionResult]:
+    return [run_request(trie, ann, obj, int(q), executor, **kw) for q in requests]
+
+
+def summarize(results: list[ExecutionResult]) -> dict:
+    n = max(len(results), 1)
+    return {
+        "accuracy": sum(r.success for r in results) / n,
+        # goodput: correct AND within SLO — the metric that matters when
+        # latency caps are hard constraints
+        "goodput": sum(r.success and not r.slo_violated for r in results) / n,
+        "mean_cost": float(np.mean([r.total_cost for r in results])) if results else 0.0,
+        "mean_lat": float(np.mean([r.total_lat for r in results])) if results else 0.0,
+        "p99_lat": float(np.percentile([r.total_lat for r in results], 99)) if results else 0.0,
+        "slo_violation_rate": sum(r.slo_violated for r in results) / n,
+        "mean_replan_overhead_s": float(np.mean([r.replan_overhead_s for r in results])) if results else 0.0,
+        "mean_stages": float(np.mean([r.n_stages for r in results])) if results else 0.0,
+    }

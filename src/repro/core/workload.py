@@ -1,0 +1,183 @@
+"""Calibrated synthetic workload generator.
+
+The paper profiles real LLM endpoints (Bedrock/SGLang).  Offline, we
+reproduce the *statistical structure* its estimators rely on (§3.5, §A):
+
+- per-request latent difficulty ``z_q`` and per-model power scores, combined
+  multiplicatively so the depth-d conditional-accuracy matrix
+  ``Q[prefix, m] = q(m | prefix fails)`` is approximately **rank-1** (§A.4),
+  plus a controlled non-rank-1 perturbation so smoothing helps but is not
+  trivially exact;
+- success indicators ``S[q, d, m]`` drawn once per (request, invocation
+  position, model): path success is *prefix-closed by construction* —
+  A(q, p) = 1 iff any stage on p succeeds — which is exactly the paper's
+  path semantics (§4.2 "subtree fill-in");
+- log-normal output-token counts driving per-stage dollar cost
+  (price/1k-tok) and latency (base + per-token), the paper's §4.4 telemetry
+  model;
+- monotone annotations: cost discounted by early termination, latency
+  conditional and undiscounted (§3.3).
+
+Everything is deterministic given ``seed``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.trie import Trie, TrieAnnotations
+from repro.core.workflow import WorkflowTemplate
+
+
+@dataclasses.dataclass
+class Workload:
+    """Ground-truth stage-level tables for one workflow template.
+
+    S      (n_q, D, M) uint8   success of model m at invocation position d
+    cost   (n_q, D, M) float   realized $ cost of that stage invocation
+    lat    (n_q, D, M) float   realized seconds of that stage invocation
+    """
+
+    template: WorkflowTemplate
+    S: np.ndarray
+    cost: np.ndarray
+    lat: np.ndarray
+    difficulty: np.ndarray  # (n_q,) latent difficulty (diagnostics only)
+
+    @property
+    def n_requests(self) -> int:
+        return int(self.S.shape[0])
+
+    # ------------------------------------------------------------------
+    # stage-level execution API (what the profiler/runtime is allowed to see)
+    # ------------------------------------------------------------------
+    def execute_stage(self, q: int, depth: int, model: int):
+        """Invoke model ``model`` at invocation position ``depth`` (0-based)
+        for request ``q``.  Returns (success, cost, latency) including the
+        fixed tool stages that follow the invocation."""
+        tc, tl = self.template.tool_cost_latency(depth)
+        return (
+            bool(self.S[q, depth, model]),
+            float(self.cost[q, depth, model] + tc),
+            float(self.lat[q, depth, model] + tl),
+        )
+
+    # ------------------------------------------------------------------
+    # exact ground-truth tables over trie nodes (the oracle view)
+    # ------------------------------------------------------------------
+    def node_tables(self, trie: Trie):
+        """Return (A, C, reached) tables of shape (n_q, n_nodes).
+
+        A[q, u]      1 iff plan u succeeds on q (prefix-closed).
+        C[q, u]      realized cost of plan u on q (early-termination aware).
+        reached[q,u] 1 iff the *last* stage of u is reached (all ancestors'
+                     stages failed); R_k(q, p) in the paper.
+        """
+        n_q, n = self.n_requests, trie.n_nodes
+        A = np.zeros((n_q, n), dtype=np.uint8)
+        C = np.zeros((n_q, n), dtype=np.float64)
+        reached = np.zeros((n_q, n), dtype=np.uint8)
+        failall = np.ones((n_q, n), dtype=np.float64)  # prod of stage failures
+        for u in range(1, n):
+            p = int(trie.parent[u])
+            d = int(trie.depth[u]) - 1
+            m = int(trie.model[u])
+            tc, _ = self.template.tool_cost_latency(d)
+            s = self.S[:, d, m].astype(np.float64)
+            reached[:, u] = failall[:, p] > 0.5
+            failall[:, u] = failall[:, p] * (1.0 - s)
+            C[:, u] = C[:, p] + failall[:, p] * (self.cost[:, d, m] + tc)
+            A[:, u] = (1.0 - failall[:, u]) > 0.5
+        return A, C, reached
+
+    def exact_annotations(self, trie: Trie) -> TrieAnnotations:
+        """Exact Ā, C̄, T̄ per node (paper §3.3 definitions)."""
+        A, C, reached = self.node_tables(trie)
+        acc = A.mean(axis=0)
+        cost = C.mean(axis=0)
+        lat = np.zeros(trie.n_nodes, dtype=np.float64)
+        for u in range(1, trie.n_nodes):
+            p = int(trie.parent[u])
+            d = int(trie.depth[u]) - 1
+            m = int(trie.model[u])
+            _, tl = self.template.tool_cost_latency(d)
+            r = reached[:, u].astype(bool)
+            # conditional per-stage latency: E[tau | stage reached]
+            stage_lat = self.lat[r, d, m].mean() if r.any() else self.lat[:, d, m].mean()
+            lat[u] = lat[p] + stage_lat + tl
+        return TrieAnnotations(acc=acc, cost=cost, lat=lat)
+
+    def conditional_matrix(self, trie: Trie, depth: int):
+        """Exact conditional-accuracy block at ``depth``: rows = depth-1
+        prefixes, cols = models; Q[p, m] = Pr[m succeeds | prefix p fails].
+        (§A.4's Q matrix; used to verify approximate rank-1 structure.)"""
+        prefixes = trie.nodes_at_depth(depth - 1)
+        M = trie.n_models
+        _, _, reached = self.node_tables(trie)
+        Q = np.full((len(prefixes), M), np.nan)
+        for i, u in enumerate(prefixes):
+            for m in range(M):
+                v = int(trie.child[u, m])
+                if v < 0:
+                    continue
+                r = reached[:, v].astype(bool)
+                if r.any():
+                    Q[i, m] = self.S[r, depth - 1, m].mean()
+        return prefixes, Q
+
+
+# ----------------------------------------------------------------------
+# generator
+# ----------------------------------------------------------------------
+def generate_workload(
+    template: WorkflowTemplate,
+    n_requests: int,
+    seed: int = 0,
+    *,
+    interaction: float = 0.06,
+    depth_decay: float = 0.92,
+) -> Workload:
+    """Draw a ground-truth workload for ``template``.
+
+    success prob:  pi(q, d, m) = clip(power_m * decay^d * (1 - z_q) + eps_qm)
+    where eps_qm is a small request-model interaction (breaks exact rank-1).
+    cost/latency:  lognormal output tokens -> price & token-latency models.
+    """
+    rng = np.random.default_rng(seed)
+    D, M = template.max_depth, template.n_models
+    z = rng.beta(1.8, 2.6, size=n_requests)  # difficulty in (0,1)
+    power = np.array([m.power for m in template.models])
+    price = np.array([m.price for m in template.models])
+    base_lat = np.array([m.base_latency for m in template.models])
+    tok_lat = np.array([m.per_token_latency for m in template.models])
+
+    # request-model interaction, zero-mean, breaks exact rank-1 structure
+    eps = interaction * rng.standard_normal((n_requests, M))
+    decay = depth_decay ** np.arange(D)
+    # pi: (n_q, D, M)
+    pi = (
+        power[None, None, :]
+        * decay[None, :, None]
+        * (1.0 - z[:, None, None])
+        + eps[:, None, :]
+    )
+    pi = np.clip(pi, 0.005, 0.97)
+    S = (rng.random((n_requests, D, M)) < pi).astype(np.uint8)
+
+    # output tokens: lognormal, mildly model- and difficulty-dependent
+    mu_tok = np.log(260.0) + 0.35 * z[:, None, None] + 0.1 * (1 - power)[None, None, :]
+    tokens = rng.lognormal(mean=mu_tok, sigma=0.45, size=(n_requests, D, M))
+    cost = price[None, None, :] * tokens / 1000.0
+    lat = (
+        base_lat[None, None, :]
+        + tok_lat[None, None, :] * tokens
+        + rng.gamma(2.0, 0.05, size=(n_requests, D, M))
+    )
+    return Workload(
+        template=template,
+        S=S,
+        cost=cost,
+        lat=lat.astype(np.float64),
+        difficulty=z,
+    )

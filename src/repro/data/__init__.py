@@ -1,0 +1,4 @@
+"""Data pipeline: deterministic, checkpointable synthetic LM sources."""
+from repro.data.pipeline import DataConfig, MarkovLMData
+
+__all__ = ["DataConfig", "MarkovLMData"]

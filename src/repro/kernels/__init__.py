@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the serving/training hot spots.
+
+Each kernel ships three layers:
+- ``<name>.py``  — pl.pallas_call + explicit BlockSpec VMEM tiling
+  (flash_attention, decode_attention, ssd_scan, rmsnorm);
+- ``ops.py``     — jit'd dispatch wrappers (use_pallas flag, custom_vjp
+  recompute backwards, XLA fallbacks);
+- ``ref.py``     — pure-jnp oracles used by the tests' allclose sweeps.
+
+``xla_flash.py`` / ``xla_ssd.py`` are the XLA mirrors: same math expressed
+with lax.scan / associative_scan so the CPU dry-run lowers the kernel's
+memory shape (O(S) attention residuals, chunk-parallel SSD) without a TPU.
+"""

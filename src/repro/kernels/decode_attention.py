@@ -1,0 +1,121 @@
+"""Single-token decode attention (flash-decode style) as a Pallas kernel.
+
+Decode is memory-bound: the KV cache (B, KV, S, D) streams through VMEM
+once while a single query token per sequence attends to it.  The kernel
+walks K-blocks sequentially with an online-softmax carry; the valid cache
+length (and optional sliding window) is masked per block, so one compiled
+kernel serves any fill level.
+
+The grid is (B, KV, nK): each program handles all G = H/KV query heads of
+one kv head at once — the (G, D) query tile multiplies (D, block_k) key
+tiles on the MXU, which both amortizes the KV stream across the group and
+keeps the matmul shapes hardware-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128
+
+
+def _decode_kernel(
+    len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale, window, block_k, n_kblocks,
+):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)       # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)       # (bk, D)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                  # (G, bk)
+    L = len_ref[0]                             # () valid cache length
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos < L
+    if window > 0:
+        mask &= kpos >= L - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[:, :1]
+    l_prev = l_scr[:, :1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ki == n_kblocks - 1)
+    def _done():
+        l = l_scr[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_k", "interpret")
+)
+def decode_attention(
+    q: jnp.ndarray,        # (B, H, D)
+    k_cache: jnp.ndarray,  # (B, KV, S, D)
+    v_cache: jnp.ndarray,  # (B, KV, S, D)
+    cache_len: jnp.ndarray,  # (B,) int32
+    *,
+    window: int = 0,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    KV, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    n_k = S // block_k
+    scale = D ** -0.5
+    qg = q.reshape(B, KV, G, D)
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (B,))
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, window=window,
+        block_k=block_k, n_kblocks=n_k,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, n_k),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ki: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, _LANES), jnp.float32),
+            pltpu.VMEM((G, _LANES), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lens, qg, k_cache.reshape(B, KV, S, D), v_cache.reshape(B, KV, S, D))
+    return out.reshape(B, H, D)

@@ -1,0 +1,109 @@
+"""Mamba2 SSD (state-space duality) chunked scan as a Pallas TPU kernel.
+
+TPU adaptation of the Mamba2 chunked algorithm: the sequential recurrence
+    h_t = exp(A dt_t) h_{t-1} + dt_t x_t (x) B_t ,   y_t = C_t . h_t
+is reorganized into per-chunk *matmuls* (MXU-friendly) plus a tiny
+inter-chunk state carry held in VMEM scratch:
+
+  intra-chunk   M[t,s] = exp(L_t - L_s) dt_s (C_t . B_s)  (s <= t),
+                y_intra = M @ x                        (Q x Q, Q x P matmuls)
+  state read    y_state[t] = exp(L_t) * (C_t . h_in)
+  state update  h_out = exp(L_Q) h_in + sum_s exp(L_Q - L_s) dt_s x_s (x) B_s
+
+where L_t = cumsum(A dt) is the per-chunk log-decay.  A < 0 guarantees
+exp(L_t - L_s) <= 1 for s <= t, so the log-space form is numerically safe.
+
+Grid: (B, Hn, S/Q); the chunk axis is sequential ("arbitrary"), carrying
+the (P, N) state in f32 scratch.  B/C projections are shared across heads
+(their index maps ignore the head axis), matching Mamba2's ngroups=1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, h_scr,
+    *, chunk, n_chunks,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)    # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)     # (Q,)
+    a = a_ref[0]                                  # () this head's A (< 0)
+    bm = b_ref[0].astype(jnp.float32)             # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)             # (Q, N)
+
+    logdec = jnp.cumsum(a * dt)                   # (Q,)  L_t
+    # intra-chunk quadratic term
+    cb = jax.lax.dot_general(                     # (Q, Q) = C @ B^T
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    ratio = jnp.exp(logdec[:, None] - logdec[None, :])   # (Q, Q) L_t - L_s
+    tpos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    spos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    M = jnp.where(spos <= tpos, ratio * cb * dt[None, :], 0.0)
+    y = jax.lax.dot_general(                      # (Q, P)
+        M, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    # contribution of the carried state: exp(L_t) * C_t @ h_in^T
+    h = h_scr[...]                                # (P, N)
+    y += jnp.exp(logdec)[:, None] * jax.lax.dot_general(
+        cm, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[0, :, 0, :] = y.astype(o_ref.dtype)
+    # state update: h_out = exp(L_Q) h_in + sum_s exp(L_Q - L_s) dt_s x_s B_s
+    wts = jnp.exp(logdec[-1] - logdec) * dt       # (Q,)
+    upd = jax.lax.dot_general(                    # (P, N) = x^T @ (wts*B)
+        x, bm * wts[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    h_scr[...] = jnp.exp(logdec[-1]) * h + upd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jnp.ndarray,   # (B, S, Hn, P)
+    dt: jnp.ndarray,  # (B, S, Hn)
+    A: jnp.ndarray,   # (Hn,)
+    Bm: jnp.ndarray,  # (B, S, N)
+    Cm: jnp.ndarray,  # (B, S, N)
+    *,
+    chunk: int = 64,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, S, Hn, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=n_chunks)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hn, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, ci: (b, ci, h)),
+            pl.BlockSpec((1,), lambda b, h, ci: (h,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, chunk, N), lambda b, h, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, ci: (b, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, P), lambda b, h, ci: (b, ci, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, Hn, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), Bm, Cm)
+    return out

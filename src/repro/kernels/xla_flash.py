@@ -1,0 +1,217 @@
+"""Memory-lean flash attention in pure XLA (lax.scan over blocks).
+
+This is the XLA mirror of the Pallas kernel: identical math (online
+softmax over K-blocks, O(S) residuals via custom_vjp recompute-backward),
+expressed with lax.scan so the CPU dry-run lowers the same memory shape a
+TPU kernel would have — the naive reference would otherwise materialize
+the (B, H, Sq, Sk) logits (hundreds of GiB/device at 32k).
+
+Forward residuals: (O, LSE) only.  Backward: standard flash backward —
+D = rowsum(dO * O); per (q-block, k-block): recompute P, accumulate
+dV += P^T dO, dS = P * (dO V^T - D), dQ += dS K, dK += dS^T Q.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(sq, sk, q0, k0, causal, window, dtype=jnp.float32):
+    if not causal:
+        return None
+    qpos = q0 + jnp.arange(sq)[:, None]
+    kpos = k0 + jnp.arange(sk)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m
+
+
+def _fwd_qblock(qb, k, v, q0, *, causal, window, scale, block_k):
+    """qb: (B,KV,G,bq,D); k/v: (B,KV,Sk,D) -> (ob, lse_b)."""
+    B, KV, G, bq, D = qb.shape
+    Sk = k.shape[2]
+    nk = Sk // block_k
+    kb = k.reshape(B, KV, nk, block_k, D)
+    vb = v.reshape(B, KV, nk, block_k, D)
+
+    def inner(carry, ik):
+        m_run, l_run, acc = carry
+        kk = jnp.moveaxis(kb[:, :, ik], 2, 2)            # (B,KV,bk,D)
+        vv = vb[:, :, ik]
+        s = jnp.einsum("bkgqd,bktd->bkgqt", qb.astype(jnp.float32),
+                       kk.astype(jnp.float32)) * scale
+        msk = _mask(bq, block_k, q0, ik * block_k, causal, window)
+        if msk is not None:
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_cur = s.max(-1)
+        m_new = jnp.maximum(m_run, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_run - m_new)
+        l_new = l_run * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqt,bktd->bkgqd", p, vv.astype(jnp.float32))
+        return (m_new, l_new, acc), ()
+
+    init = (jnp.full((B, KV, G, bq), NEG_INF),
+            jnp.zeros((B, KV, G, bq)),
+            jnp.zeros((B, KV, G, bq, D)))
+    (m, l, acc), _ = jax.lax.scan(inner, init, jnp.arange(nk))
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    return acc / l_safe[..., None], m + jnp.log(l_safe)
+
+
+def _flash_fwd_impl(q, k, v, causal, window, scale, block_q, block_k):
+    B, H, Sq, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    nq = Sq // block_q
+    qb = q.reshape(B, KV, G, nq, block_q, D)
+
+    def outer(_, iq):
+        ob, lse = _fwd_qblock(
+            qb[:, :, :, iq], k, v, iq * block_q,
+            causal=causal, window=window, scale=scale, block_k=block_k)
+        return (), (ob, lse)
+
+    _, (O, LSE) = jax.lax.scan(outer, (), jnp.arange(nq))
+    # O: (nq, B,KV,G,bq,D) -> (B,H,Sq,D)
+    O = jnp.moveaxis(O, 0, 3).reshape(B, KV, G, Sq, D)
+    LSE = jnp.moveaxis(LSE, 0, 3).reshape(B, KV, G, Sq)
+    return O.reshape(B, H, Sq, D).astype(q.dtype), LSE
+
+
+def _flash_bwd_impl(q, k, v, O, LSE, dO, causal, window, scale,
+                    block_q, block_k):
+    B, H, Sq, Dh = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    nq, nk = Sq // block_q, Sk // block_k
+    qb = q.reshape(B, KV, G, nq, block_q, Dh)
+    dOb = dO.reshape(B, KV, G, nq, block_q, Dh)
+    Ob = O.reshape(B, KV, G, nq, block_q, Dh)
+    Lb = LSE.reshape(B, KV, G, nq, block_q)
+    Db = jnp.sum(dOb.astype(jnp.float32) * Ob.astype(jnp.float32), -1)
+    kb = k.reshape(B, KV, nk, block_k, Dh)
+    vb = v.reshape(B, KV, nk, block_k, Dh)
+
+    def outer(carry, iq):
+        dK, dV = carry
+        qq = qb[:, :, :, iq].astype(jnp.float32)
+        do = dOb[:, :, :, iq].astype(jnp.float32)
+        ll = Lb[:, :, :, iq]
+        dd = Db[:, :, :, iq]
+
+        def inner(inner_carry, ik):
+            dK, dV, dq_acc = inner_carry
+            kk = kb[:, :, ik].astype(jnp.float32)
+            vv = vb[:, :, ik].astype(jnp.float32)
+            s = jnp.einsum("bkgqd,bktd->bkgqt", qq, kk) * scale
+            msk = _mask(block_q, block_k, iq * block_q, ik * block_k,
+                        causal, window)
+            if msk is not None:
+                s = jnp.where(msk[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - ll[..., None])
+            dv_blk = jnp.einsum("bkgqt,bkgqd->bktd", p, do)
+            dp = jnp.einsum("bkgqd,bktd->bkgqt", do, vv)
+            ds = p * (dp - dd[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum("bkgqt,bktd->bkgqd", ds, kk)
+            dk_blk = jnp.einsum("bkgqt,bkgqd->bktd", ds, qq)
+            dK = jax.lax.dynamic_update_slice_in_dim(
+                dK, jax.lax.dynamic_slice_in_dim(dK, ik * block_k,
+                                                 block_k, 2) + dk_blk,
+                ik * block_k, 2)
+            dV = jax.lax.dynamic_update_slice_in_dim(
+                dV, jax.lax.dynamic_slice_in_dim(dV, ik * block_k,
+                                                 block_k, 2) + dv_blk,
+                ik * block_k, 2)
+            return (dK, dV, dq_acc), ()
+
+        dq0 = jnp.zeros((B, KV, G, block_q, Dh))
+        (dK, dV, dqb), _ = jax.lax.scan(inner, (dK, dV, dq0),
+                                        jnp.arange(nk))
+        return (dK, dV), dqb
+
+    dK0 = jnp.zeros((B, KV, Sk, Dh))
+    dV0 = jnp.zeros((B, KV, Sk, Dh))
+    (dK, dV), dQ = jax.lax.scan(outer, (dK0, dV0), jnp.arange(nq))
+    dQ = jnp.moveaxis(dQ, 0, 3).reshape(B, KV, G, Sq, Dh)
+    return (dQ.reshape(B, H, Sq, Dh).astype(q.dtype),
+            dK.astype(k.dtype), dV.astype(v.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_xla(q, k, v, causal=True, window=0,
+                        block_q=512, block_k=512):
+    """(B,H,Sq,D) x (B,KV,Sk,D)^2 -> (B,H,Sq,D); O(S) memory."""
+    bq = min(block_q, q.shape[2])
+    bk = min(block_k, k.shape[2])
+    scale = q.shape[-1] ** -0.5
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, scale, bq, bk)
+    return out
+
+
+def _vjp_fwd(q, k, v, causal, window, block_q, block_k):
+    bq = min(block_q, q.shape[2])
+    bk = min(block_k, k.shape[2])
+    scale = q.shape[-1] ** -0.5
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, scale, bq, bk)
+    return out, (q, k, v, out, lse)
+
+
+def _vjp_bwd(causal, window, block_q, block_k, res, dO):
+    q, k, v, out, lse = res
+    bq = min(block_q, q.shape[2])
+    bk = min(block_k, k.shape[2])
+    scale = q.shape[-1] ** -0.5
+    return _flash_bwd_impl(q, k, v, out, lse, dO, causal, window, scale,
+                           bq, bk)
+
+
+flash_attention_xla.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def decode_attention_xla(q, k_cache, v_cache, cache_len, *, window=0,
+                         block_k=2048):
+    """Blocked single-token decode: online softmax over K-blocks — the XLA
+    mirror of the flash-decode Pallas kernel.  Never materializes the
+    (B, H, S) score tensor (the naive reference's dominant decode cost)."""
+    B, H, D = q.shape
+    KV, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    bk = min(block_k, S)
+    assert S % bk == 0
+    nk = S // bk
+    scale = D ** -0.5
+    qg = q.reshape(B, KV, G, D).astype(jnp.float32)
+    lens = jnp.broadcast_to(jnp.asarray(cache_len), (B,))
+    kb = k_cache.reshape(B, KV, nk, bk, D)
+    vb = v_cache.reshape(B, KV, nk, bk, D)
+
+    def body(carry, ik):
+        m_run, l_run, acc = carry
+        kk = kb[:, :, ik].astype(jnp.float32)           # (B,KV,bk,D)
+        vv = vb[:, :, ik].astype(jnp.float32)
+        s = jnp.einsum("bkgd,bktd->bkgt", qg, kk) * scale
+        pos = ik * bk + jnp.arange(bk)[None, :]
+        msk = pos < lens[:, None]
+        if window > 0:
+            msk &= pos >= (lens[:, None] - window)
+        s = jnp.where(msk[:, None, None, :], s, NEG_INF)
+        m_cur = s.max(-1)
+        m_new = jnp.maximum(m_run, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_run - m_new)
+        l_new = l_run * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bkgt,bktd->bkgd", p, vv)
+        return (m_new, l_new, acc), ()
+
+    init = (jnp.full((B, KV, G), NEG_INF), jnp.zeros((B, KV, G)),
+            jnp.zeros((B, KV, G, D)))
+    (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(nk))
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l[..., None]).reshape(B, H, D).astype(q.dtype)

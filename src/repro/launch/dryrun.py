@@ -1,0 +1,391 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and record memory/cost/collective analysis.
+
+For each cell:
+- train_4k     lowers ``train_step`` (fwd+bwd+optimizer update),
+- prefill_32k  lowers ``prefill``,
+- decode_32k / long_500k lower ``decode_step`` against a seq_len KV cache;
+on the single-pod (16,16) mesh and the 2-pod (2,16,16) mesh.  All inputs
+are ShapeDtypeStructs — nothing is allocated.  Results (memory analysis,
+FLOPs/bytes, per-collective byte counts) are written to
+``reports/dryrun/<arch>__<shape>__<mesh>.json`` — the §Roofline analysis
+reads these.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--mesh single|multi|both] [--force]
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_cells_for
+from repro.dist.sharding import batch_specs, cache_specs, sharding_tree, spec_tree
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.train import OptConfig, TrainConfig, make_train_step
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "../../../reports/dryrun")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in (post-SPMD) HLO."""
+    out = {c: {"count": 0, "bytes": 0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for c in _COLLECTIVES:
+            # match op invocations like: ... = bf16[...] all-gather(...)
+            if f" {c}(" in stripped or f" {c}-start(" in stripped:
+                lhs, _, rhs = stripped.partition(f" {c}")
+                # operand types appear inside the call parens
+                call = rhs[rhs.find("(") + 1: rhs.rfind(")")]
+                ops = _SHAPE_RE.findall(call)
+                if not ops:  # fall back to result type
+                    ops = _SHAPE_RE.findall(lhs)[:1]
+                b = sum(_shape_bytes(d, s) for d, s in ops
+                        if d in _DTYPE_BYTES)
+                out[c]["count"] += 1
+                out[c]["bytes"] += b
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+# ----------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ----------------------------------------------------------------------
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def input_specs(cfg, cell) -> dict:
+    """Model-input ShapeDtypeStructs for one shape cell."""
+    B, S = cell.global_batch, cell.seq_len
+    batch: dict = {}
+    if cell.kind == "train":
+        text = S
+        if cfg.vlm is not None:
+            text = S - cfg.vlm.n_patches
+            batch["patch_embeds"] = sds((B, cfg.vlm.n_patches,
+                                         cfg.vlm.patch_dim), jnp.bfloat16)
+        if cfg.encdec is not None:
+            batch["frames"] = sds((B, cfg.encdec.encoder_len, cfg.d_model),
+                                  jnp.bfloat16)
+        batch["tokens"] = sds((B, text), jnp.int32)
+        batch["labels"] = sds((B, text), jnp.int32)
+    elif cell.kind == "prefill":
+        text = S
+        if cfg.vlm is not None:
+            text = S - cfg.vlm.n_patches
+            batch["patch_embeds"] = sds((B, cfg.vlm.n_patches,
+                                         cfg.vlm.patch_dim), jnp.bfloat16)
+        if cfg.encdec is not None:
+            batch["frames"] = sds((B, cfg.encdec.encoder_len, cfg.d_model),
+                                  jnp.bfloat16)
+        batch["tokens"] = sds((B, text), jnp.int32)
+    else:  # decode
+        batch["tokens"] = sds((B,), jnp.int32)
+    return batch
+
+
+def _train_opt_for(arch: str) -> OptConfig:
+    # 480B-scale: factored second moments keep optimizer state in HBM reach
+    if arch in ("arctic-480b",):
+        return OptConfig(kind="adafactor")
+    return OptConfig(kind="adamw")
+
+
+OPT_LOGIT_CHUNK = 8192  # streaming xent for >=32k vocabularies (opt mode)
+
+
+def opt_overrides_for(arch: str, shape_name: str) -> dict:
+    """Beyond-baseline perf configuration (§Perf): recorded separately."""
+    cfg = get_config(arch)
+    out = {}
+    # NOTE: vocab_pad_to=256 was tried and REFUTED for odd vocabs — the
+    # vocab-sharded embedding gather blew temp memory back up to 59 GiB
+    # without reducing collectives (EXPERIMENTS.md §Perf, iteration 4)
+    if SHAPES[shape_name].kind == "train" and cfg.vocab >= 32000:
+        out["logit_chunk_vocab"] = OPT_LOGIT_CHUNK
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, opt_override=None,
+               cfg_overrides: dict | None = None):
+    """Build fn + ShapeDtypeStruct args + shardings for one dry-run cell."""
+    cfg = get_config(arch, **(cfg_overrides or {}))
+    cell = SHAPES[shape_name]
+    model = build_model(cfg)
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_specs = spec_tree(params_sds, mesh)
+    batch_sds = input_specs(cfg, cell)
+    b_specs = batch_specs(batch_sds, mesh)
+
+    if cell.kind == "train":
+        tcfg = TrainConfig(opt=opt_override or _train_opt_for(arch))
+        init_state, train_step = make_train_step(model, tcfg)
+        state_sds = jax.eval_shape(init_state, params_sds)
+        s_specs = spec_tree_state(state_sds, p_specs)
+        fn = train_step
+        args = (params_sds, state_sds, batch_sds)
+        in_shardings = (p_specs, s_specs, b_specs)
+    elif cell.kind == "prefill":
+        fn = model.prefill
+        args = (params_sds, batch_sds)
+        in_shardings = (p_specs, b_specs)
+    else:
+        if cfg.encdec is not None:
+            cache_sds = jax.eval_shape(
+                lambda: model.init_cache(cell.global_batch, cell.seq_len,
+                                         cfg.encdec.encoder_len))
+        else:
+            cache_sds = jax.eval_shape(
+                lambda: model.init_cache(cell.global_batch, cell.seq_len))
+        c_specs = cache_specs(cache_sds, mesh)
+        fn = model.decode_step
+        args = (params_sds, cache_sds, batch_sds["tokens"])
+        in_shardings = (p_specs, c_specs,
+                        batch_specs({"t": batch_sds["tokens"]}, mesh)["t"])
+    return fn, args, in_shardings
+
+
+def spec_tree_state(state_sds, p_specs):
+    """Optimizer-state specs: moments inherit their parameter's spec;
+    scalars/step counters replicate."""
+    from jax.sharding import PartitionSpec as P
+
+    def match(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        # m/v (adam) and ef_err mirror params: look up by stripped path
+        sub = p_specs
+        try:
+            for n in names[2:]:  # skip ("opt", "m"/"v") prefix
+                sub = sub[n] if isinstance(sub, dict) else sub
+            if hasattr(sub, "index") and len(sub) == nd:  # PartitionSpec
+                return sub
+        except (KeyError, TypeError):
+            pass
+        # adafactor vr/vc, quantized q/s blocks: shard largest dim over data
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(match, state_sds)
+
+
+def _compile_cell(arch, shape_name, mesh, cfg_overrides=None, opt=False):
+    import contextlib
+
+    from repro.dist.act_sharding import use_mesh_axes
+    from repro.launch.mesh import data_axes
+
+    overrides = dict(cfg_overrides or {})
+    ctx = contextlib.nullcontext()
+    jit_kw = {}
+    if opt:
+        overrides = {**opt_overrides_for(arch, shape_name), **overrides}
+        dp = data_axes(mesh)
+        ctx = use_mesh_axes(dp if len(dp) > 1 else dp[0], "model")
+        if SHAPES[shape_name].kind == "decode":
+            jit_kw["donate_argnums"] = (1,)  # in-place cache update
+    fn, args, in_shardings = lower_cell(arch, shape_name, mesh,
+                                        cfg_overrides=overrides)
+    with mesh, ctx:
+        from jax.sharding import NamedSharding, PartitionSpec
+        shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), in_shardings,
+            is_leaf=lambda x: isinstance(x, PartitionSpec))
+        jitted = jax.jit(fn, in_shardings=shardings, **jit_kw)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _cost_vector(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    vec = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+        "collective_bytes": float(coll["total_bytes"]),
+    }
+    for c in _COLLECTIVES:
+        vec[f"coll_{c}"] = float(coll[c]["bytes"])
+    return vec
+
+
+def _probe_layer_plans(arch: str):
+    """(override-dicts for the small/large probes, full multipliers).
+
+    cost(L) = a + b*L is exact when layers contribute uniformly; probes at
+    two layer counts recover (a, b) and we extrapolate to the full config.
+    Whisper varies encoder and decoder depth separately (three probes)."""
+    cfg = get_config(arch)
+    U = {"scan_layers": False}  # probes unroll: cost_analysis is trip-blind
+    if cfg.encdec is not None:
+        import dataclasses as dc
+        e = cfg.encdec
+        return "encdec", [
+            ({"n_layers": 1, "encdec": dc.replace(e, n_encoder_layers=1), **U},
+             (1, 1)),
+            ({"n_layers": 2, "encdec": dc.replace(e, n_encoder_layers=1), **U},
+             (2, 1)),
+            ({"n_layers": 1, "encdec": dc.replace(e, n_encoder_layers=2), **U},
+             (1, 2)),
+        ], (cfg.n_layers, e.n_encoder_layers)
+    if cfg.family == "hybrid":
+        k = cfg.hybrid.attn_every
+        return "linear", [({"n_layers": k, **U}, k),
+                          ({"n_layers": 2 * k, **U}, 2 * k)], cfg.n_layers
+    return "linear", [({"n_layers": 1, **U}, 1),
+                      ({"n_layers": 2, **U}, 2)], cfg.n_layers
+
+
+def probe_costs(arch: str, shape_name: str, mesh, opt=False) -> dict:
+    """Extrapolated whole-model cost vector (corrects scan-body
+    undercounting in XLA cost_analysis)."""
+    kind, plans, full = _probe_layer_plans(arch)
+    vecs = []
+    for overrides, _ in plans:
+        _, compiled = _compile_cell(arch, shape_name, mesh,
+                                    cfg_overrides=overrides, opt=opt)
+        vecs.append(_cost_vector(compiled))
+    keys = vecs[0].keys()
+    out = {}
+    if kind == "linear":
+        l1, l2 = plans[0][1], plans[1][1]
+        for k in keys:
+            b = (vecs[1][k] - vecs[0][k]) / (l2 - l1)
+            a = vecs[0][k] - b * l1
+            out[k] = a + b * full
+    else:  # encdec: f(d, e) = a + d*md + e*me
+        (d0, e0), (d1, _), (_, e1) = plans[0][1], plans[1][1], plans[2][1]
+        dL, eL = full
+        for k in keys:
+            md = (vecs[1][k] - vecs[0][k]) / (d1 - d0)
+            me = (vecs[2][k] - vecs[0][k]) / (e1 - e0)
+            a = vecs[0][k] - d0 * md - e0 * me
+            out[k] = a + dL * md + eL * me
+    return {k: max(0.0, v) for k, v in out.items()}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, force=False,
+             opt=False) -> dict:
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    suffix = "_opt" if opt else ""
+    out_path = os.path.join(
+        REPORT_DIR, f"{arch}__{shape_name}__{mesh_kind}{suffix}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    record = {"arch": arch, "shape": shape_name,
+              "mesh": mesh_kind + suffix, "opt": opt,
+              "mesh_shape": dict(zip(mesh.axis_names,
+                                     [int(mesh.shape[a])
+                                      for a in mesh.axis_names]))}
+    t0 = time.time()
+    try:
+        lowered, compiled = _compile_cell(arch, shape_name, mesh, opt=opt)
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        # probe-extrapolated costs feed the single-pod roofline table; the
+        # multi-pod pass proves sharding + memory (raw costs recorded)
+        probes = (probe_costs(arch, shape_name, mesh, opt=opt)
+                  if mesh_kind == "single" else {})
+        record.update({
+            "ok": True,
+            "compile_s": round(t_compile, 1),
+            "probe_s": round(time.time() - t0 - t_compile, 1),
+            "memory": {
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+            },
+            # raw per-device numbers from the full compile (scan bodies
+            # counted once); `cost_extrapolated` corrects via layer probes
+            "cost_raw": {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+                "transcendentals": float(cost.get("transcendentals", 0.0)),
+            },
+            "cost_extrapolated": probes,
+            "collectives": collective_bytes(hlo),
+            "hlo_lines": hlo.count("\n"),
+        })
+    except Exception as e:  # a failing cell is a bug; record it loudly
+        record.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]})
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="perf-optimized configuration (recorded as *_opt)")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for arch in archs:
+        cells = shape_cells_for(arch)
+        if args.shape:
+            cells = [c for c in cells if c == args.shape]
+        for cell in cells:
+            for mk in meshes:
+                rec = run_cell(arch, cell, mk, force=args.force,
+                               opt=args.opt)
+                status = "OK " if rec.get("ok") else "FAIL"
+                mem = rec.get("memory", {})
+                per_dev = (mem.get("argument_bytes", 0)
+                           + mem.get("temp_bytes", 0)) / 2**30
+                ext = rec.get("cost_extrapolated", {})
+                print(f"[{status}] {arch:22s} {cell:12s} {mk:6s} "
+                      f"compile={rec.get('compile_s', '-'):>7}s "
+                      f"mem/dev={per_dev:7.2f}GiB "
+                      f"flops={ext.get('flops', 0):.3e} "
+                      f"coll={ext.get('collective_bytes', 0):.3e}B"
+                      + ("" if rec.get("ok") else f"  err={rec.get('error')}"))
+
+
+if __name__ == "__main__":
+    main()

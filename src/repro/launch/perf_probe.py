@@ -1,0 +1,124 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Perf probe: compile one dry-run cell and report where the dominant
+roofline term comes from — largest HLO buffers, largest collectives (with
+shapes), and cost totals.  The §Perf iteration loop reads this instead of a
+wall-clock profile (CPU container; TPU is the target).
+
+    PYTHONPATH=src python -m repro.launch.perf_probe --arch X --shape Y
+        [--layers N] [--unroll] [--donate-cache] [--override k=v ...]
+"""
+import argparse
+import re
+from collections import defaultdict
+
+import jax
+
+from repro.launch.dryrun import (_SHAPE_RE, _compile_cell, _cost_vector,
+                                 _DTYPE_BYTES, _shape_bytes, lower_cell)
+from repro.launch.mesh import make_production_mesh
+
+
+def top_buffers(hlo: str, k: int = 12):
+    """Largest result tensors in the optimized HLO."""
+    out = []
+    for line in hlo.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (\w+)\[([\d,]*)\]", line)
+        if not m:
+            continue
+        d, dims = m.groups()
+        if d not in _DTYPE_BYTES:
+            continue
+        b = _shape_bytes(d, dims)
+        op = line.split("=", 1)[1].strip()
+        opname = op.split("(")[0].split()[-1]
+        out.append((b, f"{d}[{dims}]", opname))
+    out.sort(reverse=True)
+    # dedupe identical (shape, op) pairs, count them
+    agg = defaultdict(lambda: [0, 0])
+    for b, shape, opname in out:
+        agg[(shape, opname)][0] += b
+        agg[(shape, opname)][1] += 1
+    rows = sorted(((v[0], v[1], s, o) for (s, o), v in agg.items()),
+                  reverse=True)
+    return rows[:k]
+
+
+def top_collectives(hlo: str, k: int = 12):
+    rows = []
+    for line in hlo.splitlines():
+        line = line.strip()
+        for c in ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute"):
+            if f" {c}(" in line or f" {c}-start(" in line:
+                lhs, _, rhs = line.partition(f" {c}")
+                call = rhs[rhs.find("(") + 1: rhs.rfind(")")]
+                ops = _SHAPE_RE.findall(call) or _SHAPE_RE.findall(lhs)[:1]
+                b = sum(_shape_bytes(d, s) for d, s in ops
+                        if d in _DTYPE_BYTES)
+                rows.append((b, c, [f"{d}[{s}]" for d, s in ops
+                                    if d in _DTYPE_BYTES][:2]))
+                break
+    rows.sort(reverse=True)
+    return rows[:k]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--donate-cache", action="store_true")
+    ap.add_argument("--override", nargs="*", default=[])
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.layers:
+        overrides["n_layers"] = args.layers
+    if args.unroll:
+        overrides["scan_layers"] = False
+    for kv in args.override:
+        k, v = kv.split("=")
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                v = {"true": True, "false": False}.get(v.lower(), v)
+        overrides[k] = v
+
+    mesh = make_production_mesh()
+    if args.donate_cache:
+        fn, a, in_sh = lower_cell(args.arch, args.shape, mesh,
+                                  cfg_overrides=overrides)
+        from jax.sharding import NamedSharding, PartitionSpec
+        with mesh:
+            sh = jax.tree.map(lambda s: NamedSharding(mesh, s), in_sh,
+                              is_leaf=lambda x: isinstance(x, PartitionSpec))
+            compiled = jax.jit(fn, in_shardings=sh,
+                               donate_argnums=(1,)).lower(*a).compile()
+    else:
+        _, compiled = _compile_cell(args.arch, args.shape, mesh,
+                                    cfg_overrides=overrides)
+    mem = compiled.memory_analysis()
+    print(f"== {args.arch} {args.shape} overrides={overrides} "
+          f"donate={args.donate_cache} ==")
+    print(f"args {mem.argument_size_in_bytes / 2**30:.2f} GiB  "
+          f"temp {mem.temp_size_in_bytes / 2**30:.2f} GiB  "
+          f"out {mem.output_size_in_bytes / 2**30:.2f} GiB")
+    vec = _cost_vector(compiled)
+    print("cost:", {k: f"{v:.3e}" for k, v in vec.items() if v})
+    hlo = compiled.as_text()
+    print("-- top buffers (aggregated by shape x op) --")
+    for b, n, shape, op in top_buffers(hlo):
+        print(f"  {b / 2**30:8.2f} GiB x{n:<4d} {shape:42s} {op}")
+    print("-- top collectives --")
+    for b, c, shapes in top_collectives(hlo):
+        print(f"  {b / 2**30:8.3f} GiB {c:20s} {shapes}")
+
+
+if __name__ == "__main__":
+    main()

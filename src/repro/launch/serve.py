@@ -1,0 +1,15 @@
+"""Serving launcher: VineLM-controlled workflow over the trained zoo.
+
+``python -m repro.launch.serve [--requests 40]`` — thin wrapper around the
+end-to-end example (examples/serve_workflow.py) exposing the same flow as a
+module entry point.
+"""
+import runpy
+import sys
+import os
+
+if __name__ == "__main__":
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "examples", "serve_workflow.py")
+    sys.argv[0] = path
+    runpy.run_path(path, run_name="__main__")

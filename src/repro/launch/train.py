@@ -1,0 +1,46 @@
+"""Training launcher: ``python -m repro.launch.train --arch yi-9b --smoke``.
+
+Production runs supply a real mesh (multi-host jax.distributed); this repo's
+CPU container exercises the same code path on the smoke configs.
+"""
+import argparse
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data import DataConfig, MarkovLMData
+from repro.models import build_model
+from repro.train import LoopConfig, OptConfig, TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="yi-9b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--opt", choices=["adamw", "adafactor"], default="adamw")
+    ap.add_argument("--accum", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    data = MarkovLMData(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                   batch=args.batch))
+    tcfg = TrainConfig(
+        accum_steps=args.accum,
+        opt=OptConfig(kind=args.opt, peak_lr=3e-3,
+                      warmup_steps=max(args.steps // 10, 5),
+                      total_steps=args.steps))
+    lcfg = LoopConfig(total_steps=args.steps,
+                      ckpt_every=max(args.steps // 2, 10),
+                      ckpt_dir=args.ckpt_dir, log_every=10)
+    out = train(model, data, tcfg, lcfg, handle_preemption=True)
+    print(f"final loss {out['losses'][-1]:.4f}; "
+          f"checkpoints: {out['manager'].list_steps()}")
+
+
+if __name__ == "__main__":
+    main()

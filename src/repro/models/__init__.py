@@ -1,0 +1,6 @@
+"""Model substrate: unified configs + the 10 assigned architectures."""
+from repro.models.config import SHAPES, ArchConfig, ShapeCell
+from repro.models.transformer import EncDecModel, Model, build_model
+
+__all__ = ["SHAPES", "ArchConfig", "ShapeCell", "EncDecModel", "Model",
+           "build_model"]

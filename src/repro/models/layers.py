@@ -1,0 +1,463 @@
+"""Shared model blocks: GQA/MLA attention, SwiGLU MLP, MoE, Mamba2/SSD.
+
+All blocks are pure functions over parameter pytrees.  Attention and the
+SSD scan route through `repro.kernels.ops` so the Pallas kernels (TPU) and
+jnp references (CPU/dry-run) share one call site.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.act_sharding import constrain
+from repro.kernels import ops
+from repro.models.config import ArchConfig
+
+
+def _dense_init(key, shape, in_axis=0):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else int(
+        np.prod([shape[a] for a in in_axis]))
+    return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(jnp.float32)
+
+
+def rms_norm(x, scale, *, use_pallas=False):
+    return ops.rms_norm(x, scale, use_pallas=use_pallas)
+
+
+# ----------------------------------------------------------------------
+# rotary embeddings
+# ----------------------------------------------------------------------
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D) or (..., H, D) with matching positions (..., S)/()."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    ).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# GQA attention
+# ----------------------------------------------------------------------
+def init_attention(key, cfg: ArchConfig) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, H * hd)),
+        "wk": _dense_init(ks[1], (d, KV * hd)),
+        "wv": _dense_init(ks[2], (d, KV * hd)),
+        "wo": _dense_init(ks[3], (H * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,))
+        p["bk"] = jnp.zeros((KV * hd,))
+        p["bv"] = jnp.zeros((KV * hd,))
+    return p
+
+
+def _qkv(p, x, cfg: ArchConfig):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return (
+        constrain(q.reshape(B, S, H, hd), "dp", None, "tp", None),
+        constrain(k.reshape(B, S, KV, hd), "dp", None, "tp", None),
+        constrain(v.reshape(B, S, KV, hd), "dp", None, "tp", None),
+    )
+
+
+def attention_forward(
+    p, x, cfg: ArchConfig, *, positions, causal=True, window=0,
+    kv_override=None,
+):
+    """Full-sequence attention.  Returns (y, (k, v)) — k/v in (B,KV,S,hd)
+    layout for caching.  ``kv_override`` supplies encoder KV (cross-attn)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    if kv_override is not None:
+        k, v = kv_override  # (B, KV, T, hd) precomputed, no rope
+        q = jnp.moveaxis(q, 1, 2)
+    else:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        q = jnp.moveaxis(q, 1, 2)       # (B,H,S,hd)
+        k = jnp.moveaxis(k, 1, 2)       # (B,KV,S,hd)
+        v = jnp.moveaxis(v, 1, 2)
+    y = ops.attention(q, k, v, causal=causal, window=window,
+                      use_pallas=cfg.use_pallas)
+    y = jnp.moveaxis(y, 1, 2).reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return y @ p["wo"].astype(x.dtype), (k, v)
+
+
+def attention_decode(
+    p, x_tok, cfg: ArchConfig, cache_k, cache_v, valid_len, pos_abs=None,
+    *, window=0,
+):
+    """One-token decode.  x_tok: (B, d); cache_(k|v): (B, KV, S, hd).
+
+    ``valid_len`` is the number of filled cache slots (append-only layout:
+    slot order == recency order); ``pos_abs`` the absolute position of the
+    new token for rope (defaults to valid_len).  The token is written at
+    slot ``min(valid_len, S-1)`` — callers must size the cache with enough
+    headroom; the ring fallback when full is shape-correct for lowering but
+    evicts the most recent slot.  Returns (y, cache_k, cache_v)."""
+    B, d = x_tok.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    S = cache_k.shape[2]
+    x = x_tok[:, None, :]
+    q, k, v = _qkv(p, x, cfg)
+    if pos_abs is None:
+        pos_abs = valid_len
+    pos = jnp.broadcast_to(jnp.asarray(pos_abs), (B,))
+    q = rope(q, pos[:, None], cfg.rope_theta)[:, 0]      # (B,H,hd)
+    k = rope(k, pos[:, None], cfg.rope_theta)[:, 0]      # (B,KV,hd)
+    v = v[:, 0]
+    slot = jnp.minimum(jnp.asarray(valid_len), S - 1)
+    idx = jnp.broadcast_to(slot, (B,))
+    cache_k = jax.vmap(
+        lambda ck, kk, i: jax.lax.dynamic_update_slice(ck, kk[:, None], (0, i, 0))
+    )(cache_k, k, idx)
+    cache_v = jax.vmap(
+        lambda cv, vv, i: jax.lax.dynamic_update_slice(cv, vv[:, None], (0, i, 0))
+    )(cache_v, v, idx)
+    q = q.reshape(B, H, hd)
+    lens = jnp.broadcast_to(
+        jnp.minimum(jnp.asarray(valid_len) + 1, S), (B,)).astype(jnp.int32)
+    y = ops.decode_attention(
+        q, cache_k, cache_v, lens,
+        window=window, use_pallas=cfg.use_pallas,
+    )
+    y = y.reshape(B, H * hd) @ p["wo"].astype(x_tok.dtype)
+    return y, cache_k, cache_v
+
+
+# ----------------------------------------------------------------------
+# MLA (multi-head latent attention; minicpm3 / deepseek-style)
+# ----------------------------------------------------------------------
+def init_mla(key, cfg: ArchConfig) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": _dense_init(ks[0], (d, m.q_lora_rank)),
+        "q_norm": jnp.ones((m.q_lora_rank,)),
+        "wq_b": _dense_init(ks[1], (m.q_lora_rank, H * qk)),
+        "wkv_a": _dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim)),
+        "kv_norm": jnp.ones((m.kv_lora_rank,)),
+        "wkv_b": _dense_init(
+            ks[3], (m.kv_lora_rank, H * (m.qk_nope_head_dim + m.v_head_dim))
+        ),
+        "wo": _dense_init(ks[4], (H * m.v_head_dim, d)),
+    }
+
+
+def mla_forward(p, x, cfg: ArchConfig, *, positions, causal=True):
+    """Full-sequence MLA.  Returns (y, (c_kv, k_rope)) for the latent cache."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q = rms_norm(x @ p["wq_a"].astype(x.dtype), p["q_norm"])
+    q = (q @ p["wq_b"].astype(x.dtype)).reshape(B, S, H, dn + dr)
+    q = constrain(q, "dp", None, "tp", None)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = constrain(x @ p["wkv_a"].astype(x.dtype), "dp", None, None)
+    c_kv = rms_norm(kv_a[..., : m.kv_lora_rank], p["kv_norm"])
+    k_rope = rope(kv_a[..., m.kv_lora_rank:][:, :, None, :], positions,
+                  cfg.rope_theta)[:, :, 0]                # (B,S,dr) shared
+    kv = (c_kv @ p["wkv_b"].astype(x.dtype)).reshape(B, S, H, dn + dv)
+    kv = constrain(kv, "dp", None, "tp", None)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], -1
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    y = ops.attention(
+        jnp.moveaxis(q_full, 1, 2), jnp.moveaxis(k, 1, 2),
+        jnp.moveaxis(jnp.pad(v, ((0, 0),) * 3 + ((0, dn + dr - dv),)), 1, 2),
+        causal=causal, use_pallas=cfg.use_pallas,
+    )[..., :dv]
+    y = jnp.moveaxis(y, 1, 2).reshape(B, S, H * dv)
+    return y @ p["wo"].astype(x.dtype), (c_kv, k_rope)
+
+
+def mla_decode(p, x_tok, cfg: ArchConfig, cache_c, cache_r, valid_len,
+               pos_abs=None):
+    """Absorbed-matmul MLA decode (TPU adaptation; DESIGN.md):
+
+    instead of re-expanding the latent cache to per-head K/V every step
+    (O(T * kvr * H * (dn+dv)) per token), fold W_uk into the query and
+    W_uv into the output so attention runs directly in the compressed
+    space: scores = q_c . c_cache + q_r . r_cache, context stays (kvr,).
+    """
+    m = cfg.mla
+    B, d = x_tok.shape
+    H = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    kvr = m.kv_lora_rank
+    S = cache_c.shape[1]
+    if pos_abs is None:
+        pos_abs = valid_len
+    pos = jnp.broadcast_to(jnp.asarray(pos_abs), (B,))
+    vlen = jnp.broadcast_to(jnp.asarray(valid_len), (B,))
+
+    x = x_tok[:, None, :]
+    q = rms_norm(x @ p["wq_a"].astype(x.dtype), p["q_norm"])
+    q = (q @ p["wq_b"].astype(x.dtype)).reshape(B, 1, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, pos[:, None], cfg.rope_theta)[:, 0]   # (B,H,dr)
+    q_nope = q_nope[:, 0]                                        # (B,H,dn)
+
+    kv_a = (x @ p["wkv_a"].astype(x.dtype))[:, 0]
+    c_new = rms_norm(kv_a[..., :kvr], p["kv_norm"])              # (B,kvr)
+    r_new = rope(kv_a[..., kvr:][:, None, None, :], pos[:, None],
+                 cfg.rope_theta)[:, 0, 0]                        # (B,dr)
+    slot = jnp.minimum(vlen, S - 1)
+    cache_c = jax.vmap(
+        lambda c, n, i: jax.lax.dynamic_update_slice(c, n[None], (i, 0))
+    )(cache_c, c_new, slot)
+    cache_r = jax.vmap(
+        lambda c, n, i: jax.lax.dynamic_update_slice(c, n[None], (i, 0))
+    )(cache_r, r_new, slot)
+
+    wkv_b = p["wkv_b"].astype(x_tok.dtype).reshape(kvr, H, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]
+    q_c = jnp.einsum("bhd,rhd->bhr", q_nope, w_uk)               # absorb W_uk
+    scores = jnp.einsum("bhr,btr->bht", q_c.astype(jnp.float32),
+                        cache_c.astype(jnp.float32))
+    scores += jnp.einsum("bhd,btd->bht", q_rope.astype(jnp.float32),
+                         cache_r.astype(jnp.float32))
+    scale = (dn + dr) ** -0.5
+    valid = jnp.arange(S)[None] < jnp.minimum(vlen + 1, S)[:, None]
+    scores = jnp.where(valid[:, None], scores * scale, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx_c = jnp.einsum("bht,btr->bhr", probs,
+                       cache_c.astype(jnp.float32)).astype(x_tok.dtype)
+    y = jnp.einsum("bhr,rhd->bhd", ctx_c, w_uv)                  # absorb W_uv
+    y = y.reshape(B, H * dv) @ p["wo"].astype(x_tok.dtype)
+    return y, cache_c, cache_r
+
+
+# ----------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------
+def init_mlp(key, d: int, f: int) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": _dense_init(ks[0], (d, f)),
+        "w3": _dense_init(ks[1], (d, f)),
+        "w2": _dense_init(ks[2], (f, d)),
+    }
+
+
+def mlp_forward(p, x):
+    h = jax.nn.silu(x @ p["w1"].astype(x.dtype)) * (x @ p["w3"].astype(x.dtype))
+    h = constrain(h, *( ("dp",) + (None,) * (h.ndim - 2) + ("tp",) ))
+    return h @ p["w2"].astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# MoE (capacity-based dispatch with expert groups; GShard-style)
+# ----------------------------------------------------------------------
+def init_moe(key, cfg: ArchConfig) -> dict:
+    mo = cfg.moe
+    d, f, E = cfg.d_model, cfg.d_ff, mo.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, E)),
+        "w1": _dense_init(ks[1], (E, d, f), in_axis=1),
+        "w3": _dense_init(ks[2], (E, d, f), in_axis=1),
+        "w2": _dense_init(ks[3], (E, f, d), in_axis=1),
+    }
+    if mo.dense_residual:
+        p["dense"] = init_mlp(ks[4], d, mo.dense_d_ff or f)
+    return p
+
+
+def moe_forward(p, x, cfg: ArchConfig, no_drop: bool = False):
+    """Token-choice top-k MoE with per-group capacity (drops on overflow).
+
+    Tokens are processed in groups of G; per group, capacity per expert is
+    C = ceil(G/E * top_k * capacity_factor).  The (G, E, C) dispatch/combine
+    tensors stay linear in token count (DESIGN.md: the expert-group trick
+    keeps the dispatch footprint ~G * top_k * cf per token instead of
+    quadratic).  Experts dim shards over "model" (EP): the dispatch einsum
+    lowers to all_to_all under pjit.
+
+    Returns (y, aux_loss).
+    """
+    mo = cfg.moe
+    B, S, d = x.shape
+    E, K = mo.n_experts, mo.top_k
+    T = B * S
+    G = min(mo.expert_group, T)
+    xt = x.reshape(T, d)
+    pad = (-T) % G
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    nG = xt.shape[0] // G
+    xg = xt.reshape(nG, G, d)
+    # no_drop (decode/small batches): full capacity, no token dropping
+    C = G if no_drop else max(1, int(np.ceil(G / E * K * mo.capacity_factor)))
+
+    gates = jax.nn.softmax(
+        (xg @ p["router"].astype(xg.dtype)).astype(jnp.float32), axis=-1
+    )                                                   # (nG,G,E)
+    topv, topi = jax.lax.top_k(gates, K)                # (nG,G,K)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    dispatch = jnp.zeros((nG, G, E, C), xg.dtype)
+    combine = jnp.zeros((nG, G, E, C), jnp.float32)
+    counts = jnp.zeros((nG, E), jnp.int32)
+    for j in range(K):
+        oh_e = jax.nn.one_hot(topi[..., j], E, dtype=jnp.int32)  # (nG,G,E)
+        pos = counts[:, None, :] + jnp.cumsum(oh_e, axis=1) - oh_e
+        keep = (pos < C) & (oh_e > 0)
+        oh_c = jax.nn.one_hot(jnp.where(keep, pos, 0), C, dtype=xg.dtype)
+        d_j = oh_c * keep[..., None].astype(xg.dtype)            # (nG,G,E,C)
+        dispatch = dispatch + d_j
+        combine = combine + d_j.astype(jnp.float32) * topv[..., j][..., None, None]
+        counts = counts + oh_e.sum(axis=1)
+
+    # NOTE: expert-sharded constraints on the dispatch intermediates were
+    # tried and REFUTED: forcing (·,tp,·,·) on `ein`/`eo` made the
+    # partitioner replicate the dispatch compute (arctic useful-FLOP ratio
+    # 0.81 -> 0.13; EXPERIMENTS.md §Perf).  The expert weights' own
+    # sharding already steers the einsums to all_to_all dispatch.
+    ein = jnp.einsum("gtec,gtd->gecd", dispatch, xg)
+    h = jnp.einsum("gecd,edf->gecf", ein, p["w1"].astype(xg.dtype))
+    g3 = jnp.einsum("gecd,edf->gecf", ein, p["w3"].astype(xg.dtype))
+    eo = jnp.einsum("gecf,efd->gecd", jax.nn.silu(h) * g3,
+                    p["w2"].astype(xg.dtype))
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(xg.dtype), eo)
+    y = y.reshape(-1, d)[:T].reshape(B, S, d)
+
+    # Switch-style load-balancing auxiliary loss
+    importance = gates.mean(axis=(0, 1))                         # (E,)
+    load = jax.nn.one_hot(topi[..., 0], E).mean(axis=(0, 1))
+    aux = E * jnp.sum(importance * load)
+
+    if mo.dense_residual:
+        y = y + mlp_forward(p["dense"], x)
+    return y, aux
+
+
+# ----------------------------------------------------------------------
+# Mamba2 / SSD block
+# ----------------------------------------------------------------------
+def init_mamba(key, cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    N = s.state_dim
+    conv_ch = d_in + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * d_in + 2 * N + nh)),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (s.conv_width, conv_ch)),
+        "conv_b": jnp.zeros((conv_ch,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)),
+        "D": jnp.ones((nh,)),
+        "dt_bias": jnp.zeros((nh,)),
+        "norm": jnp.ones((d_in,)),
+        "out_proj": _dense_init(ks[2], (d_in, d)),
+    }
+
+
+def _causal_depthwise_conv(x, w, b):
+    """x: (B, S, C); w: (W, C) depthwise causal conv."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def mamba_forward(p, u, cfg: ArchConfig, *, return_state=False, init_state=None):
+    """Full-sequence Mamba2 block.  Returns y (and final (conv, ssm) state)."""
+    s = cfg.ssm
+    B, S, d = u.shape
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    N = s.state_dim
+    zxbcdt = u @ p["in_proj"].astype(u.dtype)
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in : 2 * d_in + 2 * N]
+    dt_raw = zxbcdt[..., 2 * d_in + 2 * N :]
+    xBC = jax.nn.silu(
+        _causal_depthwise_conv(xBC, p["conv_w"].astype(u.dtype),
+                               p["conv_b"].astype(u.dtype))
+    )
+    x = constrain(xBC[..., :d_in].reshape(B, S, nh, s.head_dim),
+                  "dp", None, "tp", None)
+    Bm = constrain(xBC[..., d_in : d_in + N], "dp", None, None)
+    Cm = constrain(xBC[..., d_in + N :], "dp", None, None)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    dt = constrain(dt, "dp", None, "tp")
+    A = -jnp.exp(p["A_log"])
+    if return_state or init_state is not None:
+        ssm_init = None if init_state is None else init_state[1]
+        y, h = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=s.chunk,
+                            init_state=ssm_init, return_state=True)
+    else:
+        y = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=s.chunk,
+                         use_pallas=cfg.use_pallas)
+        h = None
+    y = y + x * p["D"].astype(u.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["out_proj"].astype(u.dtype)
+    if return_state:
+        # conv state: last (W-1) pre-activation conv inputs
+        pre_conv = zxbcdt[..., d_in : 2 * d_in + 2 * N]
+        conv_state = pre_conv[:, -(s.conv_width - 1):, :]
+        return out, (conv_state, h)
+    return out
+
+
+def mamba_decode(p, u_tok, cfg: ArchConfig, conv_state, ssm_state):
+    """One-token Mamba2 step.  conv_state: (B, W-1, C); ssm_state:
+    (B, nh, hd, N).  Returns (y, conv_state, ssm_state)."""
+    s = cfg.ssm
+    B, d = u_tok.shape
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    N = s.state_dim
+    zxbcdt = u_tok @ p["in_proj"].astype(u_tok.dtype)
+    z = zxbcdt[..., :d_in]
+    xBC_new = zxbcdt[..., d_in : 2 * d_in + 2 * N]
+    dt_raw = zxbcdt[..., 2 * d_in + 2 * N :]
+    # causal conv over [conv_state, new]
+    window = jnp.concatenate([conv_state, xBC_new[:, None, :]], axis=1)
+    w = p["conv_w"].astype(u_tok.dtype)
+    xBC = jax.nn.silu((window * w[None]).sum(axis=1)
+                      + p["conv_b"].astype(u_tok.dtype))
+    conv_state = window[:, 1:]
+    x = xBC[..., :d_in].reshape(B, nh, s.head_dim)
+    Bm = xBC[..., d_in : d_in + N]
+    Cm = xBC[..., d_in + N :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, ssm_state = ops.ssd_decode_step(x, dt, A, Bm, Cm, ssm_state)
+    y = y + x * p["D"].astype(u_tok.dtype)[None, :, None]
+    y = y.reshape(B, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"].astype(u_tok.dtype), conv_state, ssm_state

@@ -1,0 +1,749 @@
+"""Model assembly for all assigned architectures.
+
+One `Model` class covers decoder-only families (dense GQA, MLA, MoE, SSM,
+hybrid, VLM-backbone); `EncDecModel` covers whisper (enc-dec).  Repeated
+layers hold *stacked* parameters (leading layer axis) consumed via
+``jax.lax.scan`` — this keeps the lowered HLO size independent of depth,
+which is what makes 512-device SPMD compiles of 80-layer models tractable
+(DESIGN.md §4).  ``remat="full"`` wraps the scan body in ``jax.checkpoint``.
+
+The forward paths:
+- ``forward``      : full-sequence logits (training / evaluation)
+- ``loss``         : next-token cross-entropy (optionally vocab-chunked)
+- ``prefill``      : full-sequence + returns the decode cache
+- ``decode_step``  : one token per sequence against the cache
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.act_sharding import constrain
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+
+
+def _split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+def _stack(trees: list[dict]) -> dict:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ----------------------------------------------------------------------
+# chunked cross-entropy (memory lever for 150k vocabularies)
+# ----------------------------------------------------------------------
+def _xent_full(x, w_out, labels, mask, valid_v=None):
+    logits = (x @ w_out).astype(jnp.float32)            # (B,S,V)
+    if valid_v is not None and valid_v < w_out.shape[1]:
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        logits = jnp.where(col < valid_v, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # one-hot contraction instead of take_along_axis: stays vocab-sharded
+    # under TP (gather along a sharded axis would force an all-gather)
+    onehot = jax.nn.one_hot(labels.clip(0), logits.shape[-1],
+                            dtype=logits.dtype)
+    lab = (logits * onehot).sum(-1)
+    nll = (lse - lab) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def _xent_stats(x, wp, labels, V, chunk, n):
+    """Streaming (max, sumexp, label-logit) over vocab chunks; the scan
+    carry is three (B, S) stats — no (B, S, V) buffer ever exists."""
+    labc = labels.clip(0)
+
+    def body(carry, i):
+        m, l, lab_logit = carry
+        wchunk = jax.lax.dynamic_slice_in_dim(wp, i * chunk, chunk, axis=1)
+        lg = (x @ wchunk).astype(jnp.float32)           # (B,S,chunk)
+        col = jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1)
+        gidx = col + i * chunk
+        lg = jnp.where(gidx < V, lg, -1e30)
+        m_new = jnp.maximum(m, lg.max(-1))
+        l = l * jnp.exp(m - m_new) + jnp.exp(lg - m_new[..., None]).sum(-1)
+        hit = gidx == labc[..., None]
+        lab_logit = lab_logit + jnp.where(hit, lg, 0.0).sum(-1)
+        return (m_new, l, lab_logit), ()
+
+    B, S = labels.shape
+    init = (jnp.full((B, S), -1e30), jnp.zeros((B, S)), jnp.zeros((B, S)))
+    (m, l, lab), _ = jax.lax.scan(body, init, jnp.arange(n))
+    return m + jnp.log(jnp.maximum(l, 1e-30)), lab
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _xent_chunked(x, w_out, labels, mask, chunk: int, valid_v: int = 0):
+    """Memory-lean streaming cross-entropy with an analytic recompute
+    backward (d_logits = softmax - onehot, applied chunk by chunk) — a
+    naive scan would save every per-chunk (B, S, chunk) logit tensor for
+    autodiff, re-materializing the full-logit footprint (§Perf log)."""
+    V = valid_v or w_out.shape[1]
+    n = -(-w_out.shape[1] // chunk)
+    wp = jnp.pad(w_out, ((0, 0), (0, n * chunk - w_out.shape[1])))
+    lse, lab = _xent_stats(x, wp, labels, V, chunk, n)
+    nll = (lse - lab) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def _xent_chunked_fwd(x, w_out, labels, mask, chunk, valid_v=0):
+    V = valid_v or w_out.shape[1]
+    n = -(-w_out.shape[1] // chunk)
+    wp = jnp.pad(w_out, ((0, 0), (0, n * chunk - w_out.shape[1])))
+    lse, lab = _xent_stats(x, wp, labels, V, chunk, n)
+    nll = ((lse - lab) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll, (x, wp, labels, mask, lse, V, n, w_out.shape[1])
+
+
+def _xent_chunked_bwd(chunk, valid_v, res, g):
+    x, wp, labels, mask, lse, V, n, w_width = res
+    labc = labels.clip(0)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    scale = (g * mask / denom).astype(jnp.float32)      # (B,S)
+
+    def body(carry, i):
+        dx, dw = carry
+        wchunk = jax.lax.dynamic_slice_in_dim(wp, i * chunk, chunk, axis=1)
+        lg = (x @ wchunk).astype(jnp.float32)
+        col = jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1)
+        gidx = col + i * chunk
+        p = jnp.where(gidx < V, jnp.exp(lg - lse[..., None]), 0.0)
+        p = p - (gidx == labc[..., None]).astype(jnp.float32)
+        dlg = (p * scale[..., None]).astype(x.dtype)    # (B,S,chunk)
+        dx = dx + dlg @ wchunk.T
+        dw_c = jnp.einsum("bsd,bsc->dc", x, dlg)
+        dw = jax.lax.dynamic_update_slice_in_dim(dw, dw_c.astype(dw.dtype),
+                                                 i * chunk, axis=1)
+        return (dx, dw), ()
+
+    dx0 = jnp.zeros(x.shape, x.dtype)
+    dw0 = jnp.zeros(wp.shape, wp.dtype)
+    (dx, dw), _ = jax.lax.scan(body, (dx0, dw0), jnp.arange(n))
+    return dx, dw[:, :w_width], None, None
+
+
+_xent_chunked.defvjp(_xent_chunked_fwd, _xent_chunked_bwd)
+
+
+
+def _maybe_scan(body, carry, xs, use_scan: bool):
+    """lax.scan or an unrolled Python loop over the leading axis of ``xs``.
+
+    Unrolling (scan_layers=False) duplicates the body per layer in HLO —
+    used by the dry-run cost probes (XLA's cost_analysis is scan-trip-count
+    blind) and available as a compile-time/perf trade-off."""
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0] if jax.tree.leaves(xs) else 0
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if not ys or not jax.tree.leaves(ys[0]):
+        return carry, ()
+    stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    return carry, stacked
+
+
+# ----------------------------------------------------------------------
+# decoder-only model
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+
+    # -------------------------- init ---------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        keys = _split_keys(key, cfg.n_layers + 5)
+        Vp = cfg.padded_vocab
+        params: dict[str, Any] = {
+            "embed": 0.02 * jax.random.normal(keys[-1], (Vp, cfg.d_model)),
+            "final_norm": jnp.ones((cfg.d_model,)),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = L._dense_init(keys[-2], (cfg.d_model, Vp))
+        params["layers"] = _stack(
+            [self._init_layer(keys[i]) for i in range(cfg.n_layers)]
+        )
+        if cfg.family == "hybrid":
+            params["shared_attn"] = {
+                "norm": jnp.ones((cfg.d_model,)),
+                "attn": L.init_attention(keys[-3], cfg),
+                "mlp_norm": jnp.ones((cfg.d_model,)),
+                "mlp": L.init_mlp(keys[-4], cfg.d_model, cfg.d_ff),
+            }
+        if cfg.vlm is not None:
+            params["patch_proj"] = L._dense_init(
+                keys[-5], (cfg.vlm.patch_dim, cfg.d_model))
+        return params
+
+    def _init_layer(self, key) -> dict:
+        cfg = self.cfg
+        ks = _split_keys(key, 3)
+        if cfg.family in ("ssm", "hybrid"):
+            return {"norm": jnp.ones((cfg.d_model,)),
+                    "mamba": L.init_mamba(ks[0], cfg)}
+        p = {"attn_norm": jnp.ones((cfg.d_model,)),
+             "mlp_norm": jnp.ones((cfg.d_model,))}
+        if cfg.attn_kind == "mla":
+            p["attn"] = L.init_mla(ks[0], cfg)
+        else:
+            p["attn"] = L.init_attention(ks[0], cfg)
+        if cfg.moe is not None:
+            p["mlp"] = L.init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+        return p
+
+    # ------------------------ embedding ------------------------------
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        tokens = batch["tokens"]
+        x = params["embed"].astype(dt)[tokens]
+        if cfg.vlm is not None and "patch_embeds" in batch:
+            patches = batch["patch_embeds"].astype(dt) @ params[
+                "patch_proj"].astype(dt)
+            x = jnp.concatenate([patches, x], axis=1)
+        return x
+
+    # ------------------------- forward -------------------------------
+    def _layer_fwd(self, p, x, positions, *, window=0):
+        cfg = self.cfg
+        if cfg.family in ("ssm", "hybrid"):
+            return x + L.mamba_forward(
+                p["mamba"], L.rms_norm(x, p["norm"]), cfg), 0.0
+        h = L.rms_norm(x, p["attn_norm"])
+        if cfg.attn_kind == "mla":
+            a, _ = L.mla_forward(p["attn"], h, cfg, positions=positions)
+        else:
+            a, _ = L.attention_forward(p["attn"], h, cfg,
+                                       positions=positions, window=window)
+        x = x + a
+        h = L.rms_norm(x, p["mlp_norm"])
+        if cfg.moe is not None:
+            m, aux = L.moe_forward(p["mlp"], h, cfg)
+        else:
+            m, aux = L.mlp_forward(p["mlp"], h), 0.0
+        return x + m, aux
+
+    def _shared_attn_fwd(self, p, x, positions, window):
+        a, _ = L.attention_forward(
+            p["attn"], L.rms_norm(x, p["norm"]), self.cfg,
+            positions=positions, window=window)
+        x = x + a
+        return x + L.mlp_forward(p["mlp"], L.rms_norm(x, p["mlp_norm"]))
+
+    def forward(self, params, batch):
+        """Returns (hidden_states, aux_loss). Logits via loss()/logits()."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        x = constrain(x, "dp", None, None)
+        B, S, _ = x.shape
+        positions = jnp.arange(S)[None, :]
+
+        def body(carry, p_l):
+            x = carry
+            x, aux = self._layer_fwd(p_l, x, positions)
+            return constrain(x, "dp", None, None), aux
+
+        body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+
+        if cfg.family == "hybrid":
+            k = cfg.hybrid.attn_every
+            n_groups = cfg.n_layers // k
+            stacked = jax.tree.map(
+                lambda a: a.reshape((n_groups, k) + a.shape[1:]),
+                params["layers"])
+            window = cfg.hybrid.window if S > cfg.hybrid.window else 0
+
+            def group_body(x, p_g):
+                x, aux = _maybe_scan(body_fn, x, p_g, cfg.scan_layers)
+                x = self._shared_attn_fwd(
+                    params["shared_attn"], x, positions, window)
+                return x, aux.sum()
+
+            group_fn = jax.checkpoint(group_body) if cfg.remat == "full" \
+                else group_body
+            x, aux = _maybe_scan(group_fn, x, stacked, cfg.scan_layers)
+        else:
+            x, aux = _maybe_scan(body_fn, x, params["layers"], cfg.scan_layers)
+        x = L.rms_norm(x, params["final_norm"])
+        return x, jnp.sum(aux)
+
+    def unembed_matrix(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].astype(_dtype(self.cfg)).T
+        return params["unembed"].astype(_dtype(self.cfg))
+
+    def _mask_pad(self, logits):
+        V, Vp = self.cfg.vocab, self.cfg.padded_vocab
+        if Vp == V:
+            return logits
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        return jnp.where(col < V, logits, -1e30)
+
+    def logits(self, params, batch):
+        x, aux = self.forward(params, batch)
+        return self._mask_pad(x @ self.unembed_matrix(params)), aux
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        if cfg.vlm is not None and "patch_embeds" in batch:
+            # prepend ignore-labels for patch positions
+            P = batch["patch_embeds"].shape[1]
+            pad = jnp.full((labels.shape[0], P), -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        mask = (labels >= 0).astype(jnp.float32)
+        w_out = self.unembed_matrix(params)
+        if cfg.logit_chunk_vocab > 0:
+            nll = _xent_chunked(x, w_out, labels, mask, cfg.logit_chunk_vocab,
+                                cfg.vocab)
+        else:
+            nll = _xent_full(x, w_out, labels, mask, cfg.vocab)
+        return nll + 0.01 * aux, {"nll": nll, "aux": aux}
+
+    # ------------------------- serving -------------------------------
+    def init_cache(self, batch_size: int, max_len: int, dtype=None,
+                   fill: int | None = None) -> dict:
+        """Decode cache with capacity ``max_len``.  ``fill`` sets the valid
+        prefix length (defaults to max_len - 1: a fully-warm cache with one
+        free slot — the dry-run's "decode one token against a seq_len
+        cache" configuration)."""
+        cfg = self.cfg
+        dt = dtype or _dtype(cfg)
+        Lc, B, S = cfg.n_layers, batch_size, max_len
+        fill = S - 1 if fill is None else fill
+        cache: dict[str, Any] = {
+            "len": jnp.asarray(fill, jnp.int32),
+            "pos": jnp.asarray(fill, jnp.int32),
+        }
+        if cfg.family in ("ssm", "hybrid"):
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            nh = d_in // s.head_dim
+            C = d_in + 2 * s.state_dim
+            cache["conv"] = jnp.zeros((Lc, B, s.conv_width - 1, C), dt)
+            cache["ssm"] = jnp.zeros((Lc, B, nh, s.head_dim, s.state_dim),
+                                     jnp.float32)
+            if cfg.family == "hybrid":
+                g = cfg.n_layers // cfg.hybrid.attn_every
+                W = min(S, cfg.hybrid.window)
+                cache["attn_k"] = jnp.zeros(
+                    (g, B, cfg.n_kv_heads, W, cfg.head_dim), dt)
+                cache["attn_v"] = jnp.zeros(
+                    (g, B, cfg.n_kv_heads, W, cfg.head_dim), dt)
+        elif cfg.attn_kind == "mla":
+            m = cfg.mla
+            cache["c"] = jnp.zeros((Lc, B, S, m.kv_lora_rank), dt)
+            cache["r"] = jnp.zeros((Lc, B, S, m.qk_rope_head_dim), dt)
+        else:
+            cache["k"] = jnp.zeros((Lc, B, cfg.n_kv_heads, S, cfg.head_dim), dt)
+            cache["v"] = jnp.zeros((Lc, B, cfg.n_kv_heads, S, cfg.head_dim), dt)
+        return cache
+
+    def decode_step(self, params, cache, tokens):
+        """tokens: (B,) int32 -> (logits (B,V), new cache)."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        x = params["embed"].astype(dt)[tokens]            # (B,d)
+        vlen = cache["len"]
+        pos = cache.get("pos", vlen)
+
+        if cfg.family in ("ssm", "hybrid"):
+            def body(x, inp):
+                p_l, conv, ssm = inp
+                h = L.rms_norm(x, p_l["norm"])
+                y, conv, ssm = L.mamba_decode(p_l["mamba"], h, cfg, conv, ssm)
+                return x + y, (conv, ssm)
+
+            if cfg.family == "hybrid":
+                k = cfg.hybrid.attn_every
+                g = cfg.n_layers // k
+                stk = jax.tree.map(
+                    lambda a: a.reshape((g, k) + a.shape[1:]), params["layers"])
+                conv = cache["conv"].reshape((g, k) + cache["conv"].shape[1:])
+                ssm = cache["ssm"].reshape((g, k) + cache["ssm"].shape[1:])
+
+                def group(x, inp):
+                    p_g, conv_g, ssm_g, ck, cv = inp
+                    x, (conv_g, ssm_g) = _maybe_scan(
+                        body, x, (p_g, conv_g, ssm_g), cfg.scan_layers)
+                    sa = params["shared_attn"]
+                    h = L.rms_norm(x, sa["norm"])
+                    y, ck, cv = L.attention_decode(
+                        sa["attn"], h, cfg, ck, cv, vlen, pos,
+                        window=cfg.hybrid.window)
+                    x = x + y
+                    x = x + L.mlp_forward(sa["mlp"],
+                                          L.rms_norm(x, sa["mlp_norm"]))
+                    return x, (conv_g, ssm_g, ck, cv)
+
+                x, (conv, ssm, ck, cv) = _maybe_scan(
+                    group, x, (stk, conv, ssm, cache["attn_k"],
+                               cache["attn_v"]), cfg.scan_layers)
+                cap = cache["attn_k"].shape[3]
+                new_cache = dict(
+                    cache,
+                    conv=conv.reshape(cache["conv"].shape),
+                    ssm=ssm.reshape(cache["ssm"].shape),
+                    attn_k=ck, attn_v=cv,
+                    len=jnp.minimum(vlen + 1, cap), pos=pos + 1)
+            else:
+                x, (conv, ssm) = _maybe_scan(
+                    body, x, (params["layers"], cache["conv"], cache["ssm"]),
+                    cfg.scan_layers)
+                new_cache = dict(cache, conv=conv, ssm=ssm,
+                                 len=vlen + 1, pos=pos + 1)
+        elif cfg.attn_kind == "mla":
+            def body(x, inp):
+                p_l, cc, cr = inp
+                h = L.rms_norm(x, p_l["attn_norm"])
+                y, cc, cr = L.mla_decode(p_l["attn"], h, cfg, cc, cr,
+                                         vlen, pos)
+                x = x + y
+                x = x + L.mlp_forward(p_l["mlp"],
+                                      L.rms_norm(x, p_l["mlp_norm"]))
+                return x, (cc, cr)
+
+            x, (cc, cr) = _maybe_scan(
+                body, x, (params["layers"], cache["c"], cache["r"]),
+                cfg.scan_layers)
+            cap = cache["c"].shape[2]
+            new_cache = dict(cache, c=cc, r=cr,
+                             len=jnp.minimum(vlen + 1, cap), pos=pos + 1)
+        else:
+            def body(x, inp):
+                p_l, ck, cv = inp
+                h = L.rms_norm(x, p_l["attn_norm"])
+                y, ck, cv = L.attention_decode(p_l["attn"], h, cfg, ck, cv,
+                                               vlen, pos)
+                x = x + y
+                h = L.rms_norm(x, p_l["mlp_norm"])
+                if cfg.moe is not None:
+                    m, _ = L.moe_forward(p_l["mlp"], h[:, None, :], cfg,
+                                         no_drop=True)
+                    x = x + m[:, 0]
+                else:
+                    x = x + L.mlp_forward(p_l["mlp"], h)
+                return x, (ck, cv)
+
+            x, (ck, cv) = _maybe_scan(
+                body, x, (params["layers"], cache["k"], cache["v"]),
+                cfg.scan_layers)
+            cap = cache["k"].shape[3]
+            new_cache = dict(cache, k=ck, v=cv,
+                             len=jnp.minimum(vlen + 1, cap), pos=pos + 1)
+
+        x = L.rms_norm(x, params["final_norm"])
+        logits = self._mask_pad(x @ self.unembed_matrix(params))
+        return logits, new_cache
+
+    def prefill(self, params, batch, headroom: int = 64):
+        """Full-sequence prefill; returns (last-position logits, cache).
+
+        The cache is produced by replaying per-layer KV from the forward
+        pass and padded with ``headroom`` free slots for subsequent decode
+        appends; SSM/hybrid caches carry conv + state tensors instead.
+        """
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.arange(S)[None, :]
+
+        if cfg.family in ("ssm", "hybrid"):
+            def body(x, p_l):
+                h = L.rms_norm(x, p_l["norm"])
+                y, (conv, ssm) = L.mamba_forward(
+                    p_l["mamba"], h, cfg, return_state=True)
+                return x + y, (conv, ssm)
+
+            if cfg.family == "hybrid":
+                k = cfg.hybrid.attn_every
+                g = cfg.n_layers // k
+                stk = jax.tree.map(
+                    lambda a: a.reshape((g, k) + a.shape[1:]), params["layers"])
+                window = cfg.hybrid.window if S > cfg.hybrid.window else 0
+
+                def group(x, p_g):
+                    x, (conv, ssm) = _maybe_scan(body, x, p_g,
+                                                 cfg.scan_layers)
+                    sa = params["shared_attn"]
+                    h = L.rms_norm(x, sa["norm"])
+                    a, (ck, cv) = L.attention_forward(
+                        sa["attn"], h, cfg, positions=positions, window=window)
+                    x = x + a
+                    x = x + L.mlp_forward(sa["mlp"],
+                                          L.rms_norm(x, sa["mlp_norm"]))
+                    W = min(S, cfg.hybrid.window)
+                    return x, (conv, ssm, ck[:, :, -W:], cv[:, :, -W:])
+
+                x, (conv, ssm, ck, cv) = _maybe_scan(group, x, stk,
+                                                     cfg.scan_layers)
+                pad4 = ((0, 0), (0, 0), (0, 0), (0, headroom), (0, 0))
+                kept = ck.shape[3]
+                cache = {
+                    "conv": conv.reshape((cfg.n_layers,) + conv.shape[2:]),
+                    "ssm": ssm.reshape((cfg.n_layers,) + ssm.shape[2:]),
+                    "attn_k": jnp.pad(ck, pad4), "attn_v": jnp.pad(cv, pad4),
+                    "len": jnp.asarray(kept, jnp.int32),
+                    "pos": jnp.asarray(S, jnp.int32),
+                }
+            else:
+                x, (conv, ssm) = _maybe_scan(body, x, params["layers"],
+                                             cfg.scan_layers)
+                cache = {"conv": conv, "ssm": ssm,
+                         "len": jnp.asarray(S, jnp.int32),
+                         "pos": jnp.asarray(S, jnp.int32)}
+        elif cfg.attn_kind == "mla":
+            def body(x, p_l):
+                h = L.rms_norm(x, p_l["attn_norm"])
+                a, (c_kv, k_rope) = L.mla_forward(
+                    p_l["attn"], h, cfg, positions=positions)
+                x = x + a
+                x = x + L.mlp_forward(p_l["mlp"],
+                                      L.rms_norm(x, p_l["mlp_norm"]))
+                return x, (c_kv, k_rope)
+
+            x, (cc, cr) = _maybe_scan(body, x, params["layers"],
+                                      cfg.scan_layers)
+            pad3 = ((0, 0), (0, 0), (0, headroom), (0, 0))
+            cache = {"c": jnp.pad(cc, pad3), "r": jnp.pad(cr, pad3),
+                     "len": jnp.asarray(S, jnp.int32),
+                     "pos": jnp.asarray(S, jnp.int32)}
+        else:
+            def body(x, p_l):
+                h = L.rms_norm(x, p_l["attn_norm"])
+                a, (kk, vv) = L.attention_forward(
+                    p_l["attn"], h, cfg, positions=positions)
+                x = x + a
+                h = L.rms_norm(x, p_l["mlp_norm"])
+                if cfg.moe is not None:
+                    m, _ = L.moe_forward(p_l["mlp"], h, cfg)
+                else:
+                    m = L.mlp_forward(p_l["mlp"], h)
+                return x + m, (kk, vv)
+
+            x, (ck, cv) = _maybe_scan(body, x, params["layers"],
+                                      cfg.scan_layers)
+            pad4 = ((0, 0), (0, 0), (0, 0), (0, headroom), (0, 0))
+            cache = {"k": jnp.pad(ck, pad4), "v": jnp.pad(cv, pad4),
+                     "len": jnp.asarray(S, jnp.int32),
+                     "pos": jnp.asarray(S, jnp.int32)}
+
+        x = L.rms_norm(x[:, -1], params["final_norm"])
+        logits = self._mask_pad(x @ self.unembed_matrix(params))
+        return logits, cache
+
+
+# ----------------------------------------------------------------------
+# encoder-decoder (whisper backbone; conv frontend stubbed)
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class EncDecModel:
+    cfg: ArchConfig
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        e = cfg.encdec
+        keys = _split_keys(key, 4)
+        enc_layers = [self._init_enc_layer(k) for k in
+                      _split_keys(keys[0], e.n_encoder_layers)]
+        dec_layers = [self._init_dec_layer(k) for k in
+                      _split_keys(keys[1], cfg.n_layers)]
+        return {
+            "embed": 0.02 * jax.random.normal(keys[2], (cfg.vocab, cfg.d_model)),
+            "unembed": L._dense_init(keys[3], (cfg.d_model, cfg.vocab)),
+            "enc_layers": _stack(enc_layers),
+            "dec_layers": _stack(dec_layers),
+            "enc_norm": jnp.ones((cfg.d_model,)),
+            "final_norm": jnp.ones((cfg.d_model,)),
+        }
+
+    def _init_enc_layer(self, key):
+        cfg = self.cfg
+        ks = _split_keys(key, 2)
+        return {"attn_norm": jnp.ones((cfg.d_model,)),
+                "attn": L.init_attention(ks[0], cfg),
+                "mlp_norm": jnp.ones((cfg.d_model,)),
+                "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff)}
+
+    def _init_dec_layer(self, key):
+        cfg = self.cfg
+        ks = _split_keys(key, 3)
+        return {"self_norm": jnp.ones((cfg.d_model,)),
+                "self_attn": L.init_attention(ks[0], cfg),
+                "cross_norm": jnp.ones((cfg.d_model,)),
+                "cross_attn": L.init_attention(ks[1], cfg),
+                "mlp_norm": jnp.ones((cfg.d_model,)),
+                "mlp": L.init_mlp(ks[2], cfg.d_model, cfg.d_ff)}
+
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(_dtype(cfg))
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        def body(x, p_l):
+            h = L.rms_norm(x, p_l["attn_norm"])
+            a, _ = L.attention_forward(p_l["attn"], h, cfg,
+                                       positions=positions, causal=False)
+            x = x + a
+            x = x + L.mlp_forward(p_l["mlp"], L.rms_norm(x, p_l["mlp_norm"]))
+            return x, ()
+
+        body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+        x, _ = _maybe_scan(body_fn, x, params["enc_layers"], cfg.scan_layers)
+        return L.rms_norm(x, params["enc_norm"])
+
+    def _cross_kv(self, params, enc):
+        """Precompute per-decoder-layer cross-attention KV: (L,B,KV,T,hd)."""
+        cfg = self.cfg
+
+        def body(_, p_l):
+            B, T, _ = enc.shape
+            k = (enc @ p_l["cross_attn"]["wk"].astype(enc.dtype)).reshape(
+                B, T, cfg.n_kv_heads, cfg.head_dim)
+            v = (enc @ p_l["cross_attn"]["wv"].astype(enc.dtype)).reshape(
+                B, T, cfg.n_kv_heads, cfg.head_dim)
+            return (), (jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2))
+
+        _, (K, V) = _maybe_scan(body, (), params["dec_layers"],
+                                cfg.scan_layers)
+        return K, V
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"])
+        K, V = self._cross_kv(params, enc)
+        x = params["embed"].astype(_dtype(cfg))[batch["tokens"]]
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        def body(x, inp):
+            p_l, k_l, v_l = inp
+            h = L.rms_norm(x, p_l["self_norm"])
+            a, _ = L.attention_forward(p_l["self_attn"], h, cfg,
+                                       positions=positions)
+            x = x + a
+            h = L.rms_norm(x, p_l["cross_norm"])
+            a, _ = L.attention_forward(p_l["cross_attn"], h, cfg,
+                                       positions=positions, causal=False,
+                                       kv_override=(k_l, v_l))
+            x = x + a
+            x = x + L.mlp_forward(p_l["mlp"], L.rms_norm(x, p_l["mlp_norm"]))
+            return x, ()
+
+        body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+        x, _ = _maybe_scan(body_fn, x, (params["dec_layers"], K, V),
+                           cfg.scan_layers)
+        return L.rms_norm(x, params["final_norm"]), jnp.asarray(0.0)
+
+    def loss(self, params, batch):
+        x, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        nll = _xent_full(x, params["unembed"].astype(x.dtype), labels, mask)
+        return nll, {"nll": nll, "aux": aux}
+
+    def init_cache(self, batch_size: int, max_len: int, enc_len: int,
+                   dtype=None) -> dict:
+        cfg = self.cfg
+        dt = dtype or _dtype(cfg)
+        Lc, B = cfg.n_layers, batch_size
+        fill = max_len - 1
+        return {
+            "k": jnp.zeros((Lc, B, cfg.n_kv_heads, max_len, cfg.head_dim), dt),
+            "v": jnp.zeros((Lc, B, cfg.n_kv_heads, max_len, cfg.head_dim), dt),
+            "xk": jnp.zeros((Lc, B, cfg.n_kv_heads, enc_len, cfg.head_dim), dt),
+            "xv": jnp.zeros((Lc, B, cfg.n_kv_heads, enc_len, cfg.head_dim), dt),
+            "len": jnp.asarray(fill, jnp.int32),
+            "pos": jnp.asarray(fill, jnp.int32),
+        }
+
+    def prefill(self, params, batch, headroom: int = 64):
+        """Encode + prime decoder cache with the prompt tokens."""
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"])
+        XK, XV = self._cross_kv(params, enc)
+        x = params["embed"].astype(_dtype(cfg))[batch["tokens"]]
+        B, S, _ = x.shape
+        positions = jnp.arange(S)[None, :]
+
+        def body(x, inp):
+            p_l, xk, xv = inp
+            h = L.rms_norm(x, p_l["self_norm"])
+            a, (kk, vv) = L.attention_forward(p_l["self_attn"], h, cfg,
+                                              positions=positions)
+            x = x + a
+            h = L.rms_norm(x, p_l["cross_norm"])
+            a, _ = L.attention_forward(p_l["cross_attn"], h, cfg,
+                                       positions=positions, causal=False,
+                                       kv_override=(xk, xv))
+            x = x + a
+            x = x + L.mlp_forward(p_l["mlp"], L.rms_norm(x, p_l["mlp_norm"]))
+            return x, (kk, vv)
+
+        x, (K, V) = _maybe_scan(body, x, (params["dec_layers"], XK, XV),
+                                cfg.scan_layers)
+        x = L.rms_norm(x[:, -1], params["final_norm"])
+        logits = x @ params["unembed"].astype(x.dtype)
+        pad4 = ((0, 0), (0, 0), (0, 0), (0, headroom), (0, 0))
+        cache = {"k": jnp.pad(K, pad4), "v": jnp.pad(V, pad4),
+                 "xk": XK, "xv": XV,
+                 "len": jnp.asarray(S, jnp.int32),
+                 "pos": jnp.asarray(S, jnp.int32)}
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        x = params["embed"].astype(dt)[tokens]
+        vlen = cache["len"]
+        pos = cache.get("pos", vlen)
+        enc_len = cache["xk"].shape[3]
+
+        def body(x, inp):
+            p_l, ck, cv, xk, xv = inp
+            h = L.rms_norm(x, p_l["self_norm"])
+            y, ck, cv = L.attention_decode(p_l["self_attn"], h, cfg, ck, cv,
+                                           vlen, pos)
+            x = x + y
+            h = L.rms_norm(x, p_l["cross_norm"])
+            from repro.kernels import ops
+            B, d = h.shape
+            q = (h @ p_l["cross_attn"]["wq"].astype(dt)).reshape(
+                B, cfg.n_heads, cfg.head_dim)
+            y = ops.decode_attention(
+                q, xk, xv, jnp.full((B,), enc_len, jnp.int32),
+                use_pallas=cfg.use_pallas)
+            x = x + y.reshape(B, -1) @ p_l["cross_attn"]["wo"].astype(dt)
+            x = x + L.mlp_forward(p_l["mlp"], L.rms_norm(x, p_l["mlp_norm"]))
+            return x, (ck, cv)
+
+        x, (K, V) = _maybe_scan(
+            body, x,
+            (params["dec_layers"], cache["k"], cache["v"],
+             cache["xk"], cache["xv"]), cfg.scan_layers)
+        x = L.rms_norm(x, params["final_norm"])
+        logits = x @ params["unembed"].astype(dt)
+        cap = cache["k"].shape[3]
+        return logits, dict(cache, k=K, v=V,
+                            len=jnp.minimum(vlen + 1, cap), pos=pos + 1)
+
+
+def build_model(cfg: ArchConfig):
+    return EncDecModel(cfg) if cfg.encdec is not None else Model(cfg)

@@ -1,0 +1,125 @@
+"""Serving engine: prefill + continuous-batching decode over the JAX models.
+
+This is the data plane the VineLM controller selects among: each engine
+hosts one model (one of the assigned architectures, or a tiny zoo member
+in the e2e example) and exposes `submit -> RequestRecord` with the same
+telemetry the paper logs on Bedrock/SGLang (§4.4): time-to-first-token,
+decode time, token counts — used to build trie cost/latency annotations
+and to drive the load-aware latency adjustment.
+
+Fault tolerance / straggler mitigation: per-request deadline with hedged
+re-queue (`ServingScheduler`), bounded queue with backpressure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    request_id: int
+    tokens_in: int
+    tokens_out: int
+    ttft_s: float          # time to first token (prefill)
+    decode_s: float        # total decode wall time
+    queue_s: float         # time spent queued
+    output: np.ndarray     # generated token ids
+    hedged: bool = False
+
+    @property
+    def total_s(self) -> float:
+        return self.queue_s + self.ttft_s + self.decode_s
+
+
+class ServingEngine:
+    """One model endpoint.  Single-threaded step-loop engine (the container
+    has one core); the scheduler below provides batching and hedging."""
+
+    def __init__(self, name: str, model, params, *, max_len: int = 512,
+                 price_per_1k: float = 1.0):
+        self.name = name
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.price_per_1k = price_per_1k
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill)
+        self.inflight = 0  # live queue depth, read by the load model
+
+    def generate(self, tokens: np.ndarray, max_new: int = 32,
+                 eos: int | None = None, greedy: bool = True,
+                 key=None) -> tuple[np.ndarray, float, float]:
+        """tokens: (B, S) prompt -> (outputs (B, <=max_new), ttft, decode_s)."""
+        self.inflight += 1
+        try:
+            t0 = time.perf_counter()
+            batch = {"tokens": jnp.asarray(tokens)}
+            logits, cache = self._prefill(self.params, batch)
+            logits.block_until_ready()
+            ttft = time.perf_counter() - t0
+
+            outs = []
+            t1 = time.perf_counter()
+            cur = jnp.argmax(logits, -1).astype(jnp.int32)
+            key = key if key is not None else jax.random.PRNGKey(0)
+            for i in range(max_new):
+                outs.append(np.asarray(cur))
+                if eos is not None and bool((np.asarray(cur) == eos).all()):
+                    break
+                logits, cache = self._decode(self.params, cache, cur)
+                if greedy:
+                    cur = jnp.argmax(logits, -1).astype(jnp.int32)
+                else:
+                    key, sub = jax.random.split(key)
+                    cur = jax.random.categorical(sub, logits).astype(jnp.int32)
+            decode_s = time.perf_counter() - t1
+            return np.stack(outs, axis=1), ttft, decode_s
+        finally:
+            self.inflight -= 1
+
+    def cost_of(self, tokens_in: int, tokens_out: int) -> float:
+        return self.price_per_1k * (tokens_in * 0.25 + tokens_out) / 1000.0
+
+
+class ServingScheduler:
+    """FIFO scheduler with deadlines + hedged retries (straggler
+    mitigation): a request that exceeds ``hedge_after_s`` is re-submitted
+    once; first completion wins."""
+
+    def __init__(self, engine: ServingEngine, *, hedge_after_s: float = 5.0,
+                 max_queue: int = 256):
+        self.engine = engine
+        self.hedge_after_s = hedge_after_s
+        self.max_queue = max_queue
+        self._queue: deque = deque()
+        self._next_id = 0
+
+    def submit(self, tokens: np.ndarray, max_new: int = 32) -> RequestRecord:
+        if len(self._queue) >= self.max_queue:
+            raise RuntimeError("backpressure: queue full")
+        rid = self._next_id
+        self._next_id += 1
+        tq = time.perf_counter()
+        # single-core container: execute inline; the queue models arrival
+        queue_s = time.perf_counter() - tq
+        t0 = time.perf_counter()
+        out, ttft, dec = self.engine.generate(tokens, max_new=max_new)
+        hedged = False
+        if time.perf_counter() - t0 > self.hedge_after_s:
+            # hedge: one retry; keep the faster result (here: the retry
+            # timing, mirroring tail-cutting behaviour on a real fleet)
+            out2, ttft2, dec2 = self.engine.generate(tokens, max_new=max_new)
+            if ttft2 + dec2 < ttft + dec:
+                out, ttft, dec = out2, ttft2, dec2
+            hedged = True
+        return RequestRecord(
+            request_id=rid, tokens_in=int(np.prod(tokens.shape)),
+            tokens_out=int(out.shape[1]), ttft_s=ttft, decode_s=dec,
+            queue_s=queue_s, output=out, hedged=hedged)

@@ -1,0 +1,98 @@
+"""Queueing/load simulator + utilization-conditioned slowdown model.
+
+Mirrors the paper's §5.4 methodology: they injected N in {0,1,2,4,8,16,32}
+higher-priority dummy requests against an SGLang backend, measured target-
+request slowdown at each load level, and fit a utilization-conditioned
+slowdown curve used to inflate latency estimates during evaluation.
+
+Here the "backend" is a processor-sharing queue: with N active requests on
+an engine with concurrency c, service rate per request degrades as
+    slowdown(N) = max(1, (N + 1) / c) * (1 + jitter)
+`fit_slowdown_curve` replays the same N-sweep on the queue and fits the
+curve; `LoadTrace` produces time-varying per-engine background load for the
+Fig-10 experiment; `delay_probe` converts live queue depth into the
+controller's delta_e(t) terms (§4.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class EngineLoadModel:
+    """Processor-sharing slowdown: service time multiplies by
+    max(1, occupancy / concurrency)."""
+
+    name: str
+    concurrency: int = 4
+    jitter: float = 0.05
+
+    def slowdown(self, n_active: float, rng=None) -> float:
+        base = max(1.0, (n_active + 1.0) / self.concurrency)
+        if rng is not None:
+            base *= 1.0 + self.jitter * abs(rng.standard_normal())
+        return float(base)
+
+
+def fit_slowdown_curve(model: EngineLoadModel,
+                       levels=(0, 1, 2, 4, 8, 16, 32),
+                       reps: int = 50, seed: int = 0):
+    """Replay the paper's N-dummy-request experiment; fit slowdown ~ a + b*N
+    (piecewise-linear beyond the knee).  Returns (levels, means, (a, b))."""
+    rng = np.random.default_rng(seed)
+    means = []
+    for n in levels:
+        s = [model.slowdown(n, rng) for _ in range(reps)]
+        means.append(float(np.mean(s)))
+    lv = np.asarray(levels, dtype=np.float64)
+    mu = np.asarray(means)
+    # fit on the saturated region (where queueing actually bites)
+    sat = lv >= model.concurrency - 1
+    if sat.sum() >= 2:
+        b, a = np.polyfit(lv[sat], mu[sat], 1)
+    else:
+        b, a = np.polyfit(lv, mu, 1)
+    return lv, mu, (float(a), float(b))
+
+
+@dataclasses.dataclass
+class LoadTrace:
+    """Time-varying background load per engine: piecewise-constant number
+    of active background requests, regime-switching every ``period_s``."""
+
+    engines: dict[str, EngineLoadModel]
+    period_s: float = 20.0
+    max_load: int = 24
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        # sorted: set/dict iteration order is hash-randomized across
+        # processes — engine->trace assignment must be reproducible
+        self._regimes = {
+            e: rng.integers(0, self.max_load + 1, size=512)
+            for e in sorted(self.engines)
+        }
+
+    def load_at(self, engine: str, t: float) -> int:
+        idx = int(t / self.period_s) % 512
+        return int(self._regimes[engine][idx])
+
+    def slowdown_at(self, engine: str, t: float, rng=None) -> float:
+        return self.engines[engine].slowdown(self.load_at(engine, t), rng)
+
+    def delay_probe(self, mean_service_s: dict[str, float]):
+        """Controller-facing probe: delta_e(t) = (slowdown - 1) x mean
+        service time of engine e — the expected extra latency a new stage
+        invocation on e would experience (paper §4.3)."""
+
+        def probe(t: float) -> dict[str, float]:
+            return {
+                e: (self.engines[e].slowdown(self.load_at(e, t)) - 1.0)
+                * mean_service_s.get(e, 1.0)
+                for e in self.engines
+            }
+
+        return probe

@@ -1,0 +1,71 @@
+"""Tiny real-model zoo for the end-to-end example.
+
+Builds a ladder of small decoder LMs of increasing width/depth, trains each
+briefly on the same Markov source, and wraps them in serving engines.  The
+ladder reproduces the paper's setting *with real invocations*: bigger
+members are genuinely more accurate and genuinely slower/costlier, so the
+VineLM trie is profiled and controlled against real model behaviour.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.data import DataConfig, MarkovLMData
+from repro.models import build_model
+from repro.models.config import ArchConfig
+from repro.serving.engine import ServingEngine
+from repro.train import OptConfig, TrainConfig, make_train_step
+
+_LADDER = [
+    # name, layers, d_model, heads, steps, price ($/1k tok)
+    ("zoo-s", 1, 32, 2, 80, 0.2),
+    ("zoo-m", 2, 64, 4, 200, 1.0),
+    ("zoo-l", 3, 128, 4, 500, 5.0),
+]
+
+
+def _cfg(layers, d, heads, vocab) -> ArchConfig:
+    return ArchConfig(
+        name=f"zoo-{layers}x{d}", family="dense", n_layers=layers,
+        d_model=d, n_heads=heads, n_kv_heads=heads, d_ff=4 * d,
+        vocab=vocab, head_dim=d // heads, remat="none", dtype="float32")
+
+
+def build_zoo(vocab: int = 64, seq_len: int = 32, seed: int = 0,
+              ladder=_LADDER, kgram: int = 2) -> dict[str, ServingEngine]:
+    """Train the ladder and return name -> ServingEngine."""
+    engines: dict[str, ServingEngine] = {}
+    for name, layers, d, heads, steps, price in ladder:
+        cfg = _cfg(layers, d, heads, vocab)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(seed))
+        data = MarkovLMData(DataConfig(vocab=vocab, seq_len=seq_len,
+                                       batch=16, seed=seed, kgram=kgram))
+        init_state, step_fn = make_train_step(
+            model, TrainConfig(opt=OptConfig(peak_lr=5e-3, warmup_steps=10,
+                                             total_steps=steps)))
+        state = init_state(params)
+        step_fn = jax.jit(step_fn)
+        for _ in range(steps):
+            params, state, _ = step_fn(params, state, data.next_batch())
+        engines[name] = ServingEngine(name, model, params,
+                                      price_per_1k=price)
+    return engines
+
+
+def sequence_accuracy(engine: ServingEngine, data: MarkovLMData,
+                      n: int = 32, horizon: int = 8) -> float:
+    """Teacher-forced next-token top-1 accuracy over ``n`` fresh sequences
+    — the ground-truth metric the e2e workflow's stages are scored on."""
+    batch = data.next_batch()
+    toks = batch["tokens"][:n]
+    labels = batch["labels"][:n]
+    import jax.numpy as jnp
+    model, params = engine.model, engine.params
+    x, _ = model.forward(params, {"tokens": jnp.asarray(toks)})
+    logits = x @ model.unembed_matrix(params)
+    pred = np.asarray(jnp.argmax(logits, -1))
+    return float((pred == labels).mean())

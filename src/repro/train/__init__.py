@@ -1,0 +1,9 @@
+"""Training substrate: optimizers, train step, fault-tolerant loop."""
+from repro.train.checkpoint import CheckpointManager, install_preemption_handler
+from repro.train.loop import LoopConfig, train
+from repro.train.optimizer import OptConfig, make_optimizer
+from repro.train.step import TrainConfig, make_train_step
+
+__all__ = ["CheckpointManager", "LoopConfig", "OptConfig", "TrainConfig",
+           "install_preemption_handler", "make_optimizer", "make_train_step",
+           "train"]

@@ -1,0 +1,228 @@
+"""Optimizers: AdamW (optionally int8-quantized moments) and Adafactor.
+
+No optax in this container — implemented directly as (init, update) pairs
+over parameter pytrees.  Notable features for the 480B-scale archs:
+
+- ``quantize_moments``: stores Adam m/v as int8 with per-tensor-block
+  scales (8x optimizer-memory reduction; beyond-paper memory lever);
+- Adafactor: factored second moment (rank-1 row/col statistics) for
+  matrices — O(n+m) state instead of O(nm);
+- global-norm clipping, decoupled weight decay, cosine schedule w/ warmup.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"          # adamw | adafactor
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    quantize_moments: bool = False
+    quant_block: int = 256
+
+
+def cosine_lr(cfg: OptConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.peak_lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+# ----------------------------------------------------------------------
+# int8 block quantization for optimizer moments
+# ----------------------------------------------------------------------
+def _quant(x: jnp.ndarray, block: int):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant(q: jnp.ndarray, scale: jnp.ndarray, shape, block: int):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+_LOG_FLOOR = 1e-24
+
+
+def _quant_log(x: jnp.ndarray, block: int):
+    """Log-domain int8 for non-negative second moments: linear absmax
+    quantization under-resolves v's dynamic range inside a block (tiny v
+    rounds to 0 -> exploding Adam denominators); ~0.2 log-units of
+    resolution keeps relative error ~20% which Adam tolerates."""
+    lg = jnp.log(jnp.maximum(x, _LOG_FLOOR))
+    flat = lg.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    lo = flat.min(axis=1, keepdims=True)
+    hi = flat.max(axis=1, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-6) / 254.0
+    q = jnp.clip(jnp.round((flat - lo) / scale) - 127, -127, 127).astype(jnp.int8)
+    return q, jnp.concatenate([lo, scale], axis=1).astype(jnp.float32)
+
+
+def _dequant_log(q: jnp.ndarray, meta: jnp.ndarray, shape, block: int):
+    lo, scale = meta[:, :1], meta[:, 1:2]
+    lg = (q.astype(jnp.float32) + 127.0) * scale + lo
+    flat = jnp.exp(lg).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    v = flat[:n].reshape(shape)
+    return jnp.where(v <= 2 * _LOG_FLOOR, 0.0, v)
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+# ----------------------------------------------------------------------
+# AdamW
+# ----------------------------------------------------------------------
+def adamw(cfg: OptConfig):
+    def init(params):
+        def zeros_m(p):
+            if cfg.quantize_moments and p.size >= cfg.quant_block:
+                q, s = _quant(jnp.zeros_like(p, jnp.float32), cfg.quant_block)
+                return {"q": q, "s": s}
+            return jnp.zeros_like(p, jnp.float32)
+
+        def zeros_v(p):
+            if cfg.quantize_moments and p.size >= cfg.quant_block:
+                q, s = _quant_log(jnp.zeros_like(p, jnp.float32),
+                                  cfg.quant_block)
+                return {"q": q, "s": s}
+            return jnp.zeros_like(p, jnp.float32)
+
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros_m, params),
+            "v": jax.tree.map(zeros_v, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = cosine_lr(cfg, step)
+        gnorm = _global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+        def leaf(g, m_st, v_st, p):
+            g = g.astype(jnp.float32) * scale
+            quant = isinstance(m_st, dict)
+            m = _dequant(m_st["q"], m_st["s"], g.shape, cfg.quant_block) \
+                if quant else m_st
+            v = _dequant_log(v_st["q"], v_st["s"], g.shape, cfg.quant_block) \
+                if quant else v_st
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * g * g
+            mhat = m / (1 - cfg.b1 ** step.astype(jnp.float32))
+            vhat = v / (1 - cfg.b2 ** step.astype(jnp.float32))
+            upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            if quant:
+                mq, ms = _quant(m, cfg.quant_block)
+                vq, vs = _quant_log(v, cfg.quant_block)
+                return new_p, {"q": mq, "s": ms}, {"q": vq, "s": vs}
+            return new_p, m, v
+
+        is_q = lambda x: isinstance(x, dict) and set(x) == {"q", "s"}
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = jax.tree.flatten(state["m"], is_leaf=is_q)[0]
+        flat_v = jax.tree.flatten(state["v"], is_leaf=is_q)[0]
+        flat_p = jax.tree.flatten(params)[0]
+        out = [leaf(g, m, v, p) for g, m, v, p
+               in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"step": step, "m": new_m, "v": new_v}, \
+            {"lr": lr, "grad_norm": gnorm}
+
+    return init, update
+
+
+# ----------------------------------------------------------------------
+# Adafactor (factored second moment; for the 480B-class archs)
+# ----------------------------------------------------------------------
+def adafactor(cfg: OptConfig):
+    def init(params):
+        def st(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree.map(st, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = cosine_lr(cfg, step)
+        gnorm = _global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        decay = 1.0 - step.astype(jnp.float32) ** -0.8
+
+        def leaf(g, v_st, p):
+            g = g.astype(jnp.float32) * scale
+            g2 = g * g + 1e-30
+            if p.ndim >= 2:
+                vr = decay * v_st["vr"] + (1 - decay) * g2.mean(-1)
+                vc = decay * v_st["vc"] + (1 - decay) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1, keepdims=True)[..., None],
+                                       1e-30))
+                upd = g / (jnp.sqrt(denom) + 1e-30)
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                v = decay * v_st["v"] + (1 - decay) * g2
+                upd = g / (jnp.sqrt(v) + 1e-30)
+                new_v = {"v": v}
+            # update clipping (Adafactor's d=1.0 RMS rule)
+            rms = jnp.sqrt(jnp.mean(upd * upd) + 1e-30)
+            upd = upd / jnp.maximum(1.0, rms)
+            if p.ndim >= 2:
+                upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), new_v
+
+        is_st = lambda x: isinstance(x, dict) and (
+            set(x) == {"vr", "vc"} or set(x) == {"v"})
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_v = jax.tree.flatten(state["v"], is_leaf=is_st)[0]
+        flat_p = jax.tree.flatten(params)[0]
+        out = [leaf(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_v = tdef.unflatten([o[1] for o in out])
+        return new_p, {"step": step, "v": new_v}, \
+            {"lr": lr, "grad_norm": gnorm}
+
+    return init, update
+
+
+def make_optimizer(cfg: OptConfig):
+    return adafactor(cfg) if cfg.kind == "adafactor" else adamw(cfg)

@@ -1,0 +1,97 @@
+"""Training step: value_and_grad + optimizer, with gradient accumulation
+and int8 error-feedback gradient compression (optional).
+
+``make_train_step`` returns a pure function suitable for jit/pjit —
+the dry-run lowers exactly this function for every (arch x train shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import OptConfig, make_optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    accum_steps: int = 1          # grad accumulation microbatches
+    compress_grads: bool = False  # int8 error-feedback compression
+    compress_block: int = 256
+
+
+def _compress_ef(grads, err, block):
+    """int8 error-feedback compression (numerical-fidelity model of on-wire
+    gradient compression: quantize (g + e), carry the residual e forward)."""
+    from repro.train.optimizer import _dequant, _quant
+
+    def leaf(g, e):
+        tot = g.astype(jnp.float32) + e
+        if g.size < block:
+            return tot, jnp.zeros_like(e)
+        q, s = _quant(tot, block)
+        deq = _dequant(q, s, g.shape, block)
+        return deq, tot - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.flatten(err)[0]
+    out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in out]), \
+        tdef.unflatten([o[1] for o in out])
+
+
+def make_train_step(model, tcfg: TrainConfig):
+    opt_init, opt_update = make_optimizer(tcfg.opt)
+
+    def init_state(params):
+        st = {"opt": opt_init(params)}
+        if tcfg.compress_grads:
+            st["ef_err"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return st
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, state, batch):
+        if tcfg.accum_steps > 1:
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                (loss, _), grads = grad_fn(params, mb)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return (acc, loss_acc + loss), ()
+
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape((tcfg.accum_steps,
+                                     x.shape[0] // tcfg.accum_steps)
+                                    + x.shape[1:]),
+                batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                micro, (zero, jnp.asarray(0.0, jnp.float32)), micro_batches)
+            grads = jax.tree.map(lambda g: g / tcfg.accum_steps, grads)
+            loss = loss_sum / tcfg.accum_steps
+            metrics = {}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        new_state = dict(state)
+        if tcfg.compress_grads:
+            grads, new_err = _compress_ef(grads, state["ef_err"],
+                                          tcfg.compress_block)
+            new_state["ef_err"] = new_err
+        new_params, new_opt, opt_metrics = opt_update(
+            grads, state["opt"], params)
+        new_state["opt"] = new_opt
+        out_metrics = {"loss": loss, **opt_metrics}
+        out_metrics.update({k: v for k, v in metrics.items()})
+        return new_params, new_state, out_metrics
+
+    return init_state, train_step

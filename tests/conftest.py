@@ -1,0 +1,11 @@
+import os
+import sys
+
+# smoke tests and benches must see the real (single) device count — the
+# 512-device override belongs ONLY to repro.launch.dryrun
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")

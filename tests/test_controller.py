@@ -1,0 +1,127 @@
+"""Controller equivalence (vectorized == DFS == JAX) and online semantics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.controller import Objective, select_path, select_path_dfs
+from repro.core.controller_jax import TrieDevice, make_batched_planner
+from repro.core.trie import Trie, TrieAnnotations
+from repro.core.workflow import ModelSpec, make_refinement_workflow
+from repro.core.workload import generate_workload
+from repro.core.profiler import profile_cascade
+from repro.core.estimators import annotate
+
+
+def _setup(n_models=4, repairs=2, n_q=200, seed=0):
+    models = [ModelSpec(f"m{i}", 0.001 * (i + 1), 0.1, 0.001,
+                        0.3 + 0.5 * i / max(n_models - 1, 1),
+                        engine=f"e{i % 2}")
+              for i in range(n_models)]
+    tpl = make_refinement_workflow("t", models, max_repairs=repairs)
+    trie = Trie.build(tpl)
+    wl = generate_workload(tpl, n_q, seed=seed)
+    return trie, wl.exact_annotations(trie)
+
+
+def _key(trie, ann, obj, root, node):
+    if node < 0:
+        return None
+    dc = ann.cost[node] - ann.cost[root]
+    dl = ann.lat[node] - ann.lat[root]
+    if obj.kind == "min_cost":
+        return (round(dc, 9), round(dl, 9))
+    return (round(ann.acc[node], 9), round(dc, 9))
+
+
+@given(seed=st.integers(0, 100), kind=st.sampled_from(["min_cost", "max_acc"]),
+       pct=st.floats(0.05, 0.95), root_pick=st.integers(0, 30),
+       elapsed=st.floats(0, 3))
+@settings(max_examples=40)
+def test_vectorized_equals_dfs(seed, kind, pct, root_pick, elapsed):
+    trie, ann = _setup(seed=seed % 4)
+    if kind == "min_cost":
+        floor = float(np.quantile(ann.acc[trie.terminal], pct))
+        obj = Objective("min_cost", acc_floor=floor,
+                        lat_cap=float(np.quantile(ann.lat[trie.terminal], 0.8)))
+    else:
+        obj = Objective("max_acc",
+                        cost_cap=float(np.quantile(ann.cost[trie.terminal], pct)),
+                        lat_cap=float(np.quantile(ann.lat[trie.terminal], 0.7)))
+    root = root_pick % trie.n_nodes
+    a = select_path(trie, ann, obj, root=root, elapsed_lat=elapsed)
+    b = select_path_dfs(trie, ann, obj, root=root, elapsed_lat=elapsed)
+    assert _key(trie, ann, obj, root, a) == _key(trie, ann, obj, root, b)
+
+
+def test_jax_controller_matches_numpy():
+    trie, ann = _setup()
+    # thresholds strictly between data values: borderline feasibility is
+    # float32-fuzzy in the device planner (documented tolerance 1e-6)
+    for obj in [Objective("max_acc", lat_cap=5.0),
+                Objective("max_acc",
+                          cost_cap=float(np.median(ann.cost[1:])) * 1.003),
+                Objective("min_cost", acc_floor=0.503)]:
+        td = TrieDevice.build(trie, ann)
+        plan = make_batched_planner(td, obj)
+        roots = np.array([0, 1, 5, 9], dtype=np.int32) % trie.n_nodes
+        el = np.array([0.0, 0.5, 1.0, 2.0], dtype=np.float32)
+        got = np.asarray(plan(roots, el, np.zeros(4, np.float32),
+                              np.zeros(td.n_engines, np.float32)))
+        want = [select_path(trie, ann, obj, root=int(r), elapsed_lat=float(e))
+                for r, e in zip(roots, el)]
+        for g, w, r in zip(got, want, roots):
+            assert _key(trie, ann, obj, int(r), int(g)) == \
+                _key(trie, ann, obj, int(r), int(w))
+
+
+def test_load_aware_steers_away_from_slow_engine():
+    """Inflating one engine's latency must never pick a *slower* plan and
+    must steer selection off the congested engine when a peer exists."""
+    trie, ann = _setup()
+    obj = Objective("max_acc", lat_cap=float(np.quantile(ann.lat[1:], 0.45)))
+    base = select_path(trie, ann, obj)
+    assert base >= 0
+    models_on = set()
+    u = base
+    while u != 0:
+        models_on.add(int(trie.model[u]))
+        u = int(trie.parent[u])
+    # congest every engine used by the chosen plan
+    engines = {trie.template.models[m].engine for m in models_on}
+    delays = {e: 100.0 for e in engines}
+    alt = select_path(trie, ann, obj, engine_delays=delays)
+    if alt >= 0:
+        alt_models = set()
+        u = alt
+        while u != 0:
+            alt_models.add(int(trie.model[u]))
+            u = int(trie.parent[u])
+        alt_engines = {trie.template.models[m].engine for m in alt_models}
+        assert not (alt_engines & engines), "should avoid congested engines"
+
+
+def test_monotone_budget_feasibility():
+    """Tighter latency budgets can only shrink the feasible set: accuracy
+    of the selected plan is non-increasing as the cap tightens."""
+    trie, ann = _setup()
+    caps = np.quantile(ann.lat[trie.terminal], [0.9, 0.6, 0.3, 0.1])
+    prev = 1.1
+    for cap in caps:
+        node = select_path(trie, ann, Objective("max_acc", lat_cap=float(cap)))
+        acc = ann.acc[node] if node >= 0 else 0.0
+        assert acc <= prev + 1e-12
+        prev = acc
+
+
+def test_rerooting_consistency():
+    """After re-rooting at a child, the newly selected plan must be a
+    descendant of that child and respect the reduced budget."""
+    trie, ann = _setup()
+    obj = Objective("max_acc", lat_cap=float(np.quantile(ann.lat[1:], 0.7)))
+    child = int(trie.child[0, 1])
+    spent = float(ann.lat[child]) * 1.5  # ran slower than expected
+    node = select_path(trie, ann, obj, root=child, elapsed_lat=spent)
+    if node >= 0:
+        lo, hi = trie.descendants_interval(child)
+        assert lo <= node < hi
+        assert (ann.lat[node] - ann.lat[child]) <= obj.lat_cap - spent + 1e-9

@@ -1,0 +1,121 @@
+"""Sharding rules + multi-device pjit integration (8 fake CPU devices in a
+subprocess so the main test process keeps a single device)."""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.dist.sharding import batch_specs, cache_specs, spec_tree
+from repro.models import build_model
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_spec_tree_covers_all_params(arch):
+    """Every full-config param leaf gets a spec whose sharded dims divide
+    evenly on the production mesh (16x16)."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = spec_tree(sds, _FakeMesh())
+    flat_s, _ = jax.tree_util.tree_flatten_with_path(sds)
+    flat_p = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p)
+    mesh_sizes = {"data": 16, "model": 16, ("pod", "data"): 32}
+    big_unsharded = []
+    for (path, leaf), spec in zip(flat_s, flat_p):
+        assert len(spec) <= len(leaf.shape)
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            size = 16 if isinstance(ax, str) else 32
+            assert leaf.shape[dim] % size == 0, (path, leaf.shape, spec)
+        # every large tensor must be sharded on at least one axis
+        if int(np.prod(leaf.shape)) > 4 * 2**20 and all(a is None for a in spec):
+            big_unsharded.append((path, leaf.shape))
+    assert not big_unsharded, big_unsharded
+
+
+def test_batch_and_cache_specs():
+    cfg = get_config("yi-9b")
+    model = build_model(cfg)
+    mesh = _FakeMesh()
+    b = batch_specs({"tokens": jax.ShapeDtypeStruct((256, 4096), jax.numpy.int32)},
+                    mesh)
+    assert b["tokens"][0] == "data"
+    cache = jax.eval_shape(lambda: model.init_cache(128, 32768))
+    cs = cache_specs(cache, mesh)
+    # kv=4 not divisible by 16 -> sequence-sharded cache
+    assert cs["k"][3] == "model"
+    assert cs["k"][1] == "data"
+    # batch of 1: no data sharding
+    cache1 = jax.eval_shape(lambda: model.init_cache(1, 1024))
+    cs1 = cache_specs(cache1, mesh)
+    assert cs1["k"][1] is None
+
+
+def test_multidevice_sharded_train_step():
+    """pjit train step on a 4x2 mesh of fake CPU devices: runs, loss
+    finite, and matches the single-device result."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+from repro.configs import get_config
+from repro.models import build_model
+from repro.dist.sharding import sharding_tree, batch_specs
+from repro.train import OptConfig, TrainConfig, make_train_step
+from repro.data import DataConfig, MarkovLMData
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+# compare loss + gradient norm: elementwise post-Adam params are
+# ill-conditioned (update ~ sign(g) where g ~ 0, so f32 reduction-order
+# drift between shardings flips individual elements)
+for arch, loss_rtol in (("yi-9b", 2e-4), ("granite-moe-1b-a400m", 2e-2)):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    data = MarkovLMData(DataConfig(vocab=cfg.vocab, seq_len=32, batch=8,
+                                   kgram=1))
+    batch = data.next_batch()
+    init_state, step = make_train_step(model, TrainConfig(
+        opt=OptConfig(peak_lr=1e-3, warmup_steps=0, total_steps=10)))
+    state = init_state(params)
+    p1, s1, m1 = jax.jit(step)(params, state, batch)
+    with mesh:
+        psh = sharding_tree(params, mesh)
+        params_s = jax.device_put(params, psh)
+        state_s = jax.device_put(state, jax.tree.map(
+            lambda x: NamedSharding(mesh, PartitionSpec()), state))
+        p2, s2, m2 = jax.jit(step)(params_s, state_s, batch)
+    assert np.isfinite(float(m2["loss"])), arch
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=loss_rtol)
+    np.testing.assert_allclose(float(m1["grad_norm"]),
+                               float(m2["grad_norm"]), rtol=max(loss_rtol, 1e-3))
+    # params must at least move comparably in aggregate (MoE: routing
+    # near-ties under different reduction orders shift expert gradients)
+    d1 = sum(float(jnp.sum((a - b) ** 2)) for a, b in
+             zip(jax.tree.leaves(p1), jax.tree.leaves(params)))
+    d2 = sum(float(jnp.sum((a - b) ** 2)) for a, b in
+             zip(jax.tree.leaves(p2), jax.tree.leaves(params)))
+    np.testing.assert_allclose(d1, d2, rtol=0.05 if arch == "yi-9b" else 0.3)
+print("PJIT_OK")
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=REPO, timeout=560)
+    assert "PJIT_OK" in r.stdout, r.stderr[-3000:]

@@ -1,0 +1,81 @@
+"""Estimator correctness: MNAR bias signs, decomposition consistency,
+paper Table-1 ordering."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.estimators import ESTIMATORS, _compose, annotate
+from repro.core.profiler import profile_cascade
+from repro.core.trie import Trie
+from repro.core.workflow import ModelSpec, make_refinement_workflow
+from repro.core.workload import generate_workload
+
+
+def _setup(n_models=4, repairs=2, n_q=400, seed=0):
+    models = [ModelSpec(f"m{i}", 0.001 * (i + 1), 0.1, 0.001,
+                        0.3 + 0.5 * i / max(n_models - 1, 1))
+              for i in range(n_models)]
+    tpl = make_refinement_workflow("t", models, max_repairs=repairs)
+    trie = Trie.build(tpl)
+    wl = generate_workload(tpl, n_q, seed=seed)
+    return trie, wl
+
+
+def test_decomposition_identity():
+    """Feeding exact conditionals through eq.(7)-(9) reproduces exact path
+    means: mu(u) = mu(p) + (1-mu(p)) q(u)."""
+    trie, wl = _setup(n_models=3, n_q=200)
+    A, _, reached = wl.node_tables(trie)
+    truth = A.mean(0)
+    q_exact = np.zeros(trie.n_nodes)
+    for u in range(1, trie.n_nodes):
+        r = reached[:, u].astype(bool)
+        if r.any():
+            q_exact[u] = A[r, u].mean()
+    mu = _compose(trie, q_exact)
+    # exact when every node is reached by at least one request
+    covered = np.array([reached[:, u].any() for u in range(trie.n_nodes)])
+    err = np.abs(mu[covered] - truth[covered])
+    assert err.max() < 1e-9
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=8)
+def test_bias_signs(seed):
+    """Paper Table 1: direct averaging pessimistic on deep paths, prefix
+    fill-in optimistic, cascade decomposition ~unbiased."""
+    trie, wl = _setup(seed=seed % 3, n_q=500)
+    A, _, _ = wl.node_tables(trie)
+    truth = A.mean(0)
+    prof = profile_cascade(wl, trie, 0.03, seed=seed)
+    deep = trie.depth >= 2
+    da = ESTIMATORS["direct_average"](trie, prof)
+    pa = ESTIMATORS["prefix_avg"](trie, prof)
+    vl = ESTIMATORS["vinelm_lite"](trie, prof)
+    assert (da - truth)[deep].mean() < -0.02, "direct avg should be pessimistic"
+    assert (pa - truth)[deep].mean() > 0.02, "prefix avg should be optimistic"
+    assert abs((vl - truth)[deep].mean()) < 0.05, "decomposition should be ~unbiased"
+
+
+def test_table1_ordering():
+    trie, wl = _setup(n_models=6, n_q=800)
+    A, _, _ = wl.node_tables(trie)
+    truth = A.mean(0)
+    prof = profile_cascade(wl, trie, 0.02, seed=1, calibration_fraction=0.15)
+    d = trie.depth > 0
+    mae = {name: np.abs(ESTIMATORS[name](trie, prof)[d] - truth[d]).mean()
+           for name in ESTIMATORS}
+    assert mae["vinelm"] <= mae["vinelm_lite"] * 1.05
+    assert mae["vinelm_lite"] < mae["prefix_avg"]
+    assert mae["vinelm"] < mae["prefix_impute"]
+    assert mae["prefix_avg"] < mae["direct_average"]
+
+
+def test_vinelm_monotone_annotations():
+    """Cascade-decomposition estimates are monotone by construction, so the
+    controller's pruning assumptions hold on estimated tries too."""
+    trie, wl = _setup()
+    prof = profile_cascade(wl, trie, 0.03, seed=2)
+    ann = annotate(trie, prof, "vinelm")
+    assert ann.check_monotone(trie)
+    assert np.all(ann.acc >= 0) and np.all(ann.acc <= 1)

@@ -1,0 +1,110 @@
+"""Per-architecture smoke tests: reduced configs of each assigned family
+run one forward/train step on CPU asserting shapes + no NaNs, plus
+prefill/decode consistency against the full forward pass."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+from repro.train import OptConfig, TrainConfig, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=16, with_labels=True):
+    batch = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab)}
+    if with_labels:
+        batch["labels"] = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    if cfg.vlm is not None:
+        batch["patch_embeds"] = jax.random.normal(
+            KEY, (B, cfg.vlm.n_patches, cfg.vlm.patch_dim))
+    if cfg.encdec is not None:
+        batch["frames"] = jax.random.normal(
+            KEY, (B, cfg.encdec.encoder_len, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = _batch(cfg)
+    x, aux = jax.jit(model.forward)(params, batch)
+    assert np.isfinite(np.asarray(x, np.float32)).all()
+    expected_seq = batch["tokens"].shape[1] + (
+        cfg.vlm.n_patches if cfg.vlm is not None else 0)
+    assert x.shape[:2] == (2, expected_seq)
+    init_state, step = make_train_step(
+        model, TrainConfig(opt=OptConfig(peak_lr=1e-3, warmup_steps=2,
+                                         total_steps=10)))
+    state = init_state(params)
+    new_params, state, metrics = jax.jit(step)(params, state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # parameters actually moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = dataclasses.replace(get_config(arch, smoke=True), dtype="float32")
+    if cfg.moe is not None:  # capacity drops are batch-size dependent
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=100.0))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab)
+    batch = _batch(cfg, B, S, with_labels=False)
+    batch["tokens"] = toks[:, :S]
+    full = dict(batch, tokens=toks)
+    x_full, _ = model.forward(params, full)
+    w = model.unembed_matrix(params) if hasattr(model, "unembed_matrix") \
+        else params["unembed"].astype(x_full.dtype)
+    logits_pre, cache = model.prefill(params, batch)
+    logits_dec, cache2 = model.decode_step(params, cache, toks[:, S])
+    scale = max(float(np.abs(np.asarray((x_full @ w))).max()), 1.0)
+    np.testing.assert_allclose(
+        np.asarray(logits_pre), np.asarray((x_full @ w)[:, -2]),
+        atol=2e-3 * scale)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec), np.asarray((x_full @ w)[:, -1]),
+        atol=2e-3 * scale)
+    assert int(cache2["len"]) == int(cache["len"]) + 1
+
+
+def test_param_count_sanity():
+    """Analytic parameter counts should be in the ballpark of the names."""
+    approx = {
+        "yi-9b": 9e9, "qwen2-72b": 72e9, "mistral-nemo-12b": 12e9,
+        "arctic-480b": 480e9, "mamba2-1.3b": 1.3e9, "zamba2-2.7b": 2.7e9,
+        "minicpm3-4b": 4e9, "llava-next-34b": 34e9,
+    }
+    for arch, expect in approx.items():
+        n = get_config(arch).param_count()
+        assert 0.5 * expect < n < 1.8 * expect, (arch, n, expect)
+
+
+def test_moe_activated_params():
+    cfg = get_config("arctic-480b")
+    assert cfg.active_param_count() < 0.15 * cfg.param_count()
+
+
+def test_scan_unroll_equivalence():
+    for arch in ["yi-9b", "zamba2-2.7b", "whisper-base"]:
+        outs = []
+        for scan in (True, False):
+            cfg = dataclasses.replace(get_config(arch, smoke=True),
+                                      dtype="float32", scan_layers=scan)
+            model = build_model(cfg)
+            params = model.init(KEY)
+            x, _ = model.forward(params, _batch(cfg, with_labels=False))
+            outs.append(np.asarray(x))
+        np.testing.assert_allclose(outs[0], outs[1], atol=1e-5)

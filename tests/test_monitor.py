@@ -1,0 +1,98 @@
+"""Drift monitoring + recalibration (paper §4.5 'Distribution mismatch')."""
+import numpy as np
+import pytest
+
+from repro.core.controller import Objective, select_path
+from repro.core.monitor import DriftMonitor
+from repro.core.trie import Trie
+from repro.core.workflow import ModelSpec, make_refinement_workflow
+from repro.core.workload import generate_workload
+
+
+def _setup(seed=0, shift=False):
+    models = [ModelSpec(f"m{i}", 0.001 * (i + 1), 0.1, 0.001,
+                        0.35 + 0.4 * i / 2) for i in range(3)]
+    tpl = make_refinement_workflow("t", models, max_repairs=2)
+    trie = Trie.build(tpl)
+    wl = generate_workload(tpl, 500, seed=seed)
+    if shift:
+        # distribution shift: model 2 degrades hard (its stage outcomes
+        # drop to ~15% of their former success rate)
+        rng = np.random.default_rng(7)
+        keep = rng.random(wl.S[:, :, 2].shape) < 0.15
+        wl.S[:, :, 2] = wl.S[:, :, 2] * keep
+    return tpl, trie, wl
+
+
+def _feed(monitor, trie, wl, n=400, seed=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
+        q = int(rng.integers(wl.n_requests))
+        models, lats = [], []
+        u, d = 0, 0
+        success = False
+        while d < trie.template.max_depth:
+            kids = trie.child[u][trie.child[u] >= 0]
+            v = int(rng.choice(kids))
+            m = int(trie.model[v])
+            s, c, lat = wl.execute_stage(q, d, m)
+            models.append(m)
+            lats.append(lat)
+            if s:
+                success = True
+                break
+            u, d = v, d + 1
+        monitor.record_run(models, success, lats)
+
+
+def test_no_false_alarm_in_distribution():
+    tpl, trie, wl = _setup()
+    ann = wl.exact_annotations(trie)
+    mon = DriftMonitor(trie, ann, min_obs=30)
+    _feed(mon, trie, wl, n=600)
+    rep = mon.check()
+    assert not rep.drift_detected, (rep.drifted_nodes, rep.latency_ratio)
+
+
+def test_detects_model_degradation():
+    tpl, trie, wl0 = _setup()
+    ann = wl0.exact_annotations(trie)  # offline view, pre-shift
+    _, _, wl1 = _setup(shift=True)     # live traffic, post-shift
+    mon = DriftMonitor(trie, ann, min_obs=30)
+    _feed(mon, trie, wl1, n=800)
+    rep = mon.check()
+    assert rep.drift_detected
+    drifted_models = {int(trie.model[u]) for u in rep.drifted_nodes}
+    assert 2 in drifted_models  # the degraded model is implicated
+
+
+def test_recalibration_improves_decisions():
+    """After drift, planning on recalibrated annotations must not pick the
+    degraded model where the stale trie would have."""
+    tpl, trie, wl0 = _setup()
+    ann = wl0.exact_annotations(trie)
+    _, _, wl1 = _setup(shift=True)
+    truth1 = wl1.exact_annotations(trie)
+    mon = DriftMonitor(trie, ann, min_obs=30)
+    _feed(mon, trie, wl1, n=1200)
+    recal = mon.recalibrate()
+    # recalibrated accuracies are closer to the post-shift truth
+    d = trie.depth > 0
+    err_stale = np.abs(ann.acc[d] - truth1.acc[d]).mean()
+    err_recal = np.abs(recal.acc[d] - truth1.acc[d]).mean()
+    assert err_recal < err_stale * 0.6, (err_stale, err_recal)
+    # and the selected plan's true accuracy improves (or ties)
+    obj = Objective("max_acc",
+                    cost_cap=float(np.quantile(ann.cost[trie.terminal], 0.5)))
+    stale_node = select_path(trie, ann, obj)
+    recal_node = select_path(trie, recal, obj)
+    assert truth1.acc[recal_node] >= truth1.acc[stale_node] - 1e-9
+
+
+def test_recalibration_monotone():
+    tpl, trie, wl = _setup()
+    ann = wl.exact_annotations(trie)
+    mon = DriftMonitor(trie, ann)
+    _feed(mon, trie, wl, n=300)
+    recal = mon.recalibrate()
+    assert recal.check_monotone(trie)

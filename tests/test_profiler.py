@@ -1,0 +1,70 @@
+"""Cascade profiler: budget accounting, fill-in consistency, checkpointing."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.profiler import exhaustive_cost, profile_cascade
+from repro.core.trie import Trie
+from repro.core.workflow import ModelSpec, make_refinement_workflow
+from repro.core.workload import generate_workload
+
+
+def _setup(n_models=3, repairs=2, n_q=60, seed=0):
+    models = [ModelSpec(f"m{i}", 0.001 * (i + 1), 0.1, 0.001,
+                        0.35 + 0.4 * i / max(n_models - 1, 1))
+              for i in range(n_models)]
+    tpl = make_refinement_workflow("t", models, max_repairs=repairs)
+    trie = Trie.build(tpl)
+    wl = generate_workload(tpl, n_q, seed=seed)
+    return tpl, trie, wl
+
+
+def test_budget_respected():
+    _, trie, wl = _setup()
+    full = exhaustive_cost(wl, trie, checkpointed=False)
+    prof = profile_cascade(wl, trie, 0.05, seed=1)
+    # one cascade run may overshoot by at most the costliest single run
+    assert prof.spent <= 0.05 * full * 1.3
+
+
+def test_cost_regimes_ordering():
+    """Table 2: sparse < checkpointed-exhaustive < naive-exhaustive."""
+    _, trie, wl = _setup(repairs=3)
+    full = exhaustive_cost(wl, trie, checkpointed=False)
+    chk = exhaustive_cost(wl, trie, checkpointed=True)
+    prof = profile_cascade(wl, trie, 0.02, seed=0)
+    assert prof.spent < chk < full
+    assert full / chk > 1.5  # shared-prefix reuse must save materially
+
+
+@given(seed=st.integers(0, 200))
+def test_fillin_and_direct_consistency(seed):
+    """Fill-in entries must match ground truth (success implies success of
+    every extension); direct entries must equal A(q, node)."""
+    _, trie, wl = _setup(seed=seed % 5)
+    prof = profile_cascade(wl, trie, 0.05, seed=seed)
+    A, _, reached = wl.node_tables(trie)
+    obs_mask = prof.obs >= 0
+    assert np.array_equal(prof.obs[obs_mask], A[obs_mask])
+    fill_mask = prof.fill == 1
+    assert np.all(A[fill_mask] == 1)
+    # direct observations only exist where the node was actually reached
+    assert np.all(reached[obs_mask] == 1)
+
+
+def test_checkpointing_saves_money():
+    _, trie, wl = _setup()
+    p_ck = profile_cascade(wl, trie, 0.05, seed=3, checkpointing=True)
+    p_no = profile_cascade(wl, trie, 0.05, seed=3, checkpointing=False)
+    # same budget -> checkpointing executes more runs (reuses prefixes)
+    assert p_ck.checkpoint_hits > 0
+    assert p_ck.runs >= p_no.runs
+
+
+def test_calibration_rows_complete():
+    _, trie, wl = _setup(n_q=40)
+    prof = profile_cascade(wl, trie, 0.2, seed=0, calibration_fraction=0.3)
+    assert len(prof.calibration_rows) >= 1
+    filled = prof.observed_filled()
+    for q in prof.calibration_rows:
+        assert np.all(filled[q, 1:] >= 0), "calibration row not complete"

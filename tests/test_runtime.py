@@ -1,0 +1,96 @@
+"""Online runtime: fine- vs coarse-grained control, SLO behaviour."""
+import numpy as np
+import pytest
+
+from repro.core import presets
+from repro.core.controller import Objective
+from repro.core.estimators import annotate
+from repro.core.murakkab import murakkab_nodes
+from repro.core.profiler import profile_cascade
+from repro.core.runtime import make_workload_executor, run_cohort, summarize
+from repro.core.trie import Trie
+from repro.core.workload import generate_workload
+
+
+@pytest.fixture(scope="module")
+def nl2sql8():
+    trie = Trie.build(presets.nl2sql_8())
+    wl = generate_workload(trie.template, 600, seed=0)
+    exact = wl.exact_annotations(trie)
+    return trie, wl, exact
+
+
+def test_vinelm_dominates_murakkab(nl2sql8):
+    """Paper Fig. 7: fine-grained control beats workflow-level control at
+    equal budget.  Plan-level dominance is deterministic (the trie plan set
+    is a superset of Murakkab's configs); cohort-level delta is checked on
+    average with sampling-noise tolerance."""
+    from repro.core.controller import select_path
+
+    trie, wl, exact = nl2sql8
+    mk = murakkab_nodes(trie)
+    execu = make_workload_executor(wl)
+    reqs = np.random.default_rng(0).choice(wl.n_requests, 250, replace=False)
+    deltas = []
+    for q in np.quantile(exact.cost[trie.terminal], [0.15, 0.4, 0.7]):
+        obj = Objective("max_acc", cost_cap=float(q))
+        # offline: vine's plan must weakly dominate murakkab's
+        v_node = select_path(trie, exact, obj)
+        saved = trie.terminal.copy()
+        keep = np.zeros(trie.n_nodes, dtype=bool)
+        keep[mk] = True
+        trie.terminal = saved & keep
+        m_node = select_path(trie, exact, obj)
+        trie.terminal = saved
+        assert exact.acc[v_node] >= exact.acc[m_node] - 1e-12
+        rv = summarize(run_cohort(trie, exact, obj, reqs, execu,
+                                  policy="dynamic"))
+        rm = summarize(run_cohort(trie, exact, obj, reqs, execu,
+                                  policy="static", restrict_nodes=mk))
+        deltas.append(rv["accuracy"] - rm["accuracy"])
+    assert np.mean(deltas) >= -0.01  # cohort sampling noise tolerance
+    assert max(deltas) > 0.0
+
+
+def test_dynamic_replanning_cuts_slo_violations(nl2sql8):
+    """Paper Fig. 10: per-stage replanning reduces latency-SLO violations
+    vs committing to a static plan at admission."""
+    trie, wl, exact = nl2sql8
+    rng = np.random.default_rng(1)
+    # deterministic engine slowdown (hash() is PYTHONHASHSEED-randomized)
+    execu = make_workload_executor(
+        wl, slowdown_fn=lambda e, t: 1.0 + 2.0 * (sum(map(ord, e)) % 3 == 0))
+    reqs = rng.choice(wl.n_requests, 200, replace=False)
+    slo = float(np.quantile(exact.lat[trie.terminal], 0.5))
+    obj = Objective("max_acc", lat_cap=slo)
+    r_static = summarize(run_cohort(trie, exact, obj, reqs, execu,
+                                    policy="static"))
+    r_dyn = summarize(run_cohort(trie, exact, obj, reqs, execu,
+                                 policy="dynamic"))
+    assert r_dyn["slo_violation_rate"] <= r_static["slo_violation_rate"]
+
+
+def test_sparse_annotations_good_enough(nl2sql8):
+    """Paper: sparse VineLM (2% budget) retains most of the full-profiling
+    gain."""
+    trie, wl, exact = nl2sql8
+    prof = profile_cascade(wl, trie, 0.02, seed=3)
+    sparse = annotate(trie, prof, "vinelm")
+    execu = make_workload_executor(wl)
+    reqs = np.random.default_rng(2).choice(wl.n_requests, 200, replace=False)
+    cap = float(np.quantile(exact.cost[trie.terminal], 0.4))
+    obj = Objective("max_acc", cost_cap=cap)
+    r_full = summarize(run_cohort(trie, exact, obj, reqs, execu,
+                                  policy="dynamic"))
+    r_sparse = summarize(run_cohort(trie, sparse, obj, reqs, execu,
+                                    policy="dynamic"))
+    assert r_sparse["accuracy"] >= r_full["accuracy"] - 0.08
+
+
+def test_replan_overhead_small(nl2sql8):
+    trie, wl, exact = nl2sql8
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc", cost_cap=float(np.median(exact.cost[1:])))
+    res = run_cohort(trie, exact, obj, np.arange(20), execu, policy="dynamic")
+    mean_overhead = np.mean([r.replan_overhead_s for r in res])
+    assert mean_overhead < 0.1  # well under any LLM call

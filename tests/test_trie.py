@@ -1,0 +1,86 @@
+"""Trie structure invariants + workload ground-truth semantics."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import presets
+from repro.core.murakkab import murakkab_nodes
+from repro.core.trie import Trie
+from repro.core.workflow import ModelSpec, make_refinement_workflow, make_reflection_workflow
+from repro.core.workload import generate_workload
+
+
+def _models(n):
+    return [ModelSpec(f"m{i}", 0.001 * (i + 1), 0.1, 0.001, 0.3 + 0.5 * i / max(n - 1, 1))
+            for i in range(n)]
+
+
+def test_paper_path_counts():
+    """Path counts from the paper: NL2SQL-8 584 vs 136; NL2SQL-2 30 vs 14;
+    MathQA 5460 vs 24 (§1, §5.2)."""
+    t8 = Trie.build(presets.nl2sql_8())
+    t2 = Trie.build(presets.nl2sql_2())
+    tm = Trie.build(presets.mathqa_4())
+    assert int(t8.terminal.sum()) == 584 and len(murakkab_nodes(t8)) == 136
+    assert int(t2.terminal.sum()) == 30 and len(murakkab_nodes(t2)) == 14
+    assert int(tm.terminal.sum()) == 5460 and len(murakkab_nodes(tm)) == 24
+
+
+@given(n_models=st.integers(2, 5), depth=st.integers(1, 4))
+def test_preorder_descendant_intervals(n_models, depth):
+    tpl = make_reflection_workflow("t", _models(n_models), max_rounds=depth)
+    trie = Trie.build(tpl)
+    # preorder: parent < child; descendants of u form [u, u+size)
+    assert np.all(trie.parent[1:] < np.arange(1, trie.n_nodes))
+    for u in range(trie.n_nodes):
+        lo, hi = trie.descendants_interval(u)
+        for v in range(trie.n_nodes):
+            is_desc = u in trie.ancestors(v)
+            assert is_desc == (lo <= v < hi)
+
+
+@given(n_models=st.integers(2, 4), repairs=st.integers(0, 3))
+def test_node_path_roundtrip(n_models, repairs):
+    tpl = make_refinement_workflow("t", _models(n_models), max_repairs=repairs)
+    trie = Trie.build(tpl)
+    for u in range(trie.n_nodes):
+        assert trie.node_of(trie.path(u)) == u
+
+
+@given(seed=st.integers(0, 1000))
+def test_ground_truth_prefix_closure_and_monotonicity(seed):
+    tpl = make_refinement_workflow("t", _models(3), max_repairs=2)
+    trie = Trie.build(tpl)
+    wl = generate_workload(tpl, 50, seed=seed)
+    A, C, reached = wl.node_tables(trie)
+    # prefix closure: success at u implies success at every descendant
+    for u in range(1, trie.n_nodes):
+        lo, hi = trie.descendants_interval(u)
+        assert np.all(A[:, lo:hi] >= A[:, u][:, None])
+    ann = wl.exact_annotations(trie)
+    assert ann.check_monotone(trie)
+    # cost discounting: a request that succeeds at depth 1 contributes no
+    # deeper-stage cost
+    for q in range(10):
+        u1 = int(trie.child[0, 0])
+        if A[q, u1]:
+            for v in trie.ancestors(trie.n_nodes - 1)[1:]:
+                pass
+            lo, hi = trie.descendants_interval(u1)
+            assert np.all(np.abs(C[q, lo:hi] - C[q, u1]) < 1e-12)
+
+
+def test_reached_semantics():
+    tpl = make_refinement_workflow("t", _models(2), max_repairs=2)
+    trie = Trie.build(tpl)
+    wl = generate_workload(tpl, 30, seed=1)
+    A, C, reached = wl.node_tables(trie)
+    for u in range(1, trie.n_nodes):
+        p = int(trie.parent[u])
+        if p == 0:
+            assert np.all(reached[:, u] == 1)
+        else:
+            # reached iff parent reached and parent's stage failed
+            d, m = int(trie.depth[p]) - 1, int(trie.model[p])
+            expect = reached[:, p].astype(bool) & (wl.S[:, d, m] == 0)
+            assert np.array_equal(reached[:, u].astype(bool), expect)
