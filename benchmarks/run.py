@@ -12,8 +12,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (fig7_frontier, fig8_mae, fig9_policy, fig10_slo,
-                            roofline, table1_errors, table2_profiling_cost,
-                            table3_overhead)
+                            fleet_throughput, roofline, table1_errors,
+                            table2_profiling_cost, table3_overhead)
 
     benches = [
         ("fig8_mae", fig8_mae.run),
@@ -23,6 +23,7 @@ def main() -> None:
         ("fig9_policy", fig9_policy.run),
         ("fig10_slo", fig10_slo.run),
         ("table3_overhead", table3_overhead.run),
+        ("fleet_throughput", fleet_throughput.run),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")

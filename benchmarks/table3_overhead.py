@@ -15,10 +15,14 @@ from repro.core.controller import Objective, select_path
 from repro.core.controller_jax import TrieDevice, make_batched_planner
 
 
-def run(batch: int = 256, iters: int = 50):
+WORKFLOWS = ("mathqa_4", "nl2sql_2", "nl2sql_8")
+
+
+def run(batch: int = 256, iters: int = 50, workflows=WORKFLOWS,
+        host_iters: int = 200):
     rows = []
     total_t0 = time.perf_counter()
-    for wf in ("mathqa_4", "nl2sql_2", "nl2sql_8"):
+    for wf in workflows:
         trie, _ = workload(wf)
         ann = exact_ann(wf)
         obj = Objective("max_acc",
@@ -29,7 +33,7 @@ def run(batch: int = 256, iters: int = 50):
 
         # host path (per-request, paper's setting)
         t0 = time.perf_counter()
-        n = 200
+        n = host_iters
         for i in range(n):
             select_path(trie, ann, obj, root=int(roots[i % batch]),
                         elapsed_lat=float(lat[i % batch]))
@@ -48,9 +52,9 @@ def run(batch: int = 256, iters: int = 50):
         out.block_until_ready()
         jax_us_batch = (time.perf_counter() - t0) / iters * 1e6
         rows.append({
-            "workflow": wf, "n_nodes": trie.n_nodes,
+            "workflow": wf, "n_nodes": trie.n_nodes, "batch": batch,
             "host_us_per_replan": round(host_us, 1),
-            "jax_us_per_batch256": round(jax_us_batch, 1),
+            "jax_us_per_batch": round(jax_us_batch, 1),
             "jax_us_per_request": round(jax_us_batch / batch, 2),
         })
     elapsed = time.perf_counter() - total_t0
@@ -65,9 +69,16 @@ def run(batch: int = 256, iters: int = 50):
 
 
 if __name__ == "__main__":
-    out = run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small trie, few iterations")
+    args = ap.parse_args()
+    out = (run(batch=32, iters=5, workflows=("nl2sql_2",), host_iters=20)
+           if args.tiny else run())
     for r in out["rows"]:
         print(f"{r['workflow']:10s} nodes={r['n_nodes']:5d} "
               f"host={r['host_us_per_replan']:8.1f}us/replan "
-              f"jax_batch256={r['jax_us_per_batch256']:9.1f}us "
+              f"jax_batch{r['batch']}={r['jax_us_per_batch']:9.1f}us "
               f"({r['jax_us_per_request']:.2f}us/req)")

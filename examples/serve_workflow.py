@@ -11,8 +11,10 @@ This is the paper's full loop with real invocations end to end:
  4. cascade-profile request-path pairs with REAL stage executions
     (real $ cost from token counts, real measured wall-clock latency),
     apply subtree fill-in + cascade decomposition, annotate the trie;
- 5. serve fresh requests: VineLM picks the model per invocation under a
-    cost budget; compare against the best Murakkab-style static config.
+ 5. serve fresh requests THROUGH THE FLEET RUNTIME: the whole cohort
+    replans in lockstep — one batched device planner call per round —
+    while stage execution drives the real engines; compare against the
+    best Murakkab-style static config (scalar path: it plans once).
 
     PYTHONPATH=src python examples/serve_workflow.py [--requests 60]
 """
@@ -21,10 +23,12 @@ import time
 
 import numpy as np
 
-from repro.core.controller import Objective, OnlineController
+from repro.core.controller import Objective
 from repro.core.estimators import annotate
+from repro.core.fleet import run_fleet
 from repro.core.murakkab import murakkab_nodes
 from repro.core.profiler import ProfileResult
+from repro.core.runtime import run_cohort, summarize
 from repro.core.trie import Trie
 from repro.core.workflow import ModelSpec, make_refinement_workflow
 from repro.data import DataConfig, MarkovLMData
@@ -91,27 +95,6 @@ def cascade_profile_real(trie, executor, n_requests, coverage_runs, seed=0):
                          runs=coverage_runs, checkpoint_hits=0)
 
 
-def serve_request(trie, ann, obj, q, executor, policy, restrict=None):
-    ctl = OnlineController(trie, ann, obj, policy=policy,
-                           restrict_nodes=restrict)
-    u, lat, cost, success = 0, 0.0, 0.0, False
-    while True:
-        step = ctl.plan(u, lat, cost)
-        if step.next_model < 0:
-            break
-        d = int(trie.depth[u])
-        s, c, dt = executor(q, d, step.next_model)
-        cost += c
-        lat += dt
-        u = int(trie.child[u, step.next_model])
-        if s:
-            success = True
-            break
-        if int(trie.depth[u]) >= trie.template.max_depth:
-            break
-    return success, cost, lat
-
-
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=60)
@@ -158,22 +141,22 @@ def main():
     cap = float(np.quantile(ann.cost[trie.terminal], 0.45))
     obj = Objective("max_acc", cost_cap=cap)
     mk = murakkab_nodes(trie)
-    fresh = range(args.requests, args.requests * 2)
-    results = {}
-    for policy, restrict in (("dynamic", None), ("static", mk)):
-        accs, costs = [], []
-        for q in fresh:
-            s, c, l = serve_request(trie, ann, obj, q, executor, policy,
-                                    restrict)
-            accs.append(s)
-            costs.append(c)
-        results[policy] = (float(np.mean(accs)), float(np.mean(costs)))
-    va, vc = results["dynamic"]
-    ma, mc = results["static"]
+    fresh = np.arange(args.requests, args.requests * 2)
+    # VineLM: the fleet runtime serves the whole cohort in lockstep — one
+    # batched replan per round against the live engines
+    vine_res, stats = run_fleet(trie, ann, obj, fresh, executor)
+    vine = summarize(vine_res)
+    # Murakkab baseline: static plan committed at admission (scalar path)
+    mura = summarize(run_cohort(trie, ann, obj, fresh, executor,
+                                policy="static", restrict_nodes=mk))
+    va, vc = vine["accuracy"], vine["mean_cost"]
+    ma, mc = mura["accuracy"], mura["mean_cost"]
     print(f"   budget=${cap:.4f}")
-    print(f"   VineLM   : acc={va:.3f} cost=${vc:.4f}")
-    print(f"   Murakkab : acc={ma:.3f} cost=${mc:.4f}")
-    print(f"   delta    : {(va - ma) * 100:+.1f}pp at "
+    print(f"   VineLM fleet : acc={va:.3f} cost=${vc:.4f}  "
+          f"({stats.rounds} lockstep rounds, "
+          f"{stats.replan_s_per_request_round * 1e6:.1f}us/req/round replan)")
+    print(f"   Murakkab     : acc={ma:.3f} cost=${mc:.4f}")
+    print(f"   delta        : {(va - ma) * 100:+.1f}pp at "
           f"{(vc - mc) / max(mc, 1e-9) * 100:+.0f}% cost")
 
 

@@ -1,0 +1,6 @@
+"""VineLM reproduction: trie-based fine-grained control for agentic
+workflows, grown toward a production-scale JAX/Pallas serving system.
+
+Subpackages: `core` (trie/controller/fleet), `serving`, `models`, `train`,
+`dist`, `kernels`, `data`, `configs`, `launch`.
+"""

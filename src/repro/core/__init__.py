@@ -11,10 +11,12 @@ The paper's primary contribution, as a composable library:
 - `controller_jax` — batched jit/vmap TPU-native replanner
 - `murakkab`       — coarse workflow-level control baseline
 - `runtime`        — request execution loop (policy x executor)
+- `fleet`          — lockstep cohort runtime: one batched replan per round
 - `presets`        — NL2SQL-8 / NL2SQL-2 / MathQA-4 workloads
 """
 from repro.core.controller import Objective, OnlineController, select_path, select_path_dfs
 from repro.core.estimators import ESTIMATORS, annotate, estimate_accuracy
+from repro.core.fleet import FleetStats, run_fleet
 from repro.core.monitor import DriftMonitor, DriftReport
 from repro.core.murakkab import murakkab_nodes
 from repro.core.profiler import exhaustive_cost, profile_cascade
@@ -32,9 +34,10 @@ from repro.core.workload import Workload, generate_workload
 __all__ = [
     "ESTIMATORS", "ModelSpec", "Objective", "OnlineController", "ToolStage",
     "Trie", "TrieAnnotations", "Workload", "WorkflowTemplate", "annotate",
-    "DriftMonitor", "DriftReport",
+    "DriftMonitor", "DriftReport", "FleetStats",
     "estimate_accuracy", "exhaustive_cost", "generate_workload",
     "make_refinement_workflow", "make_reflection_workflow",
     "make_workload_executor", "murakkab_nodes", "profile_cascade",
-    "run_cohort", "run_request", "select_path", "select_path_dfs", "summarize",
+    "run_cohort", "run_fleet", "run_request", "select_path",
+    "select_path_dfs", "summarize",
 ]

@@ -13,9 +13,18 @@ over the structure-of-arrays trie:
 - live engine-delay inflation uses a dense (N, max_depth) path-model table
   instead of pointer chasing;
 - the whole replan is one jitted XLA program, `vmap`-ed over a batch of
-  requests with different prefixes, elapsed budgets, and live engine delays.
+  requests with different prefixes, elapsed budgets, and live engine delays;
+- tie-breaking is an exact multi-pass lexicographic argmin (NOT an
+  epsilon-weighted composite key, whose sub-float32-resolution epsilon
+  terms silently collapse ties) so the device planner picks the *same*
+  node as the host `select_path` — the property `repro.core.fleet` relies
+  on for batched-vs-sequential equivalence;
+- `path_models` doubles as a device-side *first-step table*: the next model
+  on the path u -> target is `path_models[target, depth[u]]`, one gather
+  per request instead of a host-side `ancestors()` walk (`_fleet_step`).
 
-`benchmarks/table3_overhead.py` measures per-replan latency of this path.
+`benchmarks/table3_overhead.py` measures per-replan latency of this path;
+`benchmarks/fleet_throughput.py` measures the full fleet step.
 """
 from __future__ import annotations
 
@@ -30,6 +39,12 @@ from repro.core.controller import Objective
 from repro.core.trie import Trie, TrieAnnotations
 
 _BIG = 1e30
+
+
+def trie_engines(template) -> list[str]:
+    """Canonical (sorted) engine order used for delay vectors everywhere a
+    dense per-engine array stands in for the controller's delta_e dict."""
+    return sorted({m.engine for m in template.models})
 
 
 @jax.tree_util.register_pytree_node_class
@@ -65,7 +80,7 @@ class TrieDevice:
             keep = np.zeros(trie.n_nodes, dtype=bool)
             keep[restrict_nodes] = True
             terminal &= keep
-        engines = sorted({m.engine for m in trie.template.models})
+        engines = trie_engines(trie.template)
         eidx = {e: i for i, e in enumerate(engines)}
         eom = np.array([eidx[m.engine] for m in trie.template.models],
                        dtype=np.int32)
@@ -98,6 +113,23 @@ def _cum_engine_delay(td: TrieDevice, engine_delays: jnp.ndarray) -> jnp.ndarray
     return vals.sum(axis=1)
 
 
+def _lex_argmin(feas: jnp.ndarray, keys: tuple) -> jnp.ndarray:
+    """Exact lexicographic argmin over the feasible set.
+
+    Narrows the candidate mask one key at a time (`k == min(k | candidates)`
+    compares identical float32 values, so each pass is exact); the final
+    tie-break is the lowest node index, matching np.lexsort's stable order
+    in the host `select_path`."""
+    n = feas.shape[0]
+    cand = feas
+    for k in keys:
+        kk = jnp.where(cand, k, _BIG)
+        cand = cand & (kk <= kk.min())
+    idx = jnp.arange(n, dtype=jnp.int32)
+    best = jnp.min(jnp.where(cand, idx, n)).astype(jnp.int32)
+    return jnp.where(jnp.any(cand), best, jnp.int32(-1))
+
+
 @partial(jax.jit, static_argnames=("kind",))
 def _select_single(
     td: TrieDevice,
@@ -105,7 +137,7 @@ def _select_single(
     elapsed_lat: jnp.ndarray,    # ()
     elapsed_cost: jnp.ndarray,   # ()
     engine_delays: jnp.ndarray,  # (E,)
-    acc_floor: jnp.ndarray,      # ()  (ignored for max_acc)
+    acc_floor: jnp.ndarray,      # ()  floor + margin (ignored for max_acc)
     cost_cap: jnp.ndarray,       # ()  (+inf if absent)
     lat_cap: jnp.ndarray,        # ()  (+inf if absent)
     *,
@@ -121,37 +153,91 @@ def _select_single(
     feas = (td.terminal > 0.5) & (idx >= lo) & (idx < hi)
     feas &= d_lat <= (lat_cap - elapsed_lat) + 1e-6
     # cost budgets are expectation-based plan-level constraints (§3.3):
-    # absolute C(v) <= cap, not re-conditioned on realized spend
-    feas &= td.cost <= cost_cap + 1e-6
+    # absolute C(v) <= cap, not re-conditioned on realized spend.  The
+    # slack is *relative* — costs sit at ~1e-3 $ where an absolute 1e-6
+    # would admit plans the float64 host search rejects.
+    feas &= td.cost <= cost_cap + 1e-6 * jnp.abs(cost_cap)
     if kind == "min_cost":
         feas &= td.acc >= acc_floor - 1e-6
-        # lexicographic (cost, lat, depth) via scaled composite key
-        key = d_cost + 1e-7 * d_lat + 1e-12 * td.depth
+        keys = (d_cost, d_lat, td.depth)
     else:
-        key = -td.acc + 1e-7 * d_cost + 1e-12 * d_lat
-    key = jnp.where(feas, key, _BIG)
-    best = jnp.argmin(key)
-    return jnp.where(jnp.any(feas), best.astype(jnp.int32), jnp.int32(-1))
+        keys = (-td.acc, d_cost, d_lat)
+    return _lex_argmin(feas, keys)
+
+
+def _objective_scalars(obj: Objective):
+    acc_floor = jnp.float32(
+        (obj.acc_floor if obj.acc_floor is not None else -1.0) + obj.acc_margin
+    )
+    cost_cap = jnp.float32(obj.cost_cap if obj.cost_cap is not None else _BIG)
+    lat_cap = jnp.float32(obj.lat_cap if obj.lat_cap is not None else _BIG)
+    return acc_floor, cost_cap, lat_cap
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def _plan_shared_delays(td, prefixes, elapsed_lat, elapsed_cost,
+                        engine_delays, acc_floor, cost_cap, lat_cap, *, kind):
+    return jax.vmap(
+        lambda u, el, ec: _select_single(
+            td, u, el, ec, engine_delays, acc_floor, cost_cap, lat_cap,
+            kind=kind)
+    )(prefixes, elapsed_lat, elapsed_cost)
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def _fleet_step(td, prefixes, elapsed_lat, elapsed_cost, engine_delays,
+                acc_floor, cost_cap, lat_cap, *, kind):
+    """One lockstep replan for a whole fleet: targets AND first steps.
+
+    `engine_delays` is (B, E) — per-request live delay vectors, so a
+    load-aware fleet can charge each request the congestion it would
+    actually see.  The "next model on the path u -> target" lookup is a
+    single gather into the dense first-step table: `path_models[v, d]` is
+    the model chosen at invocation position d on the root->v path, and the
+    next step from a depth-d prefix toward v is exactly that entry.
+    """
+    tgt = jax.vmap(
+        lambda u, el, ec, ed: _select_single(
+            td, u, el, ec, ed, acc_floor, cost_cap, lat_cap, kind=kind)
+    )(prefixes, elapsed_lat, elapsed_cost, engine_delays)
+    du = td.depth[prefixes].astype(jnp.int32)
+    dmax = td.path_models.shape[1]
+    nxt = td.path_models[jnp.maximum(tgt, 0), jnp.minimum(du, dmax - 1)]
+    nxt = jnp.where((tgt < 0) | (tgt == prefixes), jnp.int32(-1), nxt)
+    return tgt, nxt
 
 
 def make_batched_planner(td: TrieDevice, obj: Objective):
     """Returns plan(prefixes, elapsed_lat, elapsed_cost, engine_delays) ->
-    best terminating node per request (int32, -1 infeasible), jitted and
-    vmapped over the request batch."""
-    acc_floor = jnp.float32(obj.acc_floor if obj.acc_floor is not None else -1.0)
-    cost_cap = jnp.float32(obj.cost_cap if obj.cost_cap is not None else _BIG)
-    lat_cap = jnp.float32(obj.lat_cap if obj.lat_cap is not None else _BIG)
-    single = partial(_select_single, kind=obj.kind)
+    best terminating node per request (int32, -1 infeasible), vmapped over
+    the request batch with one shared (E,) engine-delay vector.
 
-    @jax.jit
+    The underlying jitted program is module-level, so planners built for
+    different objectives (or rebuilt per cohort) share one compilation per
+    (trie shape, batch size, objective kind) — objective scalars are traced
+    operands, not compile-time constants."""
+    scalars = _objective_scalars(obj)
+
     def plan(prefixes, elapsed_lat, elapsed_cost, engine_delays):
-        return jax.vmap(
-            lambda u, el, ec: single(
-                td, u, el, ec, engine_delays, acc_floor, cost_cap, lat_cap
-            )
-        )(prefixes, elapsed_lat, elapsed_cost)
+        return _plan_shared_delays(
+            td, prefixes, elapsed_lat, elapsed_cost, engine_delays,
+            *scalars, kind=obj.kind)
 
     return plan
+
+
+def make_fleet_planner(td: TrieDevice, obj: Objective):
+    """Returns step(prefixes, elapsed_lat, elapsed_cost, engine_delays) ->
+    (targets, next_models), the fleet runtime's one-call-per-step replanner.
+    `engine_delays` has shape (B, E): one live delay vector per request."""
+    scalars = _objective_scalars(obj)
+
+    def step(prefixes, elapsed_lat, elapsed_cost, engine_delays):
+        return _fleet_step(
+            td, prefixes, elapsed_lat, elapsed_cost, engine_delays,
+            *scalars, kind=obj.kind)
+
+    return step
 
 
 def next_model_for(trie: Trie, u: int, target: int) -> int:

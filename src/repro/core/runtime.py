@@ -99,14 +99,52 @@ def run_request(
     )
 
 
+_FLEET_MIN_BATCH = 8
+
+
 def run_cohort(
     trie: Trie,
     ann: TrieAnnotations,
     obj: Objective,
     requests: np.ndarray,
     executor: StageExecutor,
+    *,
+    engine: str = "auto",
     **kw,
 ) -> list[ExecutionResult]:
+    """Serve a cohort of requests.
+
+    ``engine`` selects the control plane:
+      "scalar" — the paper's sequential loop: one host replan per request
+                 per stage (also what the synchronous real-model executor
+                 in `examples/serve_workflow.py` uses for small cohorts).
+      "fleet"  — `repro.core.fleet.run_fleet`: the whole cohort replans in
+                 lockstep with one batched device planner call per round.
+      "auto"   — fleet for dynamic policies on cohorts of at least
+                 8 requests (where the batched planner amortizes its call
+                 overhead), scalar otherwise.  The "static" policy plans
+                 once per request, so there is nothing to batch.
+    Both paths produce identical per-request results for dynamic policies
+    (asserted by tests/test_fleet.py); the fleet path differs only in how
+    `replan_overhead_s` is spent.
+    """
+    if engine not in ("auto", "fleet", "scalar"):
+        raise ValueError(f"unknown engine {engine!r}: "
+                         "expected 'auto', 'fleet', or 'scalar'")
+    policy = kw.get("policy", "dynamic")
+    if engine == "auto":
+        use_fleet = policy != "static" and (
+            len(requests) >= _FLEET_MIN_BATCH or "fleet_load" in kw)
+        engine = "fleet" if use_fleet else "scalar"
+    if engine == "fleet":
+        from repro.core.fleet import run_fleet
+
+        results, _ = run_fleet(trie, ann, obj, requests, executor, **kw)
+        return results
+    if "fleet_load" in kw:
+        raise ValueError(
+            "fleet_load models the cohort's own concurrency — it requires "
+            "the fleet engine (dynamic policy), not the scalar path")
     return [run_request(trie, ann, obj, int(q), executor, **kw) for q in requests]
 
 

@@ -1,0 +1,16 @@
+"""Distributed execution: sharding rules, activation constraints, pipeline.
+
+- `sharding`     — PartitionSpec heuristics for params / batches / caches
+                   and `sharding_tree` (NamedSharding trees for device_put)
+- `act_sharding` — logical activation constraints ("dp"/"tp") resolved
+                   against an ambient mesh-axis mapping (`use_mesh_axes`)
+- `pipeline`     — GPipe schedule over a mesh axis (shard_map + ppermute)
+"""
+from repro.dist.act_sharding import constrain, use_mesh_axes
+from repro.dist.pipeline import pipeline_forward, split_stages
+from repro.dist.sharding import batch_specs, cache_specs, sharding_tree, spec_tree
+
+__all__ = [
+    "batch_specs", "cache_specs", "constrain", "pipeline_forward",
+    "sharding_tree", "spec_tree", "split_stages", "use_mesh_axes",
+]

@@ -1,0 +1,47 @@
+"""Logical activation-sharding constraints.
+
+Model code annotates intermediates with *logical* axis names — ``"dp"``
+(data parallel) and ``"tp"`` (tensor parallel) — via ``constrain``.  The
+mapping from logical names to concrete mesh axes is ambient state installed
+by ``use_mesh_axes`` (the dry-run's opt mode does this around tracing).
+With no mapping active ``constrain`` is the identity, so the same model
+code traces unchanged on a single device and in unit tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _mapping() -> dict | None:
+    return getattr(_STATE, "axes", None)
+
+
+@contextlib.contextmanager
+def use_mesh_axes(dp, tp):
+    """Map logical axes to mesh axes for the enclosed trace: ``"dp" -> dp``
+    and ``"tp" -> tp``.  ``dp`` may be one axis name or a tuple of axes
+    (FSDP over ``("pod", "data")`` on the multi-pod mesh)."""
+    prev = _mapping()
+    _STATE.axes = {"dp": dp, "tp": tp}
+    try:
+        yield
+    finally:
+        _STATE.axes = prev
+
+
+def constrain(x, *logical):
+    """``with_sharding_constraint`` under the active logical mapping.
+
+    ``logical`` has one entry per dim of ``x``: ``"dp"``, ``"tp"``, or
+    ``None``.  Identity when no mapping is active (single-device paths)."""
+    m = _mapping()
+    if m is None:
+        return x
+    spec = P(*[m.get(a) if isinstance(a, str) else None for a in logical])
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,111 @@
+"""PartitionSpec heuristics for the production meshes (DESIGN.md §4).
+
+The rules are divisibility-driven so one function covers every assigned
+architecture: a dim is only ever sharded when its size divides the target
+mesh-axis extent, which is what keeps ``device_put``/pjit legal on both the
+(16, 16) single-pod mesh and the (2, 16, 16) multi-pod mesh.
+
+- params:  FSDP-style — ONE sharded axis per leaf, the largest dim
+           divisible by the data axes (``"data"`` or ``("pod", "data")``).
+           Weight shards are all-gathered before use, so no contraction is
+           ever split and sharded numerics track single-device execution to
+           reduction-order noise (the 2e-4 gate in test_dist).  Model-axis
+           (tensor) parallelism is applied to *activations* instead, via
+           ``act_sharding.constrain`` under ``use_mesh_axes`` (opt mode).
+- batches: leading (batch) dim over the data axes when divisible.
+- caches:  dim 1 is the request batch -> data axes; the model axis goes to
+           the kv-heads dim when the (GQA) head count divides it, else to
+           the first later dim that does (sequence-sharded cache).
+
+These functions only read ``mesh.axis_names`` / ``mesh.shape`` so spec
+construction works with shape-only mesh stand-ins; ``sharding_tree`` needs
+a real ``jax.sharding.Mesh``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _mesh_sizes(mesh):
+    shape = dict(mesh.shape)
+    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    data = data_axes if len(data_axes) > 1 else data_axes[0]
+    dsize = int(np.prod([shape[a] for a in data_axes], dtype=np.int64))
+    msize = int(shape.get("model", 1))
+    return data, dsize, msize
+
+
+def _divides(dim: int, size: int) -> bool:
+    return dim >= size and dim % size == 0
+
+
+def _param_spec(shape, data, dsize, msize) -> P:
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    spec: list = [None] * nd
+    for i in sorted(range(nd), key=lambda i: shape[i], reverse=True):
+        if _divides(shape[i], dsize):
+            spec[i] = data
+            return P(*spec)
+    for i in reversed(range(nd)):
+        if _divides(shape[i], msize):
+            spec[i] = "model"
+            return P(*spec)
+    return P(*spec)
+
+
+def spec_tree(params, mesh):
+    """PartitionSpec per parameter leaf (accepts arrays or SDS leaves)."""
+    data, dsize, msize = _mesh_sizes(mesh)
+    return jax.tree.map(
+        lambda a: _param_spec(a.shape, data, dsize, msize), params
+    )
+
+
+def batch_specs(batch, mesh):
+    """Model inputs: shard the leading (batch) dim over the data axes."""
+    data, dsize, _ = _mesh_sizes(mesh)
+
+    def spec(a):
+        nd = len(a.shape)
+        if nd == 0:
+            return P()
+        if _divides(a.shape[0], dsize):
+            return P(*([data] + [None] * (nd - 1)))
+        return P(*([None] * nd))
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_specs(cache, mesh):
+    """Decode-cache specs: layouts are ``(layers, batch, ...)``; see module
+    docstring for the head-vs-sequence model-axis rule."""
+    data, dsize, msize = _mesh_sizes(mesh)
+
+    def spec(a):
+        nd = len(a.shape)
+        if nd < 2:
+            return P()
+        s: list = [None] * nd
+        if _divides(a.shape[1], dsize):
+            s[1] = data
+        for i in range(2, nd):
+            if _divides(a.shape[i], msize):
+                s[i] = "model"
+                break
+        return P(*s)
+
+    return jax.tree.map(spec, cache)
+
+
+def sharding_tree(params, mesh):
+    """NamedSharding tree for ``jax.device_put``/checkpoint restore."""
+    specs = spec_tree(params, mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

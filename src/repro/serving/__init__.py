@@ -1,8 +1,13 @@
 """Serving substrate: engines, scheduler, load simulation, model zoo."""
 from repro.serving.engine import RequestRecord, ServingEngine, ServingScheduler
-from repro.serving.loadsim import EngineLoadModel, LoadTrace, fit_slowdown_curve
+from repro.serving.loadsim import (
+    EngineLoadModel,
+    FleetLoadModel,
+    LoadTrace,
+    fit_slowdown_curve,
+)
 from repro.serving.zoo import build_zoo, sequence_accuracy
 
-__all__ = ["EngineLoadModel", "LoadTrace", "RequestRecord", "ServingEngine",
-           "ServingScheduler", "build_zoo", "fit_slowdown_curve",
-           "sequence_accuracy"]
+__all__ = ["EngineLoadModel", "FleetLoadModel", "LoadTrace", "RequestRecord",
+           "ServingEngine", "ServingScheduler", "build_zoo",
+           "fit_slowdown_curve", "sequence_accuracy"]

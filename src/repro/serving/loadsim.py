@@ -96,3 +96,38 @@ class LoadTrace:
             }
 
         return probe
+
+
+@dataclasses.dataclass
+class FleetLoadModel:
+    """Self-induced load coupling for the fleet runtime.
+
+    `LoadTrace` models *background* traffic on each engine; this models the
+    cohort's own footprint: the fleet aggregates per-round in-flight counts
+    per engine and (a) feeds them back into the next round's planner delays
+    — so every request plans against the congestion its peers are about to
+    create — and (b) inflates realized stage latency by the processor-
+    sharing slowdown under this round's occupancy.  A sequential
+    per-request loop cannot express either effect: it serves one request at
+    a time, so engines never see concurrent cohort traffic.
+    """
+
+    engines: dict[str, EngineLoadModel]
+    mean_service_s: dict[str, float]
+
+    def delays(self, inflight: dict[str, int]) -> dict[str, float]:
+        """Planner-facing delta_e per engine given in-flight counts: the
+        extra latency a NEW invocation would see on top of the annotation's
+        unloaded estimate (paper §4.3's delta_e(t), sourced from the fleet
+        itself instead of a background trace)."""
+        return {
+            e: (m.slowdown(float(inflight.get(e, 0))) - 1.0)
+            * self.mean_service_s.get(e, 1.0)
+            for e, m in self.engines.items()
+        }
+
+    def slowdown(self, engine: str, n_others: int) -> float:
+        """Realized multiplicative slowdown for a stage sharing its engine
+        with ``n_others`` concurrent cohort requests this round."""
+        m = self.engines.get(engine)
+        return m.slowdown(float(max(n_others, 0))) if m is not None else 1.0

@@ -5,7 +5,21 @@ import sys
 # 512-device override belongs ONLY to repro.launch.dryrun
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from hypothesis import settings
+# Property-based suites need hypothesis; the rest of the tier-1 suite must
+# still collect and run on a bare interpreter (CI installs hypothesis from
+# requirements-dev.txt, the minimal container does not ship it).
+try:
+    from hypothesis import settings
+except ModuleNotFoundError:
+    import pathlib
+    import re
 
-settings.register_profile("ci", max_examples=20, deadline=None)
-settings.load_profile("ci")
+    collect_ignore = [
+        p.name
+        for p in pathlib.Path(__file__).parent.glob("test_*.py")
+        if re.search(r"^\s*(from|import)\s+hypothesis\b",
+                     p.read_text(), re.MULTILINE)
+    ]
+else:
+    settings.register_profile("ci", max_examples=20, deadline=None)
+    settings.load_profile("ci")

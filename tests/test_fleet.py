@@ -1,0 +1,265 @@
+"""Fleet runtime: batched lockstep serving vs the sequential host loop.
+
+The load-free fleet must be *semantically identical* to `run_request` —
+same chosen plans (model sequences), same realized cost/latency/success —
+because the device planner tie-breaks exactly like the host search.  These
+tests randomize tries and objectives with plain numpy (no hypothesis: they
+are part of the bare-interpreter tier-1 set) and then exercise the fleet's
+one-batched-call-per-round structure and the in-flight load coupling the
+sequential loop cannot express.
+"""
+import numpy as np
+import pytest
+
+import repro.core.fleet as fleet_mod
+from repro.core import presets
+from repro.core.controller import Objective
+from repro.core.fleet import run_fleet
+from repro.core.runtime import (
+    make_workload_executor,
+    run_cohort,
+    run_request,
+    summarize,
+)
+from repro.core.trie import Trie
+from repro.core.workflow import ModelSpec, make_refinement_workflow
+from repro.core.workload import generate_workload
+from repro.serving.loadsim import EngineLoadModel, FleetLoadModel, LoadTrace
+
+
+def random_setup(seed: int, n_requests: int = 120):
+    rng = np.random.default_rng(seed)
+    n_models = int(rng.integers(2, 6))
+    engines = [f"e{j}" for j in range(int(rng.integers(1, 4)))]
+    specs = [
+        ModelSpec(
+            name=f"m{j}",
+            price=float(rng.uniform(0.001, 0.02)),
+            base_latency=float(rng.uniform(0.2, 1.0)),
+            per_token_latency=float(rng.uniform(0.001, 0.003)),
+            power=float(rng.uniform(0.4, 0.9)),
+            engine=str(rng.choice(engines)),
+        )
+        for j in range(n_models)
+    ]
+    tpl = make_refinement_workflow(
+        f"rand{seed}", specs, max_repairs=int(rng.integers(1, 4)))
+    trie = Trie.build(tpl)
+    wl = generate_workload(tpl, n_requests, seed=seed)
+    ann = wl.exact_annotations(trie)
+    return rng, trie, wl, ann
+
+
+def random_objective(rng, trie, ann) -> Objective:
+    term = trie.terminal
+    if rng.random() < 0.5:
+        kw = {}
+        if rng.random() < 0.7:
+            kw["cost_cap"] = float(
+                np.quantile(ann.cost[term], rng.uniform(0.2, 0.9)))
+        if rng.random() < 0.7:
+            kw["lat_cap"] = float(
+                np.quantile(ann.lat[term], rng.uniform(0.3, 0.9)))
+        return Objective("max_acc", **kw)
+    lat_cap = (float(np.quantile(ann.lat[term], 0.9))
+               if rng.random() < 0.5 else None)
+    return Objective(
+        "min_cost",
+        acc_floor=float(np.quantile(ann.acc[term], rng.uniform(0.2, 0.8))),
+        lat_cap=lat_cap,
+        acc_margin=0.02 if rng.random() < 0.3 else 0.0,
+    )
+
+
+def assert_results_identical(seq, flt):
+    assert len(seq) == len(flt)
+    for a, b in zip(seq, flt):
+        assert a.models == b.models          # same chosen plans
+        assert a.success == b.success
+        assert a.slo_violated == b.slo_violated
+        assert a.total_cost == pytest.approx(b.total_cost, abs=1e-12)
+        assert a.total_lat == pytest.approx(b.total_lat, abs=1e-9)
+    ss, sf = summarize(seq), summarize(flt)
+    for k in ss:
+        if k == "mean_replan_overhead_s":  # wall-clock, not semantics
+            continue
+        assert ss[k] == pytest.approx(sf[k], abs=1e-9), k
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_fleet_matches_sequential_randomized(seed):
+    """Randomized tries/objectives: fleet == per-request host loop."""
+    rng, trie, wl, ann = random_setup(seed)
+    execu = make_workload_executor(wl)
+    for _ in range(2):
+        obj = random_objective(rng, trie, ann)
+        reqs = rng.choice(wl.n_requests, int(rng.integers(12, 40)),
+                          replace=False)
+        seq = [run_request(trie, ann, obj, int(q), execu) for q in reqs]
+        flt, _ = run_fleet(trie, ann, obj, reqs, execu)
+        assert_results_identical(seq, flt)
+
+
+def test_fleet_matches_run_cohort_64():
+    """Acceptance scenario: 64-request cohort on NL2SQL-8, one batched
+    planner call per round, identical plans and metrics."""
+    tpl = presets.nl2sql_8()
+    trie = Trie.build(tpl)
+    wl = generate_workload(tpl, 300, seed=0)
+    ann = wl.exact_annotations(trie)
+    execu = make_workload_executor(wl)
+    reqs = np.random.default_rng(7).choice(wl.n_requests, 64, replace=False)
+    obj = Objective("max_acc",
+                    cost_cap=float(np.quantile(ann.cost[trie.terminal], 0.5)),
+                    lat_cap=float(np.quantile(ann.lat[trie.terminal], 0.8)))
+    seq = run_cohort(trie, ann, obj, reqs, execu, engine="scalar")
+    flt, stats = run_fleet(trie, ann, obj, reqs, execu)
+    assert_results_identical(seq, flt)
+    # lockstep structure: one batched replan per round, bounded rounds
+    assert stats.rounds == len(stats.replan_s_per_round)
+    assert stats.rounds <= trie.template.max_depth + 1
+
+
+def test_one_batched_planner_call_per_round(monkeypatch):
+    """The fleet replans the whole batch with ONE planner invocation per
+    lockstep round — N per-request solves would defeat the point."""
+    calls = []
+    orig = fleet_mod.make_fleet_planner
+
+    def counting(td, obj):
+        step = orig(td, obj)
+
+        def wrapped(*args):
+            calls.append(1)
+            return step(*args)
+
+        return wrapped
+
+    monkeypatch.setattr(fleet_mod, "make_fleet_planner", counting)
+    _, trie, wl, ann = random_setup(11)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc",
+                    cost_cap=float(np.quantile(ann.cost[trie.terminal], 0.5)))
+    _, stats = run_fleet(trie, ann, obj, np.arange(32), execu)
+    assert len(calls) == stats.rounds
+
+
+def test_fleet_load_probe_matches_sequential():
+    """dynamic_load_aware with a background LoadTrace probe: the fleet
+    evaluates the probe on each request's own timeline, so it still matches
+    the sequential loop exactly."""
+    tpl = presets.nl2sql_2()
+    trie = Trie.build(tpl)
+    wl = generate_workload(tpl, 150, seed=3)
+    ann = wl.exact_annotations(trie)
+    execu = make_workload_executor(wl)
+    engines = {m.engine for m in tpl.models}
+    trace = LoadTrace({e: EngineLoadModel(e, concurrency=2) for e in engines},
+                      period_s=5.0, seed=1)
+    probe = trace.delay_probe({e: 1.0 for e in engines})
+    obj = Objective("max_acc",
+                    lat_cap=float(np.quantile(ann.lat[trie.terminal], 0.6)))
+    reqs = np.arange(24)
+    kw = dict(policy="dynamic_load_aware", load_probe=probe)
+    seq = [run_request(trie, ann, obj, int(q), execu, **kw) for q in reqs]
+    flt, _ = run_fleet(trie, ann, obj, reqs, execu, **kw)
+    assert_results_identical(seq, flt)
+
+
+def test_fleet_restricted_plan_subset_matches():
+    """restrict_nodes (coarse-control baselines) masks terminals on device
+    exactly as the host controller does."""
+    from repro.core.murakkab import murakkab_nodes
+
+    _, trie, wl, ann = random_setup(23)
+    mk = murakkab_nodes(trie)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc",
+                    cost_cap=float(np.quantile(ann.cost[trie.terminal], 0.6)))
+    reqs = np.arange(16)
+    seq = [run_request(trie, ann, obj, int(q), execu, restrict_nodes=mk)
+           for q in reqs]
+    flt, _ = run_fleet(trie, ann, obj, reqs, execu, restrict_nodes=mk)
+    assert_results_identical(seq, flt)
+
+
+def test_fleet_load_coupling_inflates_latency():
+    """Self-induced load: with the whole cohort hammering shared engines,
+    realized latencies must be strictly worse than the unloaded fleet's,
+    and the per-round in-flight telemetry must account for every stage."""
+    tpl = presets.nl2sql_8()
+    trie = Trie.build(tpl)
+    wl = generate_workload(tpl, 200, seed=5)
+    ann = wl.exact_annotations(trie)
+    execu = make_workload_executor(wl)
+    engines = sorted({m.engine for m in tpl.models})
+    load = FleetLoadModel(
+        engines={e: EngineLoadModel(e, concurrency=2, jitter=0.0)
+                 for e in engines},
+        mean_service_s={e: 1.0 for e in engines},
+    )
+    obj = Objective("max_acc",
+                    cost_cap=float(np.quantile(ann.cost[trie.terminal], 0.5)))
+    reqs = np.arange(48)
+    base, _ = run_fleet(trie, ann, obj, reqs, execu)
+    loaded, stats = run_fleet(trie, ann, obj, reqs, execu,
+                              policy="dynamic_load_aware", fleet_load=load)
+    # 48 concurrent requests over engines with concurrency 2: latency up
+    assert (np.mean([r.total_lat for r in loaded])
+            > np.mean([r.total_lat for r in base]))
+    assert stats.rounds == len(stats.inflight_per_round)
+    n_staged = sum(sum(d.values()) for d in stats.inflight_per_round)
+    assert n_staged == sum(r.n_stages for r in loaded)
+
+
+def test_fleet_planner_sees_inflight_congestion():
+    """The round-k planner must receive delta_e terms derived from round
+    k-1's occupancy — i.e. the batched plan call gets nonzero engine delays
+    once traffic exists (cross-request coupling, not just realized
+    slowdown)."""
+    seen = []
+    orig = fleet_mod.make_fleet_planner
+
+    def spying(td, obj):
+        step = orig(td, obj)
+
+        def wrapped(prefixes, el, ec, delays):
+            seen.append(np.asarray(delays).max())
+            return step(prefixes, el, ec, delays)
+
+        return wrapped
+
+    with pytest.MonkeyPatch.context() as mp:
+        mp.setattr(fleet_mod, "make_fleet_planner", spying)
+        tpl = presets.nl2sql_2()
+        trie = Trie.build(tpl)
+        wl = generate_workload(tpl, 100, seed=9)
+        ann = wl.exact_annotations(trie)
+        execu = make_workload_executor(wl)
+        engines = sorted({m.engine for m in tpl.models})
+        load = FleetLoadModel(
+            engines={e: EngineLoadModel(e, concurrency=2, jitter=0.0)
+                     for e in engines},
+            mean_service_s={e: 1.0 for e in engines},
+        )
+        obj = Objective("max_acc")
+        run_fleet(trie, ann, obj, np.arange(32), execu,
+                  policy="dynamic_load_aware", fleet_load=load)
+    assert seen[0] == 0.0          # round 0: nothing in flight yet
+    assert max(seen[1:]) > 0.0     # later rounds plan against congestion
+
+
+def test_run_cohort_auto_delegation_equivalent():
+    """engine="auto"/"fleet"/"scalar" all yield the same cohort results for
+    dynamic policies (delegation changes the control plane, not outcomes)."""
+    _, trie, wl, ann = random_setup(31)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc",
+                    lat_cap=float(np.quantile(ann.lat[trie.terminal], 0.7)))
+    reqs = np.arange(20)
+    out = {
+        eng: run_cohort(trie, ann, obj, reqs, execu, engine=eng)
+        for eng in ("scalar", "fleet", "auto")
+    }
+    assert_results_identical(out["scalar"], out["fleet"])
+    assert_results_identical(out["scalar"], out["auto"])
