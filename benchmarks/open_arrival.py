@@ -1,0 +1,131 @@
+"""Open-arrival serving: goodput/p99 vs arrival rate (event-driven runtime).
+
+Sweeps a Poisson arrival rate over the event-driven open-arrival runtime
+(`repro.core.events.run_events`) with self-induced load coupling: requests
+arrive mid-flight, join the batched replan, queue for admission when every
+slot is busy, and share engine capacity with whatever overlaps them in
+wall-clock time.  SLO latency is measured from each request's arrival, so
+the curves show the classic serving knee — goodput collapses and p99
+explodes once the offered load crosses what the engines absorb.
+
+The planner batch is pinned at the slot capacity, so the whole sweep must
+compile the fleet-step program at most ONCE; the benchmark asserts this via
+`controller_jax.fleet_planner_cache_size` and fails loudly on re-tracing
+(that is the regression it exists to catch).
+
+    PYTHONPATH=src python -m benchmarks.open_arrival [--tiny]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import exact_ann, save_report, workload
+from repro.core.controller import Objective
+from repro.core.controller_jax import fleet_planner_cache_size
+from repro.core.events import run_events
+from repro.core.runtime import make_workload_executor, summarize
+from repro.core.workload import poisson_arrivals
+from repro.serving.loadsim import EngineLoadModel, FleetLoadModel
+
+FULL_RATES = (0.5, 1.0, 2.0, 4.0, 8.0, 16.0)   # requests/second
+TINY_RATES = (1.0, 4.0, 16.0)
+
+
+def make_fleet_load(trie, wl, concurrency: int = 4) -> FleetLoadModel:
+    """Self-induced load model for a preset: per-engine processor sharing
+    with mean service times measured from the workload's own stage tables."""
+    engines = sorted({m.engine for m in trie.template.models})
+    mean_service = {}
+    for e in engines:
+        ms = [j for j, m in enumerate(trie.template.models) if m.engine == e]
+        mean_service[e] = float(np.mean(wl.lat[:, :, ms]))
+    return FleetLoadModel(
+        engines={e: EngineLoadModel(e, concurrency=concurrency, jitter=0.0)
+                 for e in engines},
+        mean_service_s=mean_service,
+    )
+
+
+def run(wf: str = "nl2sql_8", rates=FULL_RATES, n_requests: int = 192,
+        capacity: int = 32):
+    trie, wl = workload(wf)
+    ann = exact_ann(wf)
+    execu = make_workload_executor(wl)
+    obj = Objective(
+        "max_acc",
+        cost_cap=float(np.quantile(ann.cost[trie.terminal], 0.5)),
+        lat_cap=float(np.quantile(ann.lat[trie.terminal], 0.8)),
+    )
+    load = make_fleet_load(trie, wl)
+    reqs = np.random.default_rng(0).choice(wl.n_requests, n_requests,
+                                           replace=True)
+    cache0 = fleet_planner_cache_size()
+    rows = []
+    t_total = time.perf_counter()
+    for rate in rates:
+        arr = poisson_arrivals(n_requests, rate, seed=1)
+        res, stats = run_events(
+            trie, ann, obj, reqs, execu,
+            arrivals=arr, capacity=capacity,
+            policy="dynamic_load_aware", fleet_load=load,
+        )
+        s = summarize(res)
+        rows.append({
+            "workflow": wf,
+            "rate_rps": rate,
+            "goodput": round(s["goodput"], 4),
+            "accuracy": round(s["accuracy"], 4),
+            "p99_lat_s": round(s["p99_lat"], 3),
+            "mean_lat_s": round(s["mean_lat"], 3),
+            "slo_violation_rate": round(s["slo_violation_rate"], 4),
+            "mean_queue_wait_s": round(stats.mean_queue_wait_s, 3),
+            "peak_occupancy": max(stats.peak_occupancy.values()),
+            "events": stats.events,
+            "replans": stats.replans,
+            "replan_us_per_planned_request": round(
+                stats.replan_s_per_planned_request * 1e6, 1),
+        })
+    cache1 = fleet_planner_cache_size()
+    retraces = (cache1 - cache0) if cache0 >= 0 and cache1 >= 0 else -1
+    if retraces > 1:
+        raise RuntimeError(
+            f"fleet planner re-traced {retraces} times across the sweep — "
+            "the events runtime must pin its batch at slot capacity")
+    elapsed = time.perf_counter() - t_total
+    save_report("open_arrival", rows)
+    return {
+        "name": "open_arrival",
+        "us_per_call": elapsed * 1e6 / max(len(rows), 1),
+        "derived": (f"planner_compiles={retraces} "
+                    f"goodput@{rates[0]}rps={rows[0]['goodput']:.2f} "
+                    f"goodput@{rates[-1]}rps={rows[-1]['goodput']:.2f}"),
+        "rows": rows,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small trie, 3 rates, small cohort")
+    ap.add_argument("--workflow", default=None)
+    args = ap.parse_args()
+    wf = args.workflow or ("nl2sql_2" if args.tiny else "nl2sql_8")
+    out = run(wf=wf,
+              rates=TINY_RATES if args.tiny else FULL_RATES,
+              n_requests=48 if args.tiny else 192,
+              capacity=16 if args.tiny else 32)
+    print(out["derived"])
+    for r in out["rows"]:
+        print(f"{r['workflow']:9s} rate={r['rate_rps']:5.1f}/s "
+              f"goodput={r['goodput']:.3f} p99={r['p99_lat_s']:7.2f}s "
+              f"wait={r['mean_queue_wait_s']:7.2f}s "
+              f"peak_occ={r['peak_occupancy']:3d} "
+              f"events={r['events']:4d} replans={r['replans']:4d} "
+              f"({r['replan_us_per_planned_request']:.0f}us/req)")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,10 +12,12 @@ The paper's primary contribution, as a composable library:
 - `murakkab`       — coarse workflow-level control baseline
 - `runtime`        — request execution loop (policy x executor)
 - `fleet`          — lockstep cohort runtime: one batched replan per round
+- `events`         — open-arrival event-driven runtime (virtual clock)
 - `presets`        — NL2SQL-8 / NL2SQL-2 / MathQA-4 workloads
 """
 from repro.core.controller import Objective, OnlineController, select_path, select_path_dfs
 from repro.core.estimators import ESTIMATORS, annotate, estimate_accuracy
+from repro.core.events import EventStats, run_events
 from repro.core.fleet import FleetStats, run_fleet
 from repro.core.monitor import DriftMonitor, DriftReport
 from repro.core.murakkab import murakkab_nodes
@@ -29,15 +31,21 @@ from repro.core.workflow import (
     make_refinement_workflow,
     make_reflection_workflow,
 )
-from repro.core.workload import Workload, generate_workload
+from repro.core.workload import (
+    Workload,
+    generate_workload,
+    poisson_arrivals,
+    trace_arrivals,
+)
 
 __all__ = [
     "ESTIMATORS", "ModelSpec", "Objective", "OnlineController", "ToolStage",
     "Trie", "TrieAnnotations", "Workload", "WorkflowTemplate", "annotate",
-    "DriftMonitor", "DriftReport", "FleetStats",
+    "DriftMonitor", "DriftReport", "EventStats", "FleetStats",
     "estimate_accuracy", "exhaustive_cost", "generate_workload",
     "make_refinement_workflow", "make_reflection_workflow",
-    "make_workload_executor", "murakkab_nodes", "profile_cascade",
-    "run_cohort", "run_fleet", "run_request", "select_path",
-    "select_path_dfs", "summarize",
+    "make_workload_executor", "murakkab_nodes", "poisson_arrivals",
+    "profile_cascade", "run_cohort", "run_events", "run_fleet",
+    "run_request", "select_path", "select_path_dfs", "summarize",
+    "trace_arrivals",
 ]

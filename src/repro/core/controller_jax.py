@@ -207,6 +207,21 @@ def _fleet_step(td, prefixes, elapsed_lat, elapsed_cost, engine_delays,
     return tgt, nxt
 
 
+def fleet_planner_cache_size() -> int:
+    """Number of compiled specializations of the fleet-step program, or -1
+    when the JAX runtime doesn't expose the counter.
+
+    One entry exists per (trie shape, batch size, objective kind).  The
+    event-driven runtime (`repro.core.events`) pins its planner batch at
+    the slot capacity precisely so this stays flat while the number of
+    in-flight requests fluctuates — tests and `benchmarks/open_arrival.py`
+    assert no growth across a whole arrival-rate sweep."""
+    try:
+        return int(_fleet_step._cache_size())
+    except Exception:
+        return -1
+
+
 def make_batched_planner(td: TrieDevice, obj: Objective):
     """Returns plan(prefixes, elapsed_lat, elapsed_cost, engine_delays) ->
     best terminating node per request (int32, -1 infeasible), vmapped over

@@ -1,0 +1,336 @@
+"""Event-driven open-arrival fleet runtime (beyond-paper).
+
+`run_fleet` serves a *closed* cohort: every request exists at round 0 and
+the whole batch replans in lockstep rounds.  The paper's actual serving
+setting (§4.3) is open: requests arrive continuously, and VineLM re-roots
+each one's trie against the load its in-flight peers impose at that moment.
+`run_events` models exactly that with a virtual-clock event loop:
+
+- two event kinds — request **arrival** and **stage completion** — drive
+  the clock; nothing happens between events, so the loop is O(events), not
+  O(time);
+- per-request control state lives in **fixed-capacity slot arrays**: the
+  batched device planner (`controller_jax.make_fleet_planner`) is always
+  called with batch shape ``(capacity,)`` and free/stale slots are simply
+  masked out on the host, so the jitted program **never re-traces** as the
+  number of in-flight requests fluctuates (one compile per capacity × trie
+  × objective kind — `controller_jax.fleet_planner_cache_size` exposes the
+  counter the tests/benchmarks assert on);
+- arrivals that find every slot busy wait in a FIFO **admission queue**;
+  requests admitted mid-flight join the next batched replan alongside the
+  requests already in service;
+- per-engine occupancy is computed from **overlapping wall-clock stage
+  intervals** (a processor-sharing simulation per engine,
+  `repro.serving.loadsim.EngineSim`), not lockstep rounds: a stage's
+  service rate changes every time its engine's occupancy changes, and the
+  planner's delta_e(t) delay terms come from the occupancy at the instant
+  of each replan;
+- elapsed latency — both the planner's remaining-deadline input and the
+  reported `total_lat` — is measured **from each request's arrival time**,
+  so queueing delay counts against the SLO exactly as it would in a real
+  deployment.
+
+Degenerate case: with all arrivals at t=0, slot capacity >= cohort size and
+no load coupling, every stage runs back-to-back on its request's own
+timeline and every replan sees the same (prefix, elapsed, delays) inputs as
+the lockstep fleet — the results are bit-identical to `run_fleet` and to
+the scalar `run_request` loop (property-tested in tests/test_events*.py).
+
+Like `run_fleet`, load coupling is duck-typed: ``fleet_load`` needs
+`.delays(inflight)` and `.slowdown(engine, n_others)`; the standard
+implementation is `repro.serving.loadsim.FleetLoadModel`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from collections import deque
+from typing import Callable
+
+import numpy as np
+
+from repro.core.controller import Objective
+from repro.core.controller_jax import (
+    TrieDevice,
+    make_fleet_planner,
+    trie_engines,
+)
+from repro.core.runtime import ExecutionResult, StageExecutor
+from repro.core.trie import Trie, TrieAnnotations
+
+_DEFAULT_CAPACITY = 64
+
+
+@dataclasses.dataclass
+class EventStats:
+    """Control-plane telemetry for one `run_events` call."""
+
+    capacity: int = 0
+    events: int = 0                 # distinct virtual-clock timestamps processed
+    replans: int = 0                # batched planner calls (shape = capacity)
+    admitted: int = 0
+    replan_s: list = dataclasses.field(default_factory=list)
+    planned_per_replan: list = dataclasses.field(default_factory=list)
+    peak_occupancy: dict = dataclasses.field(default_factory=dict)
+    # per-request timelines, aligned with the ``requests`` argument
+    arrival_t: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))
+    admit_t: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))
+    done_t: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))
+
+    @property
+    def total_replan_s(self) -> float:
+        return float(sum(self.replan_s))
+
+    @property
+    def queue_wait_s(self) -> np.ndarray:
+        """Per-request admission-queue wait (0 when a slot was free)."""
+        return self.admit_t - self.arrival_t
+
+    @property
+    def mean_queue_wait_s(self) -> float:
+        w = self.queue_wait_s
+        return float(np.mean(w)) if w.size else 0.0
+
+    @property
+    def replan_s_per_planned_request(self) -> float:
+        """Mean per-request share of a batched replan (only requests that
+        were actually planned in that call share its cost)."""
+        shares = [s / k for s, k in
+                  zip(self.replan_s, self.planned_per_replan) if k > 0]
+        return float(np.mean(shares)) if shares else 0.0
+
+
+def run_events(
+    trie: Trie,
+    ann: TrieAnnotations,
+    obj: Objective,
+    requests: np.ndarray,
+    executor: StageExecutor,
+    *,
+    arrivals: np.ndarray | None = None,
+    capacity: int | None = None,
+    policy: str = "dynamic",
+    restrict_nodes: np.ndarray | None = None,
+    load_probe: Callable[[float], dict[str, float]] | None = None,
+    fleet_load=None,
+    t_start: float = 0.0,
+) -> tuple[list[ExecutionResult], EventStats]:
+    """Serve an open-arrival stream of ``requests`` event-by-event.
+
+    ``arrivals`` gives each request's arrival time on the virtual clock
+    (seconds, relative to ``t_start``); ``None`` means everything arrives
+    at t=0 (the closed-cohort degenerate case).  ``capacity`` fixes the
+    slot-array size and therefore the planner's batch shape; it defaults
+    to the cohort size for closed cohorts (guaranteeing `run_fleet`
+    equivalence) and to ``min(len(requests), 64)`` for open arrivals.
+    Results are returned in ``requests`` order; `total_lat` and the SLO
+    check are measured from each request's *arrival*, so admission-queue
+    wait counts against the deadline.
+    """
+    if policy not in ("dynamic", "dynamic_load_aware"):
+        raise ValueError(f"unsupported events policy {policy!r}: the static "
+                         "baseline plans once per request — use run_cohort's "
+                         "scalar path")
+    requests = np.asarray(requests)
+    B = int(requests.shape[0])
+    if arrivals is None:
+        arrivals = np.zeros(B, dtype=np.float64)
+    else:
+        arrivals = np.asarray(arrivals, dtype=np.float64)
+        if arrivals.shape != (B,):
+            raise ValueError(f"arrivals shape {arrivals.shape} != ({B},)")
+        if B and (not np.all(np.isfinite(arrivals)) or arrivals.min() < 0):
+            raise ValueError("arrivals must be finite and non-negative")
+    if capacity is None:
+        capacity = B if arrivals.size == 0 or arrivals.max() == 0.0 \
+            else min(B, _DEFAULT_CAPACITY)
+    C = int(capacity)
+    if B and C < 1:
+        raise ValueError("capacity must be >= 1")
+
+    stats = EventStats(capacity=C,
+                       arrival_t=arrivals.copy(),
+                       admit_t=np.zeros(B, dtype=np.float64),
+                       done_t=np.zeros(B, dtype=np.float64))
+    if B == 0:
+        return [], stats
+
+    td = TrieDevice.build(trie, ann, restrict_nodes)
+    plan_step = make_fleet_planner(td, obj)
+    engines = trie_engines(trie.template)
+    E = len(engines)
+    engine_of_model = np.asarray(td.engine_of_model, dtype=np.int64)
+    max_depth = trie.template.max_depth
+    load_aware = policy == "dynamic_load_aware"
+
+    # one processor-sharing simulation per engine; numpy-only module, but
+    # imported lazily so `repro.core` stays importable without the serving
+    # package's model stack
+    from repro.serving.loadsim import EngineSim
+    sims = {
+        e: EngineSim(
+            e,
+            slowdown=(lambda n, _e=e: fleet_load.slowdown(_e, n))
+            if (load_aware and fleet_load is not None) else None,
+        )
+        for e in engines
+    }
+    stats.peak_occupancy = {e: 0 for e in engines}
+
+    # fixed-capacity slot arrays — the planner's batch shape never changes
+    slot_owner = np.full(C, -1, dtype=np.int64)    # request position, -1 free
+    u = np.zeros(C, dtype=np.int32)                # realized prefix node
+    elapsed_lat = np.zeros(C, dtype=np.float64)    # t - arrival at last replan
+    elapsed_cost = np.zeros(C, dtype=np.float64)
+    stage_model = np.full(C, -1, dtype=np.int64)   # in-service stage, -1 idle
+    stage_success = np.zeros(C, dtype=bool)
+    free: list[int] = list(range(C))
+    heapq.heapify(free)
+
+    # per-request outputs (aligned with ``requests``)
+    success = np.zeros(B, dtype=bool)
+    total_cost = np.zeros(B, dtype=np.float64)
+    overhead = np.zeros(B, dtype=np.float64)
+    models: list[list[int]] = [[] for _ in range(B)]
+
+    # arrivals in time order (stable: ties keep ``requests`` order)
+    order = np.argsort(arrivals, kind="stable")
+    arr_ptr = 0
+    pending: deque[int] = deque()
+
+    def finish(i: int, slot: int, t: float) -> None:
+        stats.done_t[i] = t
+        total_cost[i] = elapsed_cost[slot]
+        slot_owner[slot] = -1
+        u[slot] = 0
+        elapsed_lat[slot] = 0.0
+        elapsed_cost[slot] = 0.0
+        stage_model[slot] = -1
+        heapq.heappush(free, slot)
+
+    while True:
+        t_arr = arrivals[order[arr_ptr]] if arr_ptr < B else np.inf
+        t_done = min((s.next_completion() for s in sims.values()),
+                     default=np.inf)
+        t = min(t_arr, t_done)
+        if not np.isfinite(t):
+            assert not pending and np.all(slot_owner < 0), \
+                "event loop stalled with work outstanding"
+            break
+        stats.events += 1
+        need_replan: list[int] = []
+
+        # 1. stage completions at exactly t (engines in canonical order)
+        for e in engines:
+            for slot, realized_s in sims[e].pop_completed(t):
+                i = int(slot_owner[slot])
+                m = int(stage_model[slot])
+                stage_model[slot] = -1
+                models[i].append(m)
+                u[slot] = trie.child[u[slot], m]
+                if stage_success[slot]:
+                    success[i] = True
+                    finish(i, slot, t)
+                elif int(trie.depth[u[slot]]) >= max_depth:
+                    finish(i, slot, t)
+                else:
+                    need_replan.append(slot)
+
+        # 2. arrivals at exactly t join the admission queue (FIFO)
+        while arr_ptr < B and arrivals[order[arr_ptr]] <= t:
+            pending.append(int(order[arr_ptr]))
+            arr_ptr += 1
+
+        # 3-5. admit / replan / dispatch — repeated within this event
+        # because a dispatch-time-infeasible request frees its slot
+        # immediately, and arrivals still queued at this instant must be
+        # admitted into it rather than stranded (or, worse, left pending
+        # with no future event to drain them)
+        while True:
+            # 3. admissions: free slots (lowest index first) serve the queue
+            while free and pending:
+                slot = heapq.heappop(free)
+                i = pending.popleft()
+                slot_owner[slot] = i
+                u[slot] = 0
+                elapsed_cost[slot] = 0.0
+                stats.admit_t[i] = t
+                stats.admitted += 1
+                need_replan.append(slot)
+
+            if not need_replan:
+                break
+            need_replan.sort()
+
+            # 4. refresh deadline-elapsed (queue wait burns the budget) for
+            #    the slots being planned, then ONE batched planner call over
+            #    the full fixed-capacity arrays — free/mid-stage slots are
+            #    computed but masked out on the host
+            for slot in need_replan:
+                elapsed_lat[slot] = t - arrivals[slot_owner[slot]]
+            delays = np.zeros((C, E), dtype=np.float32)
+            if load_aware:
+                if fleet_load is not None:
+                    d = fleet_load.delays(
+                        {e: sims[e].occupancy for e in engines})
+                    delays[:] = np.array(
+                        [d.get(e, 0.0) for e in engines], dtype=np.float32)
+                elif load_probe is not None:
+                    d = load_probe(t_start + t)
+                    row = [d.get(e, 0.0) for e in engines]
+                    for slot in need_replan:
+                        delays[slot] = row
+            t0 = time.perf_counter()
+            _, nxts = plan_step(
+                u,
+                elapsed_lat.astype(np.float32),
+                elapsed_cost.astype(np.float32),
+                delays,
+            )
+            nxts = np.asarray(nxts)  # blocks until the device call is done
+            replan_s = time.perf_counter() - t0
+            stats.replans += 1
+            stats.replan_s.append(replan_s)
+            stats.planned_per_replan.append(len(need_replan))
+            share = replan_s / len(need_replan)
+
+            # 5. dispatch: start the chosen stage of every planned slot
+            for slot in need_replan:
+                i = int(slot_owner[slot])
+                overhead[i] += share
+                m = int(nxts[slot])
+                if m < 0:
+                    finish(i, slot, t)   # no feasible continuation: stop
+                    continue
+                d = int(trie.depth[u[slot]])
+                s, c, lat = executor(int(requests[i]), d, m, t_start + t)
+                elapsed_cost[slot] += c
+                stage_model[slot] = m
+                stage_success[slot] = bool(s)
+                e = engines[int(engine_of_model[m])]
+                sims[e].start(slot, lat, t)
+            for e in engines:
+                stats.peak_occupancy[e] = max(
+                    stats.peak_occupancy[e], sims[e].occupancy)
+            need_replan = []
+            if not (free and pending):
+                break
+
+    results = []
+    for i in range(B):
+        lat = float(stats.done_t[i] - stats.arrival_t[i])
+        slo = obj.lat_cap is not None and lat > obj.lat_cap + 1e-9
+        results.append(ExecutionResult(
+            success=bool(success[i]),
+            total_cost=float(total_cost[i]),
+            total_lat=lat,
+            models=models[i],
+            n_stages=len(models[i]),
+            replan_overhead_s=float(overhead[i]),
+            slo_violated=bool(slo),
+        ))
+    return results, stats

@@ -106,6 +106,11 @@ def run_fleet(
                          " — use run_cohort's scalar path")
     requests = np.asarray(requests)
     B = int(requests.shape[0])
+    if B == 0:
+        # empty cohort: nothing to plan — skip the device-table build and
+        # planner jit entirely (FleetStats stays all-zero/empty, and its
+        # aggregate properties are defined to be 0.0 in that state)
+        return [], FleetStats()
     td = TrieDevice.build(trie, ann, restrict_nodes)
     plan_step = make_fleet_planner(td, obj)
     engines = trie_engines(trie.template)  # same ordering TrieDevice uses

@@ -120,22 +120,40 @@ def run_cohort(
                  in `examples/serve_workflow.py` uses for small cohorts).
       "fleet"  — `repro.core.fleet.run_fleet`: the whole cohort replans in
                  lockstep with one batched device planner call per round.
-      "auto"   — fleet for dynamic policies on cohorts of at least
+      "events" — `repro.core.events.run_events`: open-arrival event-driven
+                 serving on a virtual clock (``arrivals=``/``capacity=``);
+                 SLO latency is measured from each request's arrival.
+      "auto"   — events whenever ``arrivals``/``capacity`` is given, else
+                 fleet for dynamic policies on cohorts of at least
                  8 requests (where the batched planner amortizes its call
                  overhead), scalar otherwise.  The "static" policy plans
                  once per request, so there is nothing to batch.
-    Both paths produce identical per-request results for dynamic policies
-    (asserted by tests/test_fleet.py); the fleet path differs only in how
-    `replan_overhead_s` is spent.
+    The scalar, fleet, and (closed-cohort, full-capacity) events paths
+    produce identical per-request results for dynamic policies (asserted by
+    tests/test_fleet.py and tests/test_events*.py); they differ only in how
+    `replan_overhead_s` is spent and, for open arrivals, in queueing delay.
     """
-    if engine not in ("auto", "fleet", "scalar"):
+    if engine not in ("auto", "fleet", "scalar", "events"):
         raise ValueError(f"unknown engine {engine!r}: "
-                         "expected 'auto', 'fleet', or 'scalar'")
+                         "expected 'auto', 'fleet', 'scalar', or 'events'")
     policy = kw.get("policy", "dynamic")
     if engine == "auto":
-        use_fleet = policy != "static" and (
-            len(requests) >= _FLEET_MIN_BATCH or "fleet_load" in kw)
-        engine = "fleet" if use_fleet else "scalar"
+        if "arrivals" in kw or "capacity" in kw:
+            engine = "events"
+        else:
+            use_fleet = policy != "static" and (
+                len(requests) >= _FLEET_MIN_BATCH or "fleet_load" in kw)
+            engine = "fleet" if use_fleet else "scalar"
+    if engine == "events":
+        from repro.core.events import run_events
+
+        results, _ = run_events(trie, ann, obj, requests, executor, **kw)
+        return results
+    for k in ("arrivals", "capacity"):
+        if k in kw:
+            raise ValueError(
+                f"{k!r} models open-arrival admission — it requires the "
+                "events engine, not the closed-cohort paths")
     if engine == "fleet":
         from repro.core.fleet import run_fleet
 
@@ -144,21 +162,31 @@ def run_cohort(
     if "fleet_load" in kw:
         raise ValueError(
             "fleet_load models the cohort's own concurrency — it requires "
-            "the fleet engine (dynamic policy), not the scalar path")
+            "the fleet or events engine (dynamic policy), not the scalar "
+            "path")
     return [run_request(trie, ann, obj, int(q), executor, **kw) for q in requests]
 
 
+_SUMMARY_KEYS = ("accuracy", "goodput", "mean_cost", "mean_lat", "p99_lat",
+                 "slo_violation_rate", "mean_replan_overhead_s", "mean_stages")
+
+
 def summarize(results: list[ExecutionResult]) -> dict:
-    n = max(len(results), 1)
+    n = len(results)
+    if n == 0:
+        # empty cohort: every aggregate is defined as 0.0 (np.mean and
+        # np.percentile both raise/warn on empty inputs)
+        return {k: 0.0 for k in _SUMMARY_KEYS}
+    lats = [r.total_lat for r in results]
     return {
         "accuracy": sum(r.success for r in results) / n,
         # goodput: correct AND within SLO — the metric that matters when
         # latency caps are hard constraints
         "goodput": sum(r.success and not r.slo_violated for r in results) / n,
-        "mean_cost": float(np.mean([r.total_cost for r in results])) if results else 0.0,
-        "mean_lat": float(np.mean([r.total_lat for r in results])) if results else 0.0,
-        "p99_lat": float(np.percentile([r.total_lat for r in results], 99)) if results else 0.0,
+        "mean_cost": float(np.mean([r.total_cost for r in results])),
+        "mean_lat": float(np.mean(lats)),
+        "p99_lat": float(np.percentile(lats, 99)),
         "slo_violation_rate": sum(r.slo_violated for r in results) / n,
-        "mean_replan_overhead_s": float(np.mean([r.replan_overhead_s for r in results])) if results else 0.0,
-        "mean_stages": float(np.mean([r.n_stages for r in results])) if results else 0.0,
+        "mean_replan_overhead_s": float(np.mean([r.replan_overhead_s for r in results])),
+        "mean_stages": float(np.mean([r.n_stages for r in results])),
     }

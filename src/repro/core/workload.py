@@ -128,6 +128,34 @@ class Workload:
 
 
 # ----------------------------------------------------------------------
+# arrival processes (open-arrival serving, `repro.core.events`)
+# ----------------------------------------------------------------------
+def poisson_arrivals(n: int, rate: float, seed: int = 0) -> np.ndarray:
+    """Arrival times of ``n`` requests from a homogeneous Poisson process
+    with ``rate`` requests/second: cumulative sums of iid exponential
+    inter-arrival gaps.  Deterministic given ``seed``; strictly increasing
+    (exponential draws are almost surely positive)."""
+    if n < 0:
+        raise ValueError("n must be >= 0")
+    if not rate > 0:
+        raise ValueError("rate must be > 0 requests/second")
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def trace_arrivals(times) -> np.ndarray:
+    """Validate a trace-driven arrival process: a 1-d sequence of finite,
+    non-negative arrival offsets (seconds).  Returns the times sorted
+    ascending (stable), the form `run_events` consumes."""
+    t = np.asarray(times, dtype=np.float64)
+    if t.ndim != 1:
+        raise ValueError(f"arrival trace must be 1-d, got shape {t.shape}")
+    if t.size and (not np.all(np.isfinite(t)) or t.min() < 0):
+        raise ValueError("arrival trace must be finite and non-negative")
+    return np.sort(t, kind="stable")
+
+
+# ----------------------------------------------------------------------
 # generator
 # ----------------------------------------------------------------------
 def generate_workload(

@@ -98,6 +98,86 @@ class LoadTrace:
         return probe
 
 
+class EngineSim:
+    """Event-granularity processor-sharing simulation of ONE engine.
+
+    The fleet runtime applies a single slowdown factor per lockstep round;
+    the event-driven runtime (`repro.core.events`) instead tracks stages as
+    *jobs with remaining work* whose service rate changes every time the
+    engine's occupancy changes — the paper's §5.4 slowdown curve applied at
+    event granularity rather than round granularity.
+
+    ``slowdown(n_others) -> factor`` defines the processor-sharing rate:
+    with k jobs in service every job drains work at ``1 / slowdown(k - 1)``
+    per unit of virtual time.  With ``slowdown=None`` the engine is
+    unloaded (unit rate): completion times are stored exactly as
+    ``start + work`` and the realized duration returned by `pop_completed`
+    is the nominal ``work`` bit-for-bit — the property the open-arrival
+    runtime's degenerate-case equivalence with `run_fleet` relies on.
+    """
+
+    _DONE_TOL = 1e-9  # remaining-work tolerance (seconds of unloaded service)
+
+    def __init__(self, name: str, slowdown=None):
+        self.name = name
+        self._slowdown = slowdown
+        self._t_last = 0.0
+        # unit-rate: job -> (t_complete, work); PS: job -> [remaining, t_start]
+        self._jobs: dict = {}
+
+    @property
+    def occupancy(self) -> int:
+        return len(self._jobs)
+
+    def _rate(self) -> float:
+        if self._slowdown is None or not self._jobs:
+            return 1.0
+        return 1.0 / float(self._slowdown(len(self._jobs) - 1))
+
+    def _advance(self, t: float) -> None:
+        """Drain work at the current shared rate up to virtual time ``t``."""
+        dt = t - self._t_last
+        if dt > 0.0 and self._slowdown is not None and self._jobs:
+            r = self._rate()
+            for rec in self._jobs.values():
+                rec[0] -= dt * r
+        self._t_last = max(self._t_last, t)
+
+    def start(self, job, work: float, t: float) -> None:
+        """Admit ``job`` with ``work`` seconds of unloaded service at ``t``."""
+        if self._slowdown is None:
+            self._jobs[job] = (t + work, work)
+        else:
+            self._advance(t)
+            self._jobs[job] = [work, t]
+
+    def next_completion(self) -> float:
+        """Virtual time of the next job completion (+inf when idle)."""
+        if not self._jobs:
+            return float("inf")
+        if self._slowdown is None:
+            return min(tc for tc, _ in self._jobs.values())
+        rem = min(rec[0] for rec in self._jobs.values())
+        return self._t_last + max(rem, 0.0) / self._rate()
+
+    def pop_completed(self, t: float) -> list:
+        """Remove jobs finished by ``t``; returns [(job, realized_s), ...]
+        in admission order (deterministic)."""
+        out = []
+        if self._slowdown is None:
+            for job, (tc, work) in list(self._jobs.items()):
+                if tc <= t:
+                    del self._jobs[job]
+                    out.append((job, work))
+            return out
+        self._advance(t)
+        for job, (rem, t0) in list(self._jobs.items()):
+            if rem <= self._DONE_TOL:
+                del self._jobs[job]
+                out.append((job, t - t0))
+        return out
+
+
 @dataclasses.dataclass
 class FleetLoadModel:
     """Self-induced load coupling for the fleet runtime.

@@ -1,0 +1,77 @@
+"""Shared fixtures for the fleet/events equivalence suites.
+
+Used by `test_fleet.py`, `test_events.py` (both bare-interpreter tier-1)
+and `test_events_property.py` (hypothesis, CI-only).  Not collected by
+pytest (doesn't match test_*.py); imported via pytest's rootdir sys.path
+insertion for the tests directory.
+"""
+import numpy as np
+import pytest
+
+from repro.core.controller import Objective
+from repro.core.runtime import summarize
+from repro.core.trie import Trie
+from repro.core.workflow import ModelSpec, make_refinement_workflow
+from repro.core.workload import generate_workload
+
+
+def random_setup(seed: int, n_requests: int = 120):
+    """Random refinement workflow + workload + exact annotations."""
+    rng = np.random.default_rng(seed)
+    n_models = int(rng.integers(2, 6))
+    engines = [f"e{j}" for j in range(int(rng.integers(1, 4)))]
+    specs = [
+        ModelSpec(
+            name=f"m{j}",
+            price=float(rng.uniform(0.001, 0.02)),
+            base_latency=float(rng.uniform(0.2, 1.0)),
+            per_token_latency=float(rng.uniform(0.001, 0.003)),
+            power=float(rng.uniform(0.4, 0.9)),
+            engine=str(rng.choice(engines)),
+        )
+        for j in range(n_models)
+    ]
+    tpl = make_refinement_workflow(
+        f"rand{seed}", specs, max_repairs=int(rng.integers(1, 4)))
+    trie = Trie.build(tpl)
+    wl = generate_workload(tpl, n_requests, seed=seed)
+    ann = wl.exact_annotations(trie)
+    return rng, trie, wl, ann
+
+
+def random_objective(rng, trie, ann) -> Objective:
+    """Random feasible-ish objective over the trie's annotation quantiles."""
+    term = trie.terminal
+    if rng.random() < 0.5:
+        kw = {}
+        if rng.random() < 0.7:
+            kw["cost_cap"] = float(
+                np.quantile(ann.cost[term], rng.uniform(0.2, 0.9)))
+        if rng.random() < 0.7:
+            kw["lat_cap"] = float(
+                np.quantile(ann.lat[term], rng.uniform(0.3, 0.9)))
+        return Objective("max_acc", **kw)
+    lat_cap = (float(np.quantile(ann.lat[term], 0.9))
+               if rng.random() < 0.5 else None)
+    return Objective(
+        "min_cost",
+        acc_floor=float(np.quantile(ann.acc[term], rng.uniform(0.2, 0.8))),
+        lat_cap=lat_cap,
+        acc_margin=0.02 if rng.random() < 0.3 else 0.0,
+    )
+
+
+def assert_results_identical(seq, flt):
+    """Plan- and metric-level equality between two cohort result lists."""
+    assert len(seq) == len(flt)
+    for a, b in zip(seq, flt):
+        assert a.models == b.models          # same chosen plans
+        assert a.success == b.success
+        assert a.slo_violated == b.slo_violated
+        assert a.total_cost == pytest.approx(b.total_cost, abs=1e-12)
+        assert a.total_lat == pytest.approx(b.total_lat, abs=1e-9)
+    ss, sf = summarize(seq), summarize(flt)
+    for k in ss:
+        if k == "mean_replan_overhead_s":  # wall-clock, not semantics
+            continue
+        assert ss[k] == pytest.approx(sf[k], abs=1e-9), k

@@ -1,0 +1,423 @@
+"""Event-driven open-arrival runtime: equivalence, queueing, load coupling.
+
+The degenerate case (all arrivals at t=0, capacity >= cohort) must be
+result-identical to both `run_fleet` and the scalar `run_request` loop;
+open arrivals add admission queueing (SLO measured from arrival) and
+overlap-based engine occupancy, which these tests pin with hand-computed
+processor-sharing scenarios.  Plain numpy only — this module is part of
+the bare-interpreter tier-1 set; the hypothesis sweep lives in
+`test_events_property.py`.
+"""
+import numpy as np
+import pytest
+from fleetlib import assert_results_identical, random_objective, random_setup
+
+from repro.core import presets
+from repro.core.controller import Objective
+from repro.core.controller_jax import fleet_planner_cache_size
+from repro.core.events import run_events
+from repro.core.fleet import run_fleet
+from repro.core.runtime import (
+    make_workload_executor,
+    run_cohort,
+    run_request,
+    summarize,
+)
+from repro.core.trie import Trie, TrieAnnotations
+from repro.core.workflow import DecisionPoint, ModelSpec, WorkflowTemplate
+from repro.core.workload import (
+    generate_workload,
+    poisson_arrivals,
+    trace_arrivals,
+)
+from repro.serving.loadsim import EngineLoadModel, EngineSim, FleetLoadModel
+
+
+# ----------------------------------------------------------------------
+# degenerate case: closed cohort == fleet == scalar
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(3))
+def test_events_degenerate_matches_fleet_and_scalar(seed):
+    """All arrivals at t=0 with capacity >= cohort: bit-identical plans,
+    cost, latency, and success across all three control planes."""
+    rng, trie, wl, ann = random_setup(seed)
+    execu = make_workload_executor(wl)
+    obj = random_objective(rng, trie, ann)
+    reqs = rng.choice(wl.n_requests, int(rng.integers(10, 24)), replace=False)
+    seq = [run_request(trie, ann, obj, int(q), execu) for q in reqs]
+    flt, _ = run_fleet(trie, ann, obj, reqs, execu)
+    evt, stats = run_events(trie, ann, obj, reqs, execu,
+                            capacity=len(reqs))
+    assert_results_identical(seq, evt)
+    assert_results_identical(flt, evt)
+    assert stats.admitted == len(reqs)
+    assert np.all(stats.queue_wait_s == 0.0)
+
+
+def test_events_degenerate_default_capacity_is_cohort():
+    """run_cohort(engine="events") on a closed cohort defaults capacity to
+    the cohort size, so results match the fleet path exactly."""
+    _, trie, wl, ann = random_setup(41)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc",
+                    cost_cap=float(np.quantile(ann.cost[trie.terminal], 0.6)))
+    reqs = np.arange(16)
+    flt = run_cohort(trie, ann, obj, reqs, execu, engine="fleet")
+    evt = run_cohort(trie, ann, obj, reqs, execu, engine="events")
+    auto = run_cohort(trie, ann, obj, reqs, execu,
+                      arrivals=np.zeros(len(reqs)))  # auto routes to events
+    assert_results_identical(flt, evt)
+    assert_results_identical(flt, auto)
+
+
+def test_events_load_probe_matches_fleet_degenerate():
+    """Background LoadTrace probe evaluated on the virtual clock matches the
+    fleet's per-request-timeline probe when everything arrives at t=0."""
+    from repro.serving.loadsim import LoadTrace
+
+    tpl = presets.nl2sql_2()
+    trie = Trie.build(tpl)
+    wl = generate_workload(tpl, 100, seed=3)
+    ann = wl.exact_annotations(trie)
+    execu = make_workload_executor(wl)
+    engines = {m.engine for m in tpl.models}
+    trace = LoadTrace({e: EngineLoadModel(e, concurrency=2) for e in engines},
+                      period_s=5.0, seed=1)
+    probe = trace.delay_probe({e: 1.0 for e in engines})
+    obj = Objective("max_acc",
+                    lat_cap=float(np.quantile(ann.lat[trie.terminal], 0.6)))
+    reqs = np.arange(18)
+    kw = dict(policy="dynamic_load_aware", load_probe=probe)
+    flt, _ = run_fleet(trie, ann, obj, reqs, execu, **kw)
+    evt, _ = run_events(trie, ann, obj, reqs, execu, capacity=len(reqs), **kw)
+    assert_results_identical(flt, evt)
+
+
+def test_events_restricted_plan_subset_matches():
+    """restrict_nodes masks device terminals exactly as the host does."""
+    from repro.core.murakkab import murakkab_nodes
+
+    _, trie, wl, ann = random_setup(23)
+    mk = murakkab_nodes(trie)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc",
+                    cost_cap=float(np.quantile(ann.cost[trie.terminal], 0.6)))
+    reqs = np.arange(12)
+    seq = [run_request(trie, ann, obj, int(q), execu, restrict_nodes=mk)
+           for q in reqs]
+    evt, _ = run_events(trie, ann, obj, reqs, execu, restrict_nodes=mk,
+                        capacity=len(reqs))
+    assert_results_identical(seq, evt)
+
+
+# ----------------------------------------------------------------------
+# open arrivals: admission queueing, arrival-relative SLO
+# ----------------------------------------------------------------------
+def test_events_open_arrival_queueing_and_plans():
+    """Without a latency cap the plan for each request is independent of
+    when it runs, so open-arrival plans equal the scalar loop's while
+    total_lat additionally absorbs the admission-queue wait."""
+    _, trie, wl, ann = random_setup(17)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc",
+                    cost_cap=float(np.quantile(ann.cost[trie.terminal], 0.7)))
+    reqs = np.arange(14)
+    arr = poisson_arrivals(len(reqs), rate=8.0, seed=4)
+    seq = [run_request(trie, ann, obj, int(q), execu) for q in reqs]
+    evt, stats = run_events(trie, ann, obj, reqs, execu, arrivals=arr,
+                            capacity=2)
+    assert stats.capacity == 2
+    assert stats.admitted == len(reqs)
+    waits = stats.queue_wait_s
+    assert np.all(waits >= -1e-12)
+    assert waits.max() > 0.0  # capacity 2 at 8 rps must queue
+    assert np.all(stats.done_t >= stats.admit_t - 1e-12)
+    assert np.all(stats.admit_t >= stats.arrival_t - 1e-12)
+    for a, b, w in zip(seq, evt, waits):
+        assert a.models == b.models
+        assert a.success == b.success
+        assert a.total_cost == pytest.approx(b.total_cost, abs=1e-12)
+        # latency from arrival = queue wait + back-to-back service
+        assert b.total_lat == pytest.approx(a.total_lat + w, abs=1e-9)
+
+
+def test_events_slo_measured_from_arrival():
+    """One slot, two instant arrivals, unit service: the second request's
+    deadline burns while it queues — total_lat 2L vs the first's L."""
+    L = 1.0
+    spec = ModelSpec("m0", price=0.001, base_latency=L,
+                     per_token_latency=0.0, power=0.9, engine="e0")
+    tpl = WorkflowTemplate("unit", (spec,),
+                           (DecisionPoint("gen", 0, (0,)),), min_depth=1)
+    trie = Trie.build(tpl)
+    ann = TrieAnnotations(acc=np.array([0.0, 0.9]),
+                          cost=np.array([0.0, 0.001]),
+                          lat=np.array([0.0, L]))
+
+    def execu(q, d, m, t):
+        return True, 0.001, L
+
+    obj = Objective("max_acc", lat_cap=2.5 * L)
+    res, stats = run_events(trie, ann, obj, np.array([0, 1]), execu,
+                            arrivals=np.zeros(2), capacity=1)
+    assert res[0].total_lat == pytest.approx(L, abs=1e-9)
+    assert res[1].total_lat == pytest.approx(2 * L, abs=1e-9)  # L of waiting
+    assert not res[0].slo_violated and not res[1].slo_violated
+    assert stats.queue_wait_s[1] == pytest.approx(L, abs=1e-9)
+    # tighter cap: the planner sees the burned deadline and cuts request 2
+    obj2 = Objective("max_acc", lat_cap=1.5 * L)
+    res2, _ = run_events(trie, ann, obj2, np.array([0, 1]), execu,
+                         arrivals=np.zeros(2), capacity=1)
+    assert res2[0].success and res2[0].models == [0]
+    assert res2[1].models == []  # remaining budget 0.5L < L: infeasible
+
+
+# ----------------------------------------------------------------------
+# overlap-based engine occupancy (processor sharing at event granularity)
+# ----------------------------------------------------------------------
+def _unit_setup(L=1.0, concurrency=1):
+    spec = ModelSpec("m0", price=0.001, base_latency=L,
+                     per_token_latency=0.0, power=0.9, engine="e0")
+    tpl = WorkflowTemplate("unit", (spec,),
+                           (DecisionPoint("gen", 0, (0,)),), min_depth=1)
+    trie = Trie.build(tpl)
+    ann = TrieAnnotations(acc=np.array([0.0, 0.9]),
+                          cost=np.array([0.0, 0.001]),
+                          lat=np.array([0.0, L]))
+    load = FleetLoadModel(
+        engines={"e0": EngineLoadModel("e0", concurrency=concurrency,
+                                       jitter=0.0)},
+        mean_service_s={"e0": L},
+    )
+
+    def execu(q, d, m, t):
+        return True, 0.001, L
+
+    return trie, ann, execu, load
+
+
+def test_events_ps_full_overlap():
+    """Two unit jobs sharing a concurrency-1 engine from t=0 each run at
+    half rate: both complete at exactly t=2."""
+    trie, ann, execu, load = _unit_setup()
+    res, stats = run_events(trie, ann, Objective("max_acc"),
+                            np.array([0, 1]), execu, capacity=2,
+                            policy="dynamic_load_aware", fleet_load=load)
+    assert [r.total_lat for r in res] == pytest.approx([2.0, 2.0], abs=1e-9)
+    assert stats.peak_occupancy["e0"] == 2
+
+
+def test_events_ps_partial_overlap():
+    """Arrivals at 0 and 0.5: A runs alone until 0.5 (half its work done),
+    shares until 1.5, finishes; B then runs alone and finishes at 2.0 —
+    realized latencies 1.5 and 1.5, not the lockstep round approximation."""
+    trie, ann, execu, load = _unit_setup()
+    res, stats = run_events(trie, ann, Objective("max_acc"),
+                            np.array([0, 1]), execu,
+                            arrivals=np.array([0.0, 0.5]), capacity=2,
+                            policy="dynamic_load_aware", fleet_load=load)
+    assert [r.total_lat for r in res] == pytest.approx([1.5, 1.5], abs=1e-9)
+    assert stats.done_t.tolist() == pytest.approx([1.5, 2.0], abs=1e-9)
+
+
+def test_events_planner_sees_live_occupancy():
+    """A request admitted while another is mid-stage must plan against
+    nonzero delta_e terms derived from the overlap, not lockstep rounds."""
+    import repro.core.events as events_mod
+    from repro.core.controller_jax import make_fleet_planner as orig
+
+    seen = []
+
+    def spying(td, obj):
+        step = orig(td, obj)
+
+        def wrapped(prefixes, el, ec, delays):
+            seen.append(float(np.asarray(delays).max()))
+            return step(prefixes, el, ec, delays)
+
+        return wrapped
+
+    trie, ann, execu, load = _unit_setup()
+    with pytest.MonkeyPatch.context() as mp:
+        mp.setattr(events_mod, "make_fleet_planner", spying)
+        run_events(trie, ann, Objective("max_acc"), np.array([0, 1]), execu,
+                   arrivals=np.array([0.0, 0.5]), capacity=2,
+                   policy="dynamic_load_aware", fleet_load=load)
+    assert seen[0] == 0.0      # t=0: empty engines
+    assert max(seen[1:]) > 0.0  # t=0.5: request 0 still in service
+
+
+def test_events_unloaded_latency_better_than_loaded():
+    """Self-induced load must strictly inflate realized latency on a real
+    preset cohort (overlap exists whenever capacity > engine concurrency)."""
+    tpl = presets.nl2sql_2()
+    trie = Trie.build(tpl)
+    wl = generate_workload(tpl, 120, seed=5)
+    ann = wl.exact_annotations(trie)
+    execu = make_workload_executor(wl)
+    engines = sorted({m.engine for m in tpl.models})
+    load = FleetLoadModel(
+        engines={e: EngineLoadModel(e, concurrency=2, jitter=0.0)
+                 for e in engines},
+        mean_service_s={e: 1.0 for e in engines},
+    )
+    obj = Objective("max_acc")
+    reqs = np.arange(24)
+    base, _ = run_events(trie, ann, obj, reqs, execu, capacity=len(reqs))
+    loaded, stats = run_events(trie, ann, obj, reqs, execu,
+                               capacity=len(reqs),
+                               policy="dynamic_load_aware", fleet_load=load)
+    assert (np.mean([r.total_lat for r in loaded])
+            > np.mean([r.total_lat for r in base]))
+    assert max(stats.peak_occupancy.values()) > 2
+
+
+# ----------------------------------------------------------------------
+# fixed-capacity planner batch: no re-tracing as in-flight count varies
+# ----------------------------------------------------------------------
+def test_events_planner_batch_pinned_at_capacity():
+    """Cohort sizes 6/10/14 through the same capacity-4 slots: the jitted
+    fleet-step program must not gain new specializations after the first."""
+    _, trie, wl, ann = random_setup(29)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc")
+    run_events(trie, ann, obj, np.arange(6), execu,
+               arrivals=np.linspace(0, 2, 6), capacity=4)  # warm: compile
+    c0 = fleet_planner_cache_size()
+    if c0 < 0:
+        pytest.skip("JAX runtime does not expose the jit cache counter")
+    for n in (6, 10, 14):
+        _, stats = run_events(trie, ann, obj, np.arange(n) % wl.n_requests,
+                              execu, arrivals=np.linspace(0, 2, n),
+                              capacity=4)
+        assert stats.capacity == 4
+    assert fleet_planner_cache_size() == c0
+
+
+# ----------------------------------------------------------------------
+# edge cases + arrival samplers
+# ----------------------------------------------------------------------
+def test_events_empty_cohort():
+    _, trie, wl, ann = random_setup(5)
+    execu = make_workload_executor(wl)
+    res, stats = run_events(trie, ann, Objective("max_acc"),
+                            np.array([], dtype=np.int64), execu)
+    assert res == [] and stats.events == 0 and stats.replans == 0
+    assert summarize(res)["p99_lat"] == 0.0
+
+
+def test_events_all_infeasible_on_admission():
+    """Impossible budget: every request finishes at its admission instant
+    with no stages; latency is pure queue wait."""
+    _, trie, wl, ann = random_setup(11)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc", cost_cap=0.0)
+    res, stats = run_events(trie, ann, obj, np.arange(5), execu,
+                            arrivals=np.linspace(0.0, 1.0, 5), capacity=3)
+    for i, r in enumerate(res):
+        assert r.models == [] and not r.success
+        assert stats.done_t[i] == stats.admit_t[i]
+    assert stats.replans >= 1
+
+
+def test_events_infeasible_dispatch_readmits_queued_arrivals():
+    """A request found infeasible AT dispatch frees its slot immediately;
+    arrivals queued at that same instant must be admitted into it, not
+    stranded with no future event to drain them (regression: the loop
+    used to stall/assert here)."""
+    _, trie, wl, ann = random_setup(37)
+    execu = make_workload_executor(wl)
+    # two simultaneous arrivals through one slot, nothing affordable
+    res, stats = run_events(trie, ann, Objective("max_acc", cost_cap=0.0),
+                            np.arange(2), execu, arrivals=np.zeros(2),
+                            capacity=1)
+    assert stats.admitted == 2
+    for r in res:
+        assert r.models == [] and not r.success and r.total_lat == 0.0
+
+    # deadline-pressure variant: first request consumes the whole budget,
+    # later arrivals become infeasible at admission one after another
+    L = 1.0
+    trie1, ann1, execu1, _ = _unit_setup(L)
+    res, stats = run_events(trie1, ann1,
+                            Objective("max_acc", lat_cap=1.5 * L),
+                            np.arange(3), execu1, arrivals=np.zeros(3),
+                            capacity=1)
+    assert stats.admitted == 3
+    assert res[0].success and res[0].models == [0]
+    assert res[1].models == [] and res[2].models == []
+    # both cut requests burned their deadline in the queue
+    assert res[1].total_lat == pytest.approx(L, abs=1e-9)
+    assert res[2].total_lat == pytest.approx(L, abs=1e-9)
+
+
+def test_events_rejects_bad_arguments():
+    _, trie, wl, ann = random_setup(19)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc")
+    with pytest.raises(ValueError, match="policy"):
+        run_events(trie, ann, obj, np.arange(3), execu, policy="static")
+    with pytest.raises(ValueError, match="arrivals shape"):
+        run_events(trie, ann, obj, np.arange(3), execu,
+                   arrivals=np.zeros(5))
+    with pytest.raises(ValueError, match="finite and non-negative"):
+        run_events(trie, ann, obj, np.arange(3), execu,
+                   arrivals=np.array([0.0, -1.0, 2.0]))
+    with pytest.raises(ValueError, match="capacity"):
+        run_events(trie, ann, obj, np.arange(3), execu, capacity=0)
+    with pytest.raises(ValueError, match="events engine"):
+        run_cohort(trie, ann, obj, np.arange(3), execu, engine="scalar",
+                   arrivals=np.zeros(3))
+
+
+def test_poisson_arrivals_sampler():
+    a = poisson_arrivals(500, rate=4.0, seed=0)
+    b = poisson_arrivals(500, rate=4.0, seed=0)
+    assert np.array_equal(a, b)                    # deterministic
+    assert a.shape == (500,) and np.all(np.diff(a) > 0)
+    assert np.mean(np.diff(a)) == pytest.approx(0.25, rel=0.25)
+    assert poisson_arrivals(0, rate=1.0).shape == (0,)
+    with pytest.raises(ValueError):
+        poisson_arrivals(10, rate=0.0)
+    with pytest.raises(ValueError):
+        poisson_arrivals(-1, rate=1.0)
+
+
+def test_trace_arrivals_sampler():
+    t = trace_arrivals([3.0, 0.0, 1.5])
+    assert t.tolist() == [0.0, 1.5, 3.0]
+    assert trace_arrivals([]).shape == (0,)
+    with pytest.raises(ValueError):
+        trace_arrivals([[0.0, 1.0]])
+    with pytest.raises(ValueError):
+        trace_arrivals([0.0, -2.0])
+    with pytest.raises(ValueError):
+        trace_arrivals([0.0, np.inf])
+
+
+# ----------------------------------------------------------------------
+# EngineSim unit behavior
+# ----------------------------------------------------------------------
+def test_engine_sim_unit_rate_exact():
+    sim = EngineSim("e0")
+    sim.start("a", 1.25, t=0.0)
+    sim.start("b", 0.5, t=0.25)
+    assert sim.occupancy == 2
+    assert sim.next_completion() == 0.75
+    assert sim.pop_completed(0.75) == [("b", 0.5)]   # realized == work, exact
+    assert sim.pop_completed(1.25) == [("a", 1.25)]
+    assert sim.occupancy == 0 and sim.next_completion() == float("inf")
+
+
+def test_engine_sim_processor_sharing():
+    slowdown = lambda n_others: float(n_others + 1)  # rate = 1/k for k jobs
+    sim = EngineSim("e0", slowdown=slowdown)
+    sim.start("a", 1.0, t=0.0)
+    assert sim.next_completion() == pytest.approx(1.0)
+    sim.start("b", 1.0, t=0.5)                       # a has 0.5 work left
+    assert sim.next_completion() == pytest.approx(1.5)
+    done = sim.pop_completed(1.5)
+    assert [j for j, _ in done] == ["a"]
+    assert done[0][1] == pytest.approx(1.5)          # wall-clock duration
+    assert sim.next_completion() == pytest.approx(2.0)  # b alone again
+    assert sim.pop_completed(2.0)[0][0] == "b"

@@ -1,0 +1,70 @@
+"""Hypothesis property suite for the open-arrival event-driven runtime.
+
+Property 1 (ISSUE-2 acceptance): with all arrivals at t=0 and slot capacity
+>= cohort size, `run_events` is result-identical — models, cost, latency,
+success — to `run_fleet` and to the scalar `run_request` loop, over
+randomized tries, workloads, and objectives.
+
+Property 2: with arbitrary arrival times and any capacity, plans without a
+latency cap are time-invariant — each request's model sequence equals the
+scalar loop's, and its latency is the scalar service time plus its
+admission-queue wait.
+
+This module needs hypothesis; the bare-interpreter tier-1 run skips it at
+collection (tests/conftest.py) and CI installs the pinned environment.
+"""
+import numpy as np
+import pytest
+from fleetlib import assert_results_identical, random_objective, random_setup
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.controller import Objective
+from repro.core.events import run_events
+from repro.core.fleet import run_fleet
+from repro.core.runtime import make_workload_executor, run_request
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(max_examples=15, deadline=None)
+def test_events_degenerate_equivalence_property(seed):
+    rng, trie, wl, ann = random_setup(seed, n_requests=60)
+    execu = make_workload_executor(wl)
+    obj = random_objective(rng, trie, ann)
+    reqs = rng.choice(wl.n_requests, int(rng.integers(4, 14)), replace=False)
+    seq = [run_request(trie, ann, obj, int(q), execu) for q in reqs]
+    flt, _ = run_fleet(trie, ann, obj, reqs, execu)
+    evt, stats = run_events(trie, ann, obj, reqs, execu, capacity=len(reqs))
+    assert_results_identical(seq, evt)
+    assert_results_identical(flt, evt)
+    assert stats.capacity == len(reqs)
+    assert np.all(stats.queue_wait_s == 0.0)
+
+
+@given(seed=st.integers(0, 10**6),
+       rate=st.floats(0.25, 32.0),
+       capacity=st.integers(1, 8))
+@settings(max_examples=15, deadline=None)
+def test_events_open_arrival_time_invariant_plans(seed, rate, capacity):
+    """Without a latency cap the chosen plan cannot depend on when the
+    request runs: open-arrival plans == scalar plans, and latency
+    decomposes into queue wait + back-to-back service."""
+    rng, trie, wl, ann = random_setup(seed, n_requests=60)
+    execu = make_workload_executor(wl)
+    term = trie.terminal
+    obj = Objective("max_acc", cost_cap=float(
+        np.quantile(ann.cost[term], rng.uniform(0.3, 0.9))))
+    n = int(rng.integers(3, 10))
+    reqs = rng.choice(wl.n_requests, n, replace=False)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    arrivals = np.cumsum(gaps) - gaps[0]  # first arrival at t=0
+    seq = [run_request(trie, ann, obj, int(q), execu) for q in reqs]
+    evt, stats = run_events(trie, ann, obj, reqs, execu,
+                            arrivals=arrivals, capacity=capacity)
+    waits = stats.queue_wait_s
+    assert np.all(waits >= -1e-12)
+    for a, b, w in zip(seq, evt, waits):
+        assert a.models == b.models
+        assert a.success == b.success
+        assert a.total_cost == pytest.approx(b.total_cost, abs=1e-12)
+        assert b.total_lat == pytest.approx(a.total_lat + w, abs=1e-9)

@@ -10,11 +10,12 @@ sequential loop cannot express.
 """
 import numpy as np
 import pytest
+from fleetlib import assert_results_identical, random_objective, random_setup
 
 import repro.core.fleet as fleet_mod
 from repro.core import presets
 from repro.core.controller import Objective
-from repro.core.fleet import run_fleet
+from repro.core.fleet import FleetStats, run_fleet
 from repro.core.runtime import (
     make_workload_executor,
     run_cohort,
@@ -22,68 +23,8 @@ from repro.core.runtime import (
     summarize,
 )
 from repro.core.trie import Trie
-from repro.core.workflow import ModelSpec, make_refinement_workflow
 from repro.core.workload import generate_workload
 from repro.serving.loadsim import EngineLoadModel, FleetLoadModel, LoadTrace
-
-
-def random_setup(seed: int, n_requests: int = 120):
-    rng = np.random.default_rng(seed)
-    n_models = int(rng.integers(2, 6))
-    engines = [f"e{j}" for j in range(int(rng.integers(1, 4)))]
-    specs = [
-        ModelSpec(
-            name=f"m{j}",
-            price=float(rng.uniform(0.001, 0.02)),
-            base_latency=float(rng.uniform(0.2, 1.0)),
-            per_token_latency=float(rng.uniform(0.001, 0.003)),
-            power=float(rng.uniform(0.4, 0.9)),
-            engine=str(rng.choice(engines)),
-        )
-        for j in range(n_models)
-    ]
-    tpl = make_refinement_workflow(
-        f"rand{seed}", specs, max_repairs=int(rng.integers(1, 4)))
-    trie = Trie.build(tpl)
-    wl = generate_workload(tpl, n_requests, seed=seed)
-    ann = wl.exact_annotations(trie)
-    return rng, trie, wl, ann
-
-
-def random_objective(rng, trie, ann) -> Objective:
-    term = trie.terminal
-    if rng.random() < 0.5:
-        kw = {}
-        if rng.random() < 0.7:
-            kw["cost_cap"] = float(
-                np.quantile(ann.cost[term], rng.uniform(0.2, 0.9)))
-        if rng.random() < 0.7:
-            kw["lat_cap"] = float(
-                np.quantile(ann.lat[term], rng.uniform(0.3, 0.9)))
-        return Objective("max_acc", **kw)
-    lat_cap = (float(np.quantile(ann.lat[term], 0.9))
-               if rng.random() < 0.5 else None)
-    return Objective(
-        "min_cost",
-        acc_floor=float(np.quantile(ann.acc[term], rng.uniform(0.2, 0.8))),
-        lat_cap=lat_cap,
-        acc_margin=0.02 if rng.random() < 0.3 else 0.0,
-    )
-
-
-def assert_results_identical(seq, flt):
-    assert len(seq) == len(flt)
-    for a, b in zip(seq, flt):
-        assert a.models == b.models          # same chosen plans
-        assert a.success == b.success
-        assert a.slo_violated == b.slo_violated
-        assert a.total_cost == pytest.approx(b.total_cost, abs=1e-12)
-        assert a.total_lat == pytest.approx(b.total_lat, abs=1e-9)
-    ss, sf = summarize(seq), summarize(flt)
-    for k in ss:
-        if k == "mean_replan_overhead_s":  # wall-clock, not semantics
-            continue
-        assert ss[k] == pytest.approx(sf[k], abs=1e-9), k
 
 
 @pytest.mark.parametrize("seed", range(5))
@@ -247,6 +188,122 @@ def test_fleet_planner_sees_inflight_congestion():
                   policy="dynamic_load_aware", fleet_load=load)
     assert seen[0] == 0.0          # round 0: nothing in flight yet
     assert max(seen[1:]) > 0.0     # later rounds plan against congestion
+
+
+# ----------------------------------------------------------------------
+# FleetStats / summarize edge cases (empty cohort, round-0 infeasibility)
+# ----------------------------------------------------------------------
+def test_fleet_empty_cohort():
+    """An empty cohort returns no results and all-zero stats without ever
+    touching the device planner (no jit, no percentile of an empty list)."""
+    _, trie, wl, ann = random_setup(3)
+    execu = make_workload_executor(wl)
+    res, stats = run_fleet(trie, ann, Objective("max_acc"),
+                           np.array([], dtype=np.int64), execu)
+    assert res == []
+    assert stats.rounds == 0
+    assert stats.replan_s_per_round == []
+    assert stats.total_replan_s == 0.0
+    assert stats.replan_s_per_request_round == 0.0
+    s = summarize(res)
+    assert set(s) == {"accuracy", "goodput", "mean_cost", "mean_lat",
+                      "p99_lat", "slo_violation_rate",
+                      "mean_replan_overhead_s", "mean_stages"}
+    assert all(v == 0.0 for v in s.values())
+
+
+def test_fleet_all_infeasible_round0():
+    """With an impossible budget every request gets next_model < 0 on round
+    0: one round, zero stages, and every aggregate stays finite."""
+    _, trie, wl, ann = random_setup(7)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc", cost_cap=0.0)  # nothing fits
+    res, stats = run_fleet(trie, ann, obj, np.arange(6), execu)
+    assert stats.rounds == 1
+    assert stats.replan_s_per_request_round >= 0.0
+    assert np.isfinite(stats.replan_s_per_request_round)
+    assert stats.inflight_per_round == [
+        {e: 0 for e in stats.inflight_per_round[0]}]
+    for r in res:
+        assert r.models == [] and r.n_stages == 0
+        assert not r.success and r.total_cost == 0.0 and r.total_lat == 0.0
+    s = summarize(res)
+    assert s["accuracy"] == 0.0 and s["p99_lat"] == 0.0
+    assert s["mean_stages"] == 0.0
+
+
+def test_fleet_stats_share_skips_empty_rounds():
+    """The per-request-round share ignores rounds with zero active requests
+    instead of dividing by zero."""
+    stats = FleetStats(rounds=2, replan_s_per_round=[0.2, 0.4],
+                       active_per_round=[0, 4])
+    assert stats.replan_s_per_request_round == pytest.approx(0.1)
+    assert FleetStats().replan_s_per_request_round == 0.0
+
+
+# ----------------------------------------------------------------------
+# load_probe fallback branch + FleetLoadModel invariants
+# ----------------------------------------------------------------------
+def test_fleet_load_takes_precedence_over_probe():
+    """When both fleet_load and load_probe are supplied, the fleet-coupled
+    delays win and the probe is never evaluated."""
+    tpl = presets.nl2sql_2()
+    trie = Trie.build(tpl)
+    wl = generate_workload(tpl, 80, seed=2)
+    ann = wl.exact_annotations(trie)
+    execu = make_workload_executor(wl)
+    engines = sorted({m.engine for m in tpl.models})
+    load = FleetLoadModel(
+        engines={e: EngineLoadModel(e, concurrency=2, jitter=0.0)
+                 for e in engines},
+        mean_service_s={e: 1.0 for e in engines},
+    )
+
+    def exploding_probe(t):
+        raise AssertionError("load_probe must not be called when "
+                             "fleet_load is present")
+
+    res, _ = run_fleet(trie, ann, Objective("max_acc"), np.arange(12), execu,
+                       policy="dynamic_load_aware", fleet_load=load,
+                       load_probe=exploding_probe)
+    assert len(res) == 12
+
+
+def test_fleet_load_aware_without_sources_matches_dynamic():
+    """dynamic_load_aware with neither fleet_load nor load_probe degenerates
+    to plain dynamic (all delta_e terms stay zero)."""
+    _, trie, wl, ann = random_setup(13)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc")
+    reqs = np.arange(10)
+    plain, _ = run_fleet(trie, ann, obj, reqs, execu, policy="dynamic")
+    aware, _ = run_fleet(trie, ann, obj, reqs, execu,
+                         policy="dynamic_load_aware")
+    assert_results_identical(plain, aware)
+
+
+@pytest.mark.parametrize("concurrency", [1, 2, 4, 8])
+def test_fleet_load_model_invariants(concurrency):
+    """slowdown(e, 0) == 1, slowdown monotone in occupancy, delays monotone
+    in occupancy and zero at zero occupancy; unknown engines are neutral."""
+    load = FleetLoadModel(
+        engines={"e0": EngineLoadModel("e0", concurrency=concurrency,
+                                       jitter=0.0)},
+        mean_service_s={"e0": 2.0},
+    )
+    assert load.slowdown("e0", 0) == 1.0
+    assert load.slowdown("e0", -3) == 1.0          # clamped, never < 1
+    assert load.slowdown("missing-engine", 17) == 1.0
+    prev_s, prev_d = 0.0, -1.0
+    for n in range(0, 40):
+        s = load.slowdown("e0", n)
+        d = load.delays({"e0": n})["e0"]
+        assert s >= prev_s and s >= 1.0
+        assert d >= prev_d and d >= 0.0
+        prev_s, prev_d = s, d
+    assert load.delays({"e0": 0})["e0"] == 0.0
+    # beyond the concurrency knee the queue actually bites
+    assert load.slowdown("e0", 4 * concurrency) > 1.0
 
 
 def test_run_cohort_auto_delegation_equivalent():
