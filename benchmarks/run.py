@@ -11,9 +11,10 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (fig7_frontier, fig8_mae, fig9_policy, fig10_slo,
-                            fleet_throughput, roofline, table1_errors,
-                            table2_profiling_cost, table3_overhead)
+    from benchmarks import (admission, fig7_frontier, fig8_mae, fig9_policy,
+                            fig10_slo, fleet_throughput, open_arrival,
+                            roofline, table1_errors, table2_profiling_cost,
+                            table3_overhead)
 
     benches = [
         ("fig8_mae", fig8_mae.run),
@@ -24,6 +25,8 @@ def main() -> None:
         ("fig10_slo", fig10_slo.run),
         ("table3_overhead", table3_overhead.run),
         ("fleet_throughput", fleet_throughput.run),
+        ("open_arrival", open_arrival.run),
+        ("admission", admission.run),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")

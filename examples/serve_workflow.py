@@ -20,9 +20,16 @@ With ``--arrival-rate`` the closed cohort becomes an open Poisson stream
 served by the event-driven runtime (`repro.core.events`): requests are
 admitted into a fixed number of slots as they arrive, queue when serving is
 saturated, and SLO latency is measured from each request's arrival.
+``--admission`` selects the admission-control/load-shedding policy for
+that mode (`repro.core.admission`): "always" (FIFO, the default),
+"feasibility" (reject infeasible work at the gate, shed it at the
+deadline), or "cost_aware" (adds goodput-per-token triage under engine
+overload).
 
     PYTHONPATH=src python examples/serve_workflow.py [--requests 60]
     PYTHONPATH=src python examples/serve_workflow.py --arrival-rate 2.0
+    PYTHONPATH=src python examples/serve_workflow.py --arrival-rate 4.0 \\
+        --admission feasibility --slo 20
 """
 import argparse
 import time
@@ -113,6 +120,14 @@ def main():
                          "the event-driven runtime")
     ap.add_argument("--capacity", type=int, default=16,
                     help="admission slots for --arrival-rate mode")
+    ap.add_argument("--admission", default="always",
+                    choices=("always", "feasibility", "cost_aware"),
+                    help="admission/load-shedding policy for "
+                         "--arrival-rate mode (repro.core.admission)")
+    ap.add_argument("--slo", type=float, default=None,
+                    help="latency SLO in seconds (from arrival) for "
+                         "--arrival-rate mode; required for the shedding "
+                         "policies to have a deadline to act on")
     args = ap.parse_args()
 
     print("== 1. training the model zoo (real JAX models) ==")
@@ -158,19 +173,26 @@ def main():
     fresh = np.arange(args.requests, args.requests * 2)
     if args.arrival_rate is not None:
         # open-arrival mode: Poisson stream through the event-driven
-        # runtime — admission queueing + overlap-aware engine occupancy
+        # runtime — admission queueing + overlap-aware engine occupancy,
+        # with the selected admission-control/load-shedding policy
+        if args.slo is not None:
+            obj = Objective("max_acc", cost_cap=cap, lat_cap=args.slo)
         arr = poisson_arrivals(len(fresh), args.arrival_rate, seed=1)
         res, stats = run_events(trie, ann, obj, fresh, executor,
-                                arrivals=arr, capacity=args.capacity)
+                                arrivals=arr, capacity=args.capacity,
+                                admission=args.admission)
         s = summarize(res)
         print(f"   budget=${cap:.4f}  rate={args.arrival_rate:.2f}/s "
-              f"capacity={args.capacity}")
+              f"capacity={args.capacity}  admission={stats.policy}"
+              + (f"  slo={args.slo:.1f}s" if args.slo is not None else ""))
         print(f"   VineLM open-arrival: acc={s['accuracy']:.3f} "
-              f"cost=${s['mean_cost']:.4f} p99={s['p99_lat']:.2f}s "
-              f"(from arrival)")
+              f"goodput={s['goodput']:.3f} cost=${s['mean_cost']:.4f} "
+              f"p99={s['p99_lat']:.2f}s (from arrival)")
         print(f"   {stats.events} events, {stats.replans} batched replans, "
               f"mean queue wait {stats.mean_queue_wait_s:.2f}s, "
               f"peak in-flight {max(stats.peak_occupancy.values())}")
+        print(f"   admitted={stats.admitted} rejected={stats.rejected} "
+              f"shed={stats.shed} downgraded={stats.downgraded}")
         return
     # VineLM: the fleet runtime serves the whole cohort in lockstep — one
     # batched replan per round against the live engines

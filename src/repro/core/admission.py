@@ -1,0 +1,263 @@
+"""Deadline-aware admission control and load shedding (beyond-paper).
+
+Under open arrivals the event-driven runtime (`repro.core.events`) admits
+every request FIFO: queue wait silently burns each request's latency budget
+until the planner finds no feasible path and the work already spent on it is
+wasted — while the doomed request's in-service stage keeps inflating every
+peer's processor-sharing slowdown.  Serving-side decisions (admit, shed,
+downgrade) must be co-designed with the per-stage router (cf. Aragog's
+just-in-time routing and the workflow-aware serving layer in PAPERS.md);
+this module supplies them as pluggable *policies* consulted by `run_events`
+at each arrival and each stage-completion event:
+
+- **reject on arrival**: a request whose remaining budget cannot cover any
+  feasible path — per the *batched planner's own feasibility output* under
+  the live per-engine delays — is turned away before it occupies an engine;
+- **mid-flight shed**: a request whose realized prefix has become
+  infeasible (planner returns no continuation after >=1 executed stage), or
+  whose deadline passes while a stage is still in service, is aborted and
+  its engine share released immediately (`EngineSim.cancel`);
+- **cost-aware shedding / downgrade**: under engine overload, in-service
+  requests are ranked by a goodput-per-token score (attainable success
+  probability per dollar of remaining spend) and the worst are downgraded
+  to the cheapest feasible path — or shed outright — until occupancy drops
+  back under the target.
+
+Every decision is host-side numpy or reuses the SAME capacity-shaped jitted
+fleet-step program (free planner lanes double as admission probes), so
+admission control adds ZERO compiled specializations — the no-retrace
+invariant `controller_jax.fleet_planner_cache_size` guards extends to the
+admission path (asserted by `benchmarks/admission.py`).
+
+Policies are selected by name via ``run_cohort(admission=...)`` /
+``run_events(admission=...)``: ``"always"`` (the PR-2 FIFO behavior,
+result-identical to passing nothing), ``"feasibility"``
+(`FeasibilityGate`), ``"cost_aware"`` (`CostAwareShed`), or any
+`AdmissionPolicy` instance.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.controller import Objective, select_path
+from repro.core.trie import Trie, TrieAnnotations
+
+#: per-request terminal outcomes reported via ``ExecutionResult.outcome``
+SERVED = "served"      # ran to success / exhausted depth / planner stop
+REJECTED = "rejected"  # turned away before any stage executed
+SHED = "shed"          # aborted mid-flight (>=1 stage executed or in service)
+
+
+def _subtree_reductions(trie: Trie, ann: TrieAnnotations,
+                        terminal_mask: np.ndarray):
+    """(best_acc, min_cost) over the *terminal* descendants of every node.
+
+    One reverse-preorder sweep: children fold into parents, so
+    ``best_acc[u]`` is the highest attainable plan accuracy and
+    ``min_cost[u]`` the cheapest attainable absolute plan cost anywhere in
+    u's remaining subtrie (-inf / +inf where no terminal is reachable)."""
+    best_acc = np.where(terminal_mask, ann.acc, -np.inf)
+    min_cost = np.where(terminal_mask, ann.cost, np.inf)
+    for v in range(trie.n_nodes - 1, 0, -1):
+        p = int(trie.parent[v])
+        if best_acc[v] > best_acc[p]:
+            best_acc[p] = best_acc[v]
+        if min_cost[v] < min_cost[p]:
+            min_cost[p] = min_cost[v]
+    return best_acc, min_cost
+
+
+class AdmissionPolicy:
+    """Base policy: always admit — bit-identical to the PR-2 FIFO runtime.
+
+    Subclasses override the hooks below; `run_events` consults them at
+    well-defined points of each virtual-clock event (all times are seconds
+    of virtual time, elapsed budgets are measured from *arrival*):
+
+    ``queue_reject(elapsed)``
+        called for every request still waiting in the admission queue;
+        return True to reject it without ever assigning a slot.
+    ``classify_infeasible(n_executed_stages)``
+        called when the batched planner returns no feasible path for a
+        request; returns the outcome label (`SERVED` keeps the PR-2
+        accounting, `REJECTED`/`SHED` record an admission decision).
+    ``overload_actions(engine, jobs, downgraded)``
+        called after dispatch for each engine whose occupancy exceeds
+        ``max_occupancy`` (when set); ``jobs`` is one tuple per in-service
+        request on that engine — ``(slot, prefix_node, elapsed_cost,
+        elapsed_lat)`` with elapsed measured from arrival, so policies can
+        triage on spend, remaining subtrie, or burned deadline; returns
+        [(slot, "shed"|"downgrade")].
+
+    ``shed_on_deadline`` (class attr): when True and the objective carries a
+    latency cap, `run_events` schedules a shed event at each admitted
+    request's ``arrival + lat_cap`` and aborts it (releasing its engine
+    share) if it is still in flight at that instant.
+    """
+
+    name = "always"
+    shed_on_deadline = False
+    max_occupancy: int | None = None
+
+    def bind(self, trie: Trie, ann: TrieAnnotations, obj: Objective,
+             terminal_mask: np.ndarray) -> None:
+        """Precompute per-run lookups; called once per `run_events`."""
+        self.obj = obj
+
+    def queue_reject(self, elapsed: float) -> bool:
+        return False
+
+    def classify_infeasible(self, n_executed_stages: int) -> str:
+        return SERVED
+
+    def overload_actions(self, engine: str,
+                         jobs: list[tuple[int, int, float, float]],
+                         downgraded: np.ndarray
+                         ) -> list[tuple[int, str]]:
+        return []
+
+
+class FeasibilityGate(AdmissionPolicy):
+    """Reject infeasible work at the gate; shed it when the deadline dies.
+
+    - Arrival/queue: a queued request is rejected as soon as its burned
+      budget provably rules out every path — ``elapsed > lat_cap -
+      min_path_lat + margin`` uses the *unloaded* minimum remaining path
+      latency as a conservative lower bound (live delays only add), so the
+      host never rejects anything the float32 device planner would accept.
+      Requests that survive the bound are probed with the batched planner
+      itself at slot-assignment time (free lanes are planned anyway) and
+      rejected if it returns no feasible path under the live delays.
+    - Mid-flight: planner infeasibility after >=1 executed stage is
+      recorded as a shed, and — the part FIFO cannot do — a request whose
+      deadline passes *while a stage is in service* is aborted on the spot,
+      releasing its processor-sharing share so surviving requests speed up.
+    """
+
+    name = "feasibility"
+    shed_on_deadline = True
+
+    def __init__(self, margin: float = 1e-4):
+        # slack protecting the host float64 bound against the device
+        # planner's float32 arithmetic (+1e-6 absolute feasibility slack)
+        self.margin = float(margin)
+
+    def bind(self, trie, ann, obj, terminal_mask):
+        super().bind(trie, ann, obj, terminal_mask)
+        if terminal_mask.any():
+            self._min_path_lat = float(
+                np.min(ann.lat[terminal_mask]) - ann.lat[0])
+        else:
+            self._min_path_lat = 0.0  # no plans: let the planner say -1
+
+    def queue_reject(self, elapsed: float) -> bool:
+        cap = self.obj.lat_cap
+        if cap is None:
+            return False
+        return elapsed > cap - self._min_path_lat + self.margin
+
+    def classify_infeasible(self, n_executed_stages: int) -> str:
+        return SHED if n_executed_stages > 0 else REJECTED
+
+
+class CostAwareShed(FeasibilityGate):
+    """Feasibility gate + goodput-per-token triage under engine overload.
+
+    Whenever an engine's occupancy exceeds ``max_occupancy`` after a
+    dispatch, in-service requests on it are ranked by
+
+        score = best attainable remaining accuracy
+                / (dollars spent + cheapest remaining plan dollars)
+
+    — expected goodput per token paid, with plan cost standing in for
+    tokens (cost IS price x tokens in this workload).  The lowest-scoring
+    excess requests are *downgraded* first (their remaining stages re-route
+    to the cheapest feasible path via the host float64 search — no extra
+    device programs) and shed outright only if a previous overload already
+    downgraded them or no cheaper path exists.
+    """
+
+    name = "cost_aware"
+
+    def __init__(self, max_occupancy: int = 8, margin: float = 1e-4,
+                 downgrade: bool = True):
+        super().__init__(margin=margin)
+        if max_occupancy < 1:
+            raise ValueError("max_occupancy must be >= 1")
+        self.max_occupancy = int(max_occupancy)
+        self.downgrade = bool(downgrade)
+
+    def bind(self, trie, ann, obj, terminal_mask):
+        super().bind(trie, ann, obj, terminal_mask)
+        self._best_acc, self._min_cost = _subtree_reductions(
+            trie, ann, terminal_mask)
+
+    def score(self, u: int, elapsed_cost: float) -> float:
+        """Goodput-per-token triage score of a request re-rooted at u."""
+        acc = self._best_acc[u]
+        if not np.isfinite(acc):
+            return -np.inf  # no reachable plan: shed first
+        remaining = max(self._min_cost[u] - float(elapsed_cost), 0.0)
+        return float(max(acc, 0.0) / (elapsed_cost + remaining + 1e-9))
+
+    def overload_actions(self, engine, jobs, downgraded):
+        excess = len(jobs) - self.max_occupancy
+        if excess <= 0:
+            return []
+        ranked = sorted(jobs, key=lambda j: (self.score(j[1], j[2]), j[0]))
+        out = []
+        for slot, u, ecost, elapsed in ranked[:excess]:
+            if self.downgrade and not downgraded[slot]:
+                out.append((slot, "downgrade"))
+            else:
+                out.append((slot, "shed"))
+        return out
+
+
+def cheapest_feasible_target(trie: Trie, ann: TrieAnnotations,
+                             obj: Objective, u: int, elapsed_lat: float,
+                             engine_delays: dict[str, float] | None,
+                             terminal_mask: np.ndarray | None = None) -> int:
+    """Cheapest plan still feasible from prefix ``u`` (host float64 search).
+
+    The downgrade target: same latency/cost caps as ``obj`` but the
+    objective flips to min-cost with a vacuous accuracy floor — "finish as
+    cheaply as the budget allows".  Runs entirely on the host, so repeated
+    downgrade replans add no device programs."""
+    down = Objective("min_cost", acc_floor=-1.0,
+                     cost_cap=obj.cost_cap, lat_cap=obj.lat_cap)
+    if terminal_mask is None:
+        return select_path(trie, ann, down, root=u, elapsed_lat=elapsed_lat,
+                           engine_delays=engine_delays)
+    saved = trie.terminal
+    try:
+        trie.terminal = saved & terminal_mask
+        return select_path(trie, ann, down, root=u, elapsed_lat=elapsed_lat,
+                           engine_delays=engine_delays)
+    finally:
+        trie.terminal = saved
+
+
+_BY_NAME = {
+    "always": AdmissionPolicy,
+    "feasibility": FeasibilityGate,
+    "cost_aware": CostAwareShed,
+}
+
+
+def get_policy(spec) -> AdmissionPolicy:
+    """Resolve ``admission=`` the way `run_events` does: None or a name from
+    {"always", "feasibility", "cost_aware"}, or a policy instance."""
+    if spec is None:
+        return AdmissionPolicy()
+    if isinstance(spec, AdmissionPolicy):
+        return spec
+    if isinstance(spec, str):
+        cls = _BY_NAME.get(spec)
+        if cls is None:
+            raise ValueError(
+                f"unknown admission policy {spec!r}: expected one of "
+                f"{sorted(_BY_NAME)} or an AdmissionPolicy instance")
+        return cls()
+    raise TypeError(f"admission must be a policy name, AdmissionPolicy "
+                    f"instance, or None — got {type(spec).__name__}")

@@ -255,6 +255,38 @@ def make_fleet_planner(td: TrieDevice, obj: Objective):
     return step
 
 
+def make_admission_probe(td: TrieDevice, obj: Objective):
+    """Batched admission-feasibility probe for the load-shedding layer.
+
+    Returns feasible(prefixes, elapsed_lat, elapsed_cost, engine_delays) ->
+    (B,) bool: True where at least one terminating plan in the request's
+    remaining subtrie fits its remaining budgets under the live per-engine
+    delays.  This is exactly ``targets >= 0`` of the fleet-step program —
+    the probe invokes the SAME module-level jitted `_fleet_step` with the
+    same operand shapes as `make_fleet_planner`, so consulting it at
+    arrival/admission time adds ZERO compiled specializations
+    (`fleet_planner_cache_size` must not grow; `benchmarks/admission.py`
+    and tests/test_admission.py assert this).  The event-driven runtime
+    gets the same answer for free by loading probe rows into free planner
+    lanes; this standalone wrapper serves external admission gates."""
+    scalars = _objective_scalars(obj)
+
+    def feasible(prefixes, elapsed_lat, elapsed_cost, engine_delays):
+        # canonicalize dtypes BEFORE the jit boundary: a float64 operand
+        # (numpy's default) would otherwise trace a new specialization and
+        # void the zero-compile guarantee this probe exists to provide
+        tgt, _ = _fleet_step(
+            td,
+            np.asarray(prefixes, dtype=np.int32),
+            np.asarray(elapsed_lat, dtype=np.float32),
+            np.asarray(elapsed_cost, dtype=np.float32),
+            np.asarray(engine_delays, dtype=np.float32),
+            *scalars, kind=obj.kind)
+        return np.asarray(tgt) >= 0
+
+    return feasible
+
+
 def next_model_for(trie: Trie, u: int, target: int) -> int:
     """First model on the path u -> target (host-side, O(depth))."""
     if target < 0 or target == u:

@@ -6,9 +6,9 @@ setting (§4.3) is open: requests arrive continuously, and VineLM re-roots
 each one's trie against the load its in-flight peers impose at that moment.
 `run_events` models exactly that with a virtual-clock event loop:
 
-- two event kinds — request **arrival** and **stage completion** — drive
-  the clock; nothing happens between events, so the loop is O(events), not
-  O(time);
+- three event kinds — request **arrival**, **stage completion**, and (under
+  a shedding admission policy) **deadline shed** — drive the clock; nothing
+  happens between events, so the loop is O(events), not O(time);
 - per-request control state lives in **fixed-capacity slot arrays**: the
   batched device planner (`controller_jax.make_fleet_planner`) is always
   called with batch shape ``(capacity,)`` and free/stale slots are simply
@@ -28,7 +28,25 @@ each one's trie against the load its in-flight peers impose at that moment.
 - elapsed latency — both the planner's remaining-deadline input and the
   reported `total_lat` — is measured **from each request's arrival time**,
   so queueing delay counts against the SLO exactly as it would in a real
-  deployment.
+  deployment;
+- an **admission-control / load-shedding policy** (`repro.core.admission`,
+  selected via ``admission=``) is consulted at each arrival and each
+  stage-completion event: it can reject requests whose remaining budget
+  admits no feasible path (per the batched planner's own feasibility
+  output under the live delays), drop hopeless requests from the queue,
+  abort in-service stages at the deadline (`EngineSim.cancel` releases the
+  engine share so survivors speed up), and under overload downgrade or
+  shed in-flight requests by a goodput-per-token score.  The default
+  (``admission=None`` == ``"always"``) keeps the pure FIFO behavior.
+
+Event-loop contract (what an executor/policy author may rely on): events
+are processed in virtual-time order; at one timestamp the order is (1)
+stage completions, (2) deadline sheds, (3) arrivals joining the queue, (4)
+queue rejections, then an admit → batched-replan → dispatch cycle that
+repeats within the event while freed slots can absorb queued arrivals
+(overload shedding runs after each dispatch).  All times are seconds of
+virtual time; the only wall-clock measurement is the planner-call duration
+recorded in `EventStats.replan_s`.
 
 Degenerate case: with all arrivals at t=0, slot capacity >= cohort size and
 no load coupling, every stage runs back-to-back on its request's own
@@ -50,10 +68,18 @@ from typing import Callable
 
 import numpy as np
 
+from repro.core.admission import (
+    REJECTED,
+    SERVED,
+    SHED,
+    cheapest_feasible_target,
+    get_policy,
+)
 from repro.core.controller import Objective
 from repro.core.controller_jax import (
     TrieDevice,
     make_fleet_planner,
+    next_model_for,
     trie_engines,
 )
 from repro.core.runtime import ExecutionResult, StageExecutor
@@ -67,13 +93,18 @@ class EventStats:
     """Control-plane telemetry for one `run_events` call."""
 
     capacity: int = 0
+    policy: str = "always"          # admission policy name
     events: int = 0                 # distinct virtual-clock timestamps processed
     replans: int = 0                # batched planner calls (shape = capacity)
-    admitted: int = 0
+    admitted: int = 0               # requests the policy accepted for service
+    rejected: int = 0               # turned away before any stage executed
+    shed: int = 0                   # aborted mid-flight (incl. deadline sheds)
+    downgraded: int = 0             # re-routed to the cheapest feasible path
     replan_s: list = dataclasses.field(default_factory=list)
     planned_per_replan: list = dataclasses.field(default_factory=list)
     peak_occupancy: dict = dataclasses.field(default_factory=dict)
-    # per-request timelines, aligned with the ``requests`` argument
+    # per-request outcome labels + timelines, aligned with ``requests``
+    outcome: list = dataclasses.field(default_factory=list)
     arrival_t: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0))
     admit_t: np.ndarray = dataclasses.field(
@@ -114,6 +145,7 @@ def run_events(
     arrivals: np.ndarray | None = None,
     capacity: int | None = None,
     policy: str = "dynamic",
+    admission=None,
     restrict_nodes: np.ndarray | None = None,
     load_probe: Callable[[float], dict[str, float]] | None = None,
     fleet_load=None,
@@ -127,6 +159,12 @@ def run_events(
     slot-array size and therefore the planner's batch shape; it defaults
     to the cohort size for closed cohorts (guaranteeing `run_fleet`
     equivalence) and to ``min(len(requests), 64)`` for open arrivals.
+    ``admission`` selects the admission-control / load-shedding policy:
+    None or ``"always"`` (FIFO, admit everything — the default),
+    ``"feasibility"``, ``"cost_aware"``, or any
+    `repro.core.admission.AdmissionPolicy` instance; rejected and shed
+    requests are reported with ``ExecutionResult.outcome`` set to
+    ``"rejected"`` / ``"shed"`` and counted in `EventStats`.
     Results are returned in ``requests`` order; `total_lat` and the SLO
     check are measured from each request's *arrival*, so admission-queue
     wait counts against the deadline.
@@ -135,6 +173,7 @@ def run_events(
         raise ValueError(f"unsupported events policy {policy!r}: the static "
                          "baseline plans once per request — use run_cohort's "
                          "scalar path")
+    pol = get_policy(admission)
     requests = np.asarray(requests)
     B = int(requests.shape[0])
     if arrivals is None:
@@ -153,6 +192,8 @@ def run_events(
         raise ValueError("capacity must be >= 1")
 
     stats = EventStats(capacity=C,
+                       policy=pol.name,
+                       outcome=[SERVED] * B,
                        arrival_t=arrivals.copy(),
                        admit_t=np.zeros(B, dtype=np.float64),
                        done_t=np.zeros(B, dtype=np.float64))
@@ -166,6 +207,16 @@ def run_events(
     engine_of_model = np.asarray(td.engine_of_model, dtype=np.int64)
     max_depth = trie.template.max_depth
     load_aware = policy == "dynamic_load_aware"
+
+    # effective terminal mask (restrict_nodes applied) — the policy's
+    # feasibility bounds must see exactly what the device planner sees
+    term_mask = trie.terminal.copy()
+    if restrict_nodes is not None:
+        keep = np.zeros(trie.n_nodes, dtype=bool)
+        keep[restrict_nodes] = True
+        term_mask &= keep
+    pol.bind(trie, ann, obj, term_mask)
+    deadline_sheds = pol.shed_on_deadline and obj.lat_cap is not None
 
     # one processor-sharing simulation per engine; numpy-only module, but
     # imported lazily so `repro.core` stays importable without the serving
@@ -188,6 +239,7 @@ def run_events(
     elapsed_cost = np.zeros(C, dtype=np.float64)
     stage_model = np.full(C, -1, dtype=np.int64)   # in-service stage, -1 idle
     stage_success = np.zeros(C, dtype=bool)
+    downgraded = np.zeros(C, dtype=bool)           # cost-aware re-route flag
     free: list[int] = list(range(C))
     heapq.heapify(free)
 
@@ -201,6 +253,9 @@ def run_events(
     order = np.argsort(arrivals, kind="stable")
     arr_ptr = 0
     pending: deque[int] = deque()
+    # (deadline, slot, owner) — lazily invalidated when the slot changes
+    # hands; owner mismatch == stale entry
+    shed_heap: list[tuple[float, int, int]] = []
 
     def finish(i: int, slot: int, t: float) -> None:
         stats.done_t[i] = t
@@ -210,13 +265,28 @@ def run_events(
         elapsed_lat[slot] = 0.0
         elapsed_cost[slot] = 0.0
         stage_model[slot] = -1
+        downgraded[slot] = False
         heapq.heappush(free, slot)
+
+    def next_shed() -> float:
+        while shed_heap and slot_owner[shed_heap[0][1]] != shed_heap[0][2]:
+            heapq.heappop(shed_heap)
+        return shed_heap[0][0] if shed_heap else np.inf
+
+    def shed(i: int, slot: int, t: float) -> None:
+        """Abort a request mid-flight; its engine share frees immediately."""
+        m = int(stage_model[slot])
+        if m >= 0:
+            sims[engines[int(engine_of_model[m])]].cancel(slot, t)
+        stats.outcome[i] = SHED
+        stats.shed += 1
+        finish(i, slot, t)
 
     while True:
         t_arr = arrivals[order[arr_ptr]] if arr_ptr < B else np.inf
         t_done = min((s.next_completion() for s in sims.values()),
                      default=np.inf)
-        t = min(t_arr, t_done)
+        t = min(t_arr, t_done, next_shed())
         if not np.isfinite(t):
             assert not pending and np.all(slot_owner < 0), \
                 "event loop stalled with work outstanding"
@@ -240,10 +310,52 @@ def run_events(
                 else:
                     need_replan.append(slot)
 
+        # 1b. deadline sheds.  (i) Certainty test: the processor-sharing
+        #     rate never exceeds 1, so ``t + remaining unloaded work`` lower-
+        #     bounds an in-service stage's completion; the moment that bound
+        #     overruns the deadline the request can never make its SLO and
+        #     is shed immediately — under saturation this fires well before
+        #     the deadline itself.  (ii) Backstop: the deadline is also a
+        #     scheduled event (shed_heap), so a doomed request never
+        #     outlives its cap waiting for an unrelated event.  Completions
+        #     at the same instant (step 1) win the tie.
+        if deadline_sheds:
+            for slot in range(C):
+                i = int(slot_owner[slot])
+                if i < 0 or stage_model[slot] < 0:
+                    continue
+                ddl = arrivals[i] + obj.lat_cap
+                e = engines[int(engine_of_model[stage_model[slot]])]
+                if (t >= ddl
+                        or t + sims[e].remaining_work(slot, t) > ddl + 1e-9):
+                    shed(i, slot, t)
+        while shed_heap and shed_heap[0][0] <= t:
+            _, slot, i = heapq.heappop(shed_heap)
+            if slot_owner[slot] != i:
+                continue  # stale: the request finished, slot moved on
+            if slot in need_replan:
+                need_replan.remove(slot)
+            shed(i, slot, t)
+
         # 2. arrivals at exactly t join the admission queue (FIFO)
         while arr_ptr < B and arrivals[order[arr_ptr]] <= t:
             pending.append(int(order[arr_ptr]))
             arr_ptr += 1
+
+        # 2b. queue rejections: requests whose burned budget provably rules
+        #     out every path never take a slot (policy-dependent; the
+        #     default always-admit policy keeps everything)
+        if pending:
+            kept: deque[int] = deque()
+            for i in pending:
+                if pol.queue_reject(t - arrivals[i]):
+                    stats.outcome[i] = REJECTED
+                    stats.rejected += 1
+                    stats.admit_t[i] = t
+                    stats.done_t[i] = t
+                else:
+                    kept.append(i)
+            pending = kept
 
         # 3-5. admit / replan / dispatch — repeated within this event
         # because a dispatch-time-infeasible request frees its slot
@@ -260,6 +372,10 @@ def run_events(
                 elapsed_cost[slot] = 0.0
                 stats.admit_t[i] = t
                 stats.admitted += 1
+                if deadline_sheds:
+                    t_d = arrivals[i] + obj.lat_cap
+                    if t_d > t:
+                        heapq.heappush(shed_heap, (t_d, slot, i))
                 need_replan.append(slot)
 
             if not need_replan:
@@ -269,34 +385,54 @@ def run_events(
             # 4. refresh deadline-elapsed (queue wait burns the budget) for
             #    the slots being planned, then ONE batched planner call over
             #    the full fixed-capacity arrays — free/mid-stage slots are
-            #    computed but masked out on the host
+            #    computed but masked out on the host.  This same call is the
+            #    admission probe: a newly admitted request whose lane comes
+            #    back -1 had no feasible path at its admission instant.
             for slot in need_replan:
                 elapsed_lat[slot] = t - arrivals[slot_owner[slot]]
             delays = np.zeros((C, E), dtype=np.float32)
+            delay_dict: dict[str, float] | None = None
             if load_aware:
                 if fleet_load is not None:
-                    d = fleet_load.delays(
+                    delay_dict = fleet_load.delays(
                         {e: sims[e].occupancy for e in engines})
                     delays[:] = np.array(
-                        [d.get(e, 0.0) for e in engines], dtype=np.float32)
+                        [delay_dict.get(e, 0.0) for e in engines],
+                        dtype=np.float32)
                 elif load_probe is not None:
-                    d = load_probe(t_start + t)
-                    row = [d.get(e, 0.0) for e in engines]
+                    delay_dict = load_probe(t_start + t)
+                    row = [delay_dict.get(e, 0.0) for e in engines]
                     for slot in need_replan:
                         delays[slot] = row
             t0 = time.perf_counter()
-            _, nxts = plan_step(
+            tgts, nxts = plan_step(
                 u,
                 elapsed_lat.astype(np.float32),
                 elapsed_cost.astype(np.float32),
                 delays,
             )
             nxts = np.asarray(nxts)  # blocks until the device call is done
+            tgts = np.asarray(tgts)
             replan_s = time.perf_counter() - t0
             stats.replans += 1
             stats.replan_s.append(replan_s)
             stats.planned_per_replan.append(len(need_replan))
             share = replan_s / len(need_replan)
+
+            # 4b. downgraded slots re-route to the cheapest feasible path
+            #     (host float64 search, zero extra device programs); the
+            #     batched lane is computed anyway and simply overridden
+            if downgraded.any():
+                nxts, tgts = nxts.copy(), tgts.copy()
+                for slot in need_replan:
+                    if not downgraded[slot]:
+                        continue
+                    tgt = cheapest_feasible_target(
+                        trie, ann, obj, int(u[slot]),
+                        float(elapsed_lat[slot]), delay_dict, term_mask)
+                    tgts[slot] = tgt
+                    nxts[slot] = (next_model_for(trie, int(u[slot]), tgt)
+                                  if tgt >= 0 else -1)
 
             # 5. dispatch: start the chosen stage of every planned slot
             for slot in need_replan:
@@ -304,7 +440,24 @@ def run_events(
                 overhead[i] += share
                 m = int(nxts[slot])
                 if m < 0:
-                    finish(i, slot, t)   # no feasible continuation: stop
+                    # next_model < 0 covers two distinct verdicts, told
+                    # apart by the target lane: target >= 0 means the
+                    # realized prefix is itself the best terminating plan
+                    # ("stop here" — a served disposition under every
+                    # policy), target < 0 means NO feasible path remains.
+                    # Only the latter is an admission decision: a gated
+                    # request that never executed a stage was rejected at
+                    # admission; one with realized work was shed mid-flight.
+                    if int(tgts[slot]) < 0:
+                        label = pol.classify_infeasible(len(models[i]))
+                        if label == REJECTED:
+                            stats.outcome[i] = REJECTED
+                            stats.rejected += 1
+                            stats.admitted -= 1
+                        elif label == SHED:
+                            stats.outcome[i] = SHED
+                            stats.shed += 1
+                    finish(i, slot, t)
                     continue
                 d = int(trie.depth[u[slot]])
                 s, c, lat = executor(int(requests[i]), d, m, t_start + t)
@@ -317,6 +470,32 @@ def run_events(
                 stats.peak_occupancy[e] = max(
                     stats.peak_occupancy[e], sims[e].occupancy)
             need_replan = []
+
+            # 5b. overload shedding/downgrading: the policy ranks in-service
+            #     requests on any engine past its occupancy target by
+            #     goodput-per-token and trims the excess; freed slots can
+            #     absorb queued arrivals in the next pass of this loop
+            if pol.max_occupancy is not None:
+                for e in engines:
+                    if sims[e].occupancy <= pol.max_occupancy:
+                        continue
+                    jobs = [
+                        (slot, int(u[slot]), float(elapsed_cost[slot]),
+                         t - arrivals[slot_owner[slot]])
+                        for slot in range(C)
+                        if slot_owner[slot] >= 0 and stage_model[slot] >= 0
+                        and engines[int(engine_of_model[stage_model[slot]])]
+                        == e
+                    ]
+                    for slot, action in pol.overload_actions(
+                            e, jobs, downgraded):
+                        if action == "downgrade":
+                            if not downgraded[slot]:
+                                downgraded[slot] = True
+                                stats.downgraded += 1
+                        else:
+                            shed(int(slot_owner[slot]), slot, t)
+
             if not (free and pending):
                 break
 
@@ -332,5 +511,6 @@ def run_events(
             n_stages=len(models[i]),
             replan_overhead_s=float(overhead[i]),
             slo_violated=bool(slo),
+            outcome=stats.outcome[i],
         ))
     return results, stats

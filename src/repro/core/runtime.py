@@ -28,6 +28,11 @@ class ExecutionResult:
     n_stages: int
     replan_overhead_s: float
     slo_violated: bool
+    # admission disposition (repro.core.admission): "served" on every
+    # closed-cohort path; the event-driven runtime reports requests its
+    # admission policy turned away ("rejected") or aborted mid-flight
+    # ("shed")
+    outcome: str = "served"
 
 
 # executor(q, depth, model, t_now) -> (success, cost, latency)
@@ -122,12 +127,16 @@ def run_cohort(
                  lockstep with one batched device planner call per round.
       "events" — `repro.core.events.run_events`: open-arrival event-driven
                  serving on a virtual clock (``arrivals=``/``capacity=``);
-                 SLO latency is measured from each request's arrival.
-      "auto"   — events whenever ``arrivals``/``capacity`` is given, else
-                 fleet for dynamic policies on cohorts of at least
-                 8 requests (where the batched planner amortizes its call
-                 overhead), scalar otherwise.  The "static" policy plans
-                 once per request, so there is nothing to batch.
+                 SLO latency is measured from each request's arrival, and
+                 ``admission=`` selects an admission-control/load-shedding
+                 policy ("always", "feasibility", "cost_aware", or an
+                 `repro.core.admission.AdmissionPolicy` instance).
+      "auto"   — events whenever ``arrivals``/``capacity``/``admission``
+                 is given, else fleet for dynamic policies on cohorts of
+                 at least 8 requests (where the batched planner amortizes
+                 its call overhead), scalar otherwise.  The "static"
+                 policy plans once per request, so there is nothing to
+                 batch.
     The scalar, fleet, and (closed-cohort, full-capacity) events paths
     produce identical per-request results for dynamic policies (asserted by
     tests/test_fleet.py and tests/test_events*.py); they differ only in how
@@ -138,7 +147,7 @@ def run_cohort(
                          "expected 'auto', 'fleet', 'scalar', or 'events'")
     policy = kw.get("policy", "dynamic")
     if engine == "auto":
-        if "arrivals" in kw or "capacity" in kw:
+        if "arrivals" in kw or "capacity" in kw or "admission" in kw:
             engine = "events"
         else:
             use_fleet = policy != "static" and (
@@ -149,7 +158,7 @@ def run_cohort(
 
         results, _ = run_events(trie, ann, obj, requests, executor, **kw)
         return results
-    for k in ("arrivals", "capacity"):
+    for k in ("arrivals", "capacity", "admission"):
         if k in kw:
             raise ValueError(
                 f"{k!r} models open-arrival admission — it requires the "
@@ -168,7 +177,8 @@ def run_cohort(
 
 
 _SUMMARY_KEYS = ("accuracy", "goodput", "mean_cost", "mean_lat", "p99_lat",
-                 "slo_violation_rate", "mean_replan_overhead_s", "mean_stages")
+                 "slo_violation_rate", "mean_replan_overhead_s", "mean_stages",
+                 "reject_rate", "shed_rate")
 
 
 def summarize(results: list[ExecutionResult]) -> dict:
@@ -189,4 +199,7 @@ def summarize(results: list[ExecutionResult]) -> dict:
         "slo_violation_rate": sum(r.slo_violated for r in results) / n,
         "mean_replan_overhead_s": float(np.mean([r.replan_overhead_s for r in results])),
         "mean_stages": float(np.mean([r.n_stages for r in results])),
+        # admission-control dispositions (always 0.0 on closed-cohort paths)
+        "reject_rate": sum(r.outcome == "rejected" for r in results) / n,
+        "shed_rate": sum(r.outcome == "shed" for r in results) / n,
     }

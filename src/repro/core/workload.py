@@ -23,6 +23,7 @@ Everything is deterministic given ``seed``.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
@@ -143,16 +144,75 @@ def poisson_arrivals(n: int, rate: float, seed: int = 0) -> np.ndarray:
     return np.cumsum(rng.exponential(1.0 / rate, size=n))
 
 
-def trace_arrivals(times) -> np.ndarray:
-    """Validate a trace-driven arrival process: a 1-d sequence of finite,
-    non-negative arrival offsets (seconds).  Returns the times sorted
-    ascending (stable), the form `run_events` consumes."""
+def trace_arrivals(times, n: int | None = None,
+                   rate_scale: float = 1.0) -> np.ndarray:
+    """Trace-replay arrival process: a 1-d sequence of finite, non-negative
+    arrival offsets (seconds), sorted ascending (stable) — the form
+    `run_events` consumes.
+
+    ``n`` selects the first n arrivals of the (sorted) trace for a cohort
+    of n requests.  A trace *shorter* than n used to yield a zero-length
+    cohort downstream (the arrivals/requests shape check fails and callers
+    fell back to serving nothing); now the count is **clamped to the trace
+    length with a warning**, so the caller can trim its request cohort to
+    ``len(result)`` instead of crashing the slot math.
+
+    ``rate_scale`` replays the trace at a scaled arrival rate: timestamps
+    are divided by it, so 2.0 compresses the trace to double the offered
+    load and 0.5 stretches it to half — the standard knob for overload
+    sweeps over a recorded production trace."""
     t = np.asarray(times, dtype=np.float64)
     if t.ndim != 1:
         raise ValueError(f"arrival trace must be 1-d, got shape {t.shape}")
     if t.size and (not np.all(np.isfinite(t)) or t.min() < 0):
         raise ValueError("arrival trace must be finite and non-negative")
-    return np.sort(t, kind="stable")
+    if not rate_scale > 0:
+        raise ValueError("rate_scale must be > 0")
+    t = np.sort(t, kind="stable") / rate_scale
+    if n is None:
+        return t
+    if n < 0:
+        raise ValueError("n must be >= 0")
+    if n > t.size:
+        warnings.warn(
+            f"arrival trace has {t.size} entries but {n} were requested; "
+            f"clamping the cohort to {t.size} arrivals",
+            stacklevel=2)
+        n = t.size
+    return t[:n]
+
+
+def sinusoidal_arrivals(n: int, mean_rate: float, *, amplitude: float = 0.8,
+                        period_s: float = 60.0, seed: int = 0) -> np.ndarray:
+    """Arrival times of ``n`` requests from a non-stationary (diurnal)
+    Poisson process with sinusoidal intensity
+
+        rate(t) = mean_rate * (1 + amplitude * sin(2*pi*t / period_s)),
+
+    sampled exactly by Lewis-Shedler thinning against the peak rate
+    ``mean_rate * (1 + amplitude)``.  ``amplitude`` in [0, 1) keeps the
+    intensity strictly positive; ``period_s`` is the diurnal cycle on the
+    virtual clock.  Deterministic given ``seed``; strictly increasing."""
+    if n < 0:
+        raise ValueError("n must be >= 0")
+    if not mean_rate > 0:
+        raise ValueError("mean_rate must be > 0 requests/second")
+    if not 0.0 <= amplitude < 1.0:
+        raise ValueError("amplitude must be in [0, 1)")
+    if not period_s > 0:
+        raise ValueError("period_s must be > 0 seconds")
+    rng = np.random.default_rng(seed)
+    peak = mean_rate * (1.0 + amplitude)
+    out = np.empty(n, dtype=np.float64)
+    t, k = 0.0, 0
+    while k < n:
+        t += rng.exponential(1.0 / peak)
+        rate_t = mean_rate * (1.0 + amplitude * np.sin(2.0 * np.pi * t
+                                                       / period_s))
+        if rng.random() * peak < rate_t:
+            out[k] = t
+            k += 1
+    return out
 
 
 # ----------------------------------------------------------------------

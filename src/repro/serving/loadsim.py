@@ -107,6 +107,18 @@ class EngineSim:
     engine's occupancy changes — the paper's §5.4 slowdown curve applied at
     event granularity rather than round granularity.
 
+    Units and contract (shared with the `run_events` virtual clock):
+
+    - every ``t`` is **virtual time in seconds** on the event loop's clock
+      (not wall clock — `time.perf_counter` never appears here), and
+      ``work`` is seconds of *unloaded* service: the stage latency the
+      executor reported, before any load inflation;
+    - the caller drives time forward: methods taking ``t`` must be called
+      with non-decreasing values (the event loop guarantees this); state
+      between two consecutive calls is linear drain at the current rate;
+    - jobs are identified by an arbitrary hashable key (`run_events` uses
+      the slot index); one key may be in service at most once per engine.
+
     ``slowdown(n_others) -> factor`` defines the processor-sharing rate:
     with k jobs in service every job drains work at ``1 / slowdown(k - 1)``
     per unit of virtual time.  With ``slowdown=None`` the engine is
@@ -150,6 +162,40 @@ class EngineSim:
         else:
             self._advance(t)
             self._jobs[job] = [work, t]
+
+    def remaining_work(self, job, t: float) -> float:
+        """Seconds of *unloaded* service ``job`` still needs at time ``t``.
+
+        Since the processor-sharing rate never exceeds 1, ``t +
+        remaining_work(job, t)`` is a certain lower bound on the job's
+        completion time — the admission layer sheds a request the moment
+        this bound crosses its deadline, well before the deadline itself
+        when the engine is saturated.  +inf when the job is not in service.
+        """
+        if job not in self._jobs:
+            return float("inf")
+        if self._slowdown is None:
+            tc, _ = self._jobs[job]
+            return max(tc - t, 0.0)
+        self._advance(t)
+        return max(float(self._jobs[job][0]), 0.0)
+
+    def cancel(self, job, t: float) -> bool:
+        """Abort ``job`` at virtual time ``t`` without completing it.
+
+        The admission/load-shedding layer (`repro.core.admission`) calls
+        this when a request is shed mid-stage: surviving jobs first drain
+        at the pre-cancel shared rate up to ``t``, then the job's share is
+        released — from ``t`` onward the engine's occupancy (and therefore
+        every survivor's service rate) no longer includes it.  Returns
+        False when ``job`` is not in service (already completed/canceled).
+        """
+        if job not in self._jobs:
+            return False
+        if self._slowdown is not None:
+            self._advance(t)
+        del self._jobs[job]
+        return True
 
     def next_completion(self) -> float:
         """Virtual time of the next job completion (+inf when idle)."""

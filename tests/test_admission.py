@@ -1,0 +1,543 @@
+"""Admission control & load shedding (`repro.core.admission` + the hooks
+in `repro.core.events`).
+
+Covers the reject/shed decision paths with hand-computed scenarios:
+reject-on-arrival via the planner probe, queue drops that bypass slot
+churn, deadline sheds that release the engine share (including the
+certainty bound firing *before* the deadline), cost-aware overload triage
+with downgrade-to-cheapest-path, and the no-new-compiled-programs
+guarantee of the admission probe.  Plain numpy only — part of the
+bare-interpreter tier-1 set.
+"""
+import numpy as np
+import pytest
+from fleetlib import assert_results_identical, random_setup
+
+from repro.core.admission import (
+    REJECTED,
+    SERVED,
+    SHED,
+    AdmissionPolicy,
+    CostAwareShed,
+    FeasibilityGate,
+    get_policy,
+)
+from repro.core.controller import Objective
+from repro.core.controller_jax import (
+    TrieDevice,
+    fleet_planner_cache_size,
+    make_admission_probe,
+    make_fleet_planner,
+    trie_engines,
+)
+from repro.core.events import run_events
+from repro.core.runtime import make_workload_executor, run_cohort, summarize
+from repro.core.trie import Trie, TrieAnnotations
+from repro.core.workload import (
+    generate_workload,
+    poisson_arrivals,
+    sinusoidal_arrivals,
+    trace_arrivals,
+)
+from repro.serving import loadsim
+from repro.serving.loadsim import EngineLoadModel, EngineSim, FleetLoadModel
+from repro.core import presets
+from repro.core.workflow import DecisionPoint, ModelSpec, WorkflowTemplate
+
+
+# ----------------------------------------------------------------------
+# policy resolution
+# ----------------------------------------------------------------------
+def test_get_policy_resolution():
+    assert get_policy(None).name == "always"
+    assert get_policy("always").name == "always"
+    assert get_policy("feasibility").name == "feasibility"
+    assert get_policy("cost_aware").name == "cost_aware"
+    pol = FeasibilityGate(margin=0.5)
+    assert get_policy(pol) is pol
+    with pytest.raises(ValueError, match="unknown admission policy"):
+        get_policy("fifo")
+    with pytest.raises(TypeError, match="admission must be"):
+        get_policy(42)
+    with pytest.raises(ValueError, match="max_occupancy"):
+        CostAwareShed(max_occupancy=0)
+
+
+# ----------------------------------------------------------------------
+# always-admit is the PR-2 behavior, bit for bit
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("seed", (3, 13))
+def test_always_admit_identical_to_default(seed):
+    rng, trie, wl, ann = random_setup(seed)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc",
+                    cost_cap=float(np.quantile(ann.cost[trie.terminal], 0.6)),
+                    lat_cap=float(np.quantile(ann.lat[trie.terminal], 0.7)))
+    reqs = np.arange(16)
+    arr = poisson_arrivals(len(reqs), rate=6.0, seed=seed)
+    base, bstats = run_events(trie, ann, obj, reqs, execu,
+                              arrivals=arr, capacity=4)
+    alw, astats = run_events(trie, ann, obj, reqs, execu,
+                             arrivals=arr, capacity=4, admission="always")
+    assert_results_identical(base, alw)
+    assert astats.policy == "always"
+    assert (astats.admitted, astats.events, astats.replans) == \
+        (bstats.admitted, bstats.events, bstats.replans)
+    assert astats.rejected == astats.shed == astats.downgraded == 0
+    assert all(o == SERVED for o in astats.outcome)
+    assert all(r.outcome == SERVED for r in alw)
+
+
+def test_gate_without_lat_cap_matches_always():
+    """With no deadline there is nothing to shed and the planner probe is
+    the same call FIFO already makes: only the outcome labels may differ."""
+    _, trie, wl, ann = random_setup(21)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc",
+                    cost_cap=float(np.quantile(ann.cost[trie.terminal], 0.4)))
+    reqs = np.arange(14)
+    arr = poisson_arrivals(len(reqs), rate=10.0, seed=2)
+    alw, _ = run_events(trie, ann, obj, reqs, execu, arrivals=arr,
+                        capacity=3, admission="always")
+    gate, _ = run_events(trie, ann, obj, reqs, execu, arrivals=arr,
+                         capacity=3, admission="feasibility")
+    assert_results_identical(alw, gate)
+
+
+# ----------------------------------------------------------------------
+# reject paths
+# ----------------------------------------------------------------------
+def test_gate_rejects_on_arrival_impossible_budget():
+    """cost_cap=0: the planner probe finds no feasible path at every
+    admission instant — the gate records rejections, not admissions."""
+    _, trie, wl, ann = random_setup(11)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc", cost_cap=0.0)
+    res, stats = run_events(trie, ann, obj, np.arange(5), execu,
+                            arrivals=np.linspace(0.0, 1.0, 5), capacity=3,
+                            admission="feasibility")
+    assert stats.rejected == 5 and stats.admitted == 0 and stats.shed == 0
+    for r in res:
+        assert r.outcome == REJECTED and r.models == [] and not r.success
+    s = summarize(res)
+    assert s["reject_rate"] == 1.0 and s["shed_rate"] == 0.0
+
+
+def _unit_setup(L=1.0, concurrency=1, n_models=1, mean_service=None):
+    """One engine, unit models with base latency L, always-succeeding.
+    ``mean_service`` tunes the planner's delta_e estimate independently of
+    the realized processor-sharing slowdown (0.0 = optimistic planner)."""
+    specs = tuple(
+        ModelSpec(f"m{j}", price=0.001 * (j + 1), base_latency=L,
+                  per_token_latency=0.0, power=0.9, engine="e0")
+        for j in range(n_models)
+    )
+    tpl = WorkflowTemplate(
+        "unit", specs,
+        (DecisionPoint("gen", 0, tuple(range(n_models))),), min_depth=1)
+    trie = Trie.build(tpl)
+    acc = np.zeros(trie.n_nodes)
+    cost = np.zeros(trie.n_nodes)
+    lat = np.zeros(trie.n_nodes)
+    for u in range(1, trie.n_nodes):
+        m = int(trie.model[u])
+        acc[u], cost[u], lat[u] = 0.9 - 0.1 * m, 0.001 * (m + 1), L
+    ann = TrieAnnotations(acc=acc, cost=cost, lat=lat)
+    load = FleetLoadModel(
+        engines={"e0": EngineLoadModel("e0", concurrency=concurrency,
+                                       jitter=0.0)},
+        mean_service_s={"e0": L if mean_service is None else mean_service},
+    )
+
+    def execu(q, d, m, t):
+        return True, 0.001 * (m + 1), L
+
+    return trie, ann, execu, load
+
+
+def test_gate_queue_drop_skips_slot_churn():
+    """Requests whose budget provably died while queueing are dropped from
+    the queue itself — they never take a slot, unlike FIFO where each one
+    churns through admission just to be cut by the planner."""
+    trie, ann, execu, _ = _unit_setup(L=1.0)
+    obj = Objective("max_acc", lat_cap=1.5)
+    reqs = np.arange(4)
+    alw, astats = run_events(trie, ann, obj, reqs, execu,
+                             arrivals=np.zeros(4), capacity=1,
+                             admission="always")
+    gate, gstats = run_events(trie, ann, obj, reqs, execu,
+                              arrivals=np.zeros(4), capacity=1,
+                              admission="feasibility")
+    # same requests end up unserved either way...
+    assert [r.success for r in alw] == [r.success for r in gate] \
+        == [True, False, False, False]
+    # ...but FIFO admitted all four (three died at the probe), while the
+    # gate dropped the three stragglers straight from the queue at t=1.0:
+    # elapsed 1.0 > lat_cap 1.5 - min_path_lat 1.0
+    assert astats.admitted == 4 and astats.rejected == 0
+    assert gstats.admitted == 1 and gstats.rejected == 3
+    for i in (1, 2, 3):
+        assert gstats.outcome[i] == REJECTED
+        assert gstats.done_t[i] == pytest.approx(1.0)
+        assert gate[i].models == []
+
+
+# ----------------------------------------------------------------------
+# shed paths: deadline + certainty bound release the engine share
+# ----------------------------------------------------------------------
+def test_deadline_shed_releases_engine():
+    """Four unit jobs sharing a concurrency-1 engine drain at rate 1/4 and
+    would all finish at t=4 — far past the 2s cap.  The gate sheds all
+    four at exactly t=2: done_t pins the deadline, the run ends there (no
+    completion events at t=4 ever fire), and nothing succeeds."""
+    trie, ann, execu, load = _unit_setup()
+    obj = Objective("max_acc", lat_cap=2.0)
+    res, stats = run_events(trie, ann, obj, np.arange(4), execu,
+                            capacity=4, policy="dynamic_load_aware",
+                            fleet_load=load, admission="feasibility")
+    assert stats.shed == 4 and stats.rejected == 0
+    assert [r.outcome for r in res] == [SHED] * 4
+    assert stats.done_t.tolist() == pytest.approx([2.0] * 4)
+    assert stats.events == 2  # t=0 dispatch, t=2 shed — nothing after
+    # FIFO instead lets them occupy the engine until t=4, all SLO-violated
+    alw, astats = run_events(trie, ann, obj, np.arange(4), execu,
+                             capacity=4, policy="dynamic_load_aware",
+                             fleet_load=load, admission="always")
+    assert astats.done_t.tolist() == pytest.approx([4.0] * 4)
+    assert all(r.slo_violated for r in alw)
+
+
+def test_certainty_bound_sheds_before_deadline():
+    """An *optimistic* planner (delta_e ~ 0) admits staggered arrivals that
+    processor sharing then stretches past their deadlines.  At r0's t=3
+    deadline event the two later requests still hold >1s of unloaded work
+    against deadlines they can no longer meet (t + remaining > deadline),
+    so the certainty bound sheds them 0.5s and 1.0s *early* rather than at
+    their own deadline events."""
+    trie, ann, execu, load = _unit_setup(L=2.0, mean_service=0.0)
+    obj = Objective("max_acc", lat_cap=3.0)
+    res, stats = run_events(trie, ann, obj, np.arange(3), execu,
+                            arrivals=np.array([0.0, 0.5, 1.0]), capacity=3,
+                            policy="dynamic_load_aware", fleet_load=load,
+                            admission="feasibility")
+    assert [r.outcome for r in res] == [SHED] * 3
+    # r0 hits its deadline at t=3 (drained 0.5+0.25+0.667 of 2.0); r1 (ddl
+    # 3.5) and r2 (ddl 4.0) are caught at the same event by the certainty
+    # bound — everything ends at t=3, nothing waits for its own deadline
+    assert stats.done_t.tolist() == pytest.approx([3.0, 3.0, 3.0])
+    assert stats.shed == 3
+    assert stats.events == 4  # t=0, 0.5, 1.0 dispatches + the t=3 shed
+
+
+def test_shed_requests_never_reoccupy_engine():
+    """After a cancel, a shed request's job must be gone from its engine's
+    in-service set for the rest of the run (slots are not reused here:
+    capacity == cohort size)."""
+    journal = []
+
+    class RecordingSim(EngineSim):
+        def start(self, job, work, t):
+            super().start(job, work, t)
+            journal.append(("start", job, t, set(self._jobs)))
+
+        def cancel(self, job, t):
+            out = super().cancel(job, t)
+            journal.append(("cancel", job, t, set(self._jobs)))
+            return out
+
+        def pop_completed(self, t):
+            out = super().pop_completed(t)
+            journal.append(("pop", None, t, set(self._jobs)))
+            return out
+
+    trie, ann, execu, load = _unit_setup()
+    obj = Objective("max_acc", lat_cap=2.0)
+    with pytest.MonkeyPatch.context() as mp:
+        mp.setattr(loadsim, "EngineSim", RecordingSim)
+        _, stats = run_events(trie, ann, obj, np.arange(4), execu,
+                              capacity=4, policy="dynamic_load_aware",
+                              fleet_load=load, admission="feasibility")
+    assert stats.shed == 4
+    canceled = {job for op, job, _, _ in journal if op == "cancel"}
+    assert canceled == {0, 1, 2, 3}
+    # the invariant: no snapshot at/after a job's cancel contains the job
+    for job in canceled:
+        seen_cancel = False
+        for op, j, t, jobs in journal:
+            if op == "cancel" and j == job:
+                seen_cancel = True
+            elif seen_cancel:
+                assert job not in jobs
+
+
+# ----------------------------------------------------------------------
+# cost-aware triage: overload shed + downgrade-to-cheapest
+# ----------------------------------------------------------------------
+def test_cost_aware_overload_shed_and_downgrade():
+    tpl = presets.nl2sql_2()
+    trie = Trie.build(tpl)
+    wl = generate_workload(tpl, 200, seed=3)
+    ann = wl.exact_annotations(trie)
+    execu = make_workload_executor(wl)
+    engines = sorted({m.engine for m in tpl.models})
+    load = FleetLoadModel(
+        engines={e: EngineLoadModel(e, concurrency=2, jitter=0.0)
+                 for e in engines},
+        mean_service_s={e: 1.0 for e in engines},
+    )
+    obj = Objective("max_acc",
+                    cost_cap=float(np.quantile(ann.cost[trie.terminal], 0.6)),
+                    lat_cap=float(np.quantile(ann.lat[trie.terminal], 0.9)))
+    reqs = np.arange(48)
+    arr = poisson_arrivals(len(reqs), rate=12.0, seed=5)
+    pol = CostAwareShed(max_occupancy=3)
+    res, stats = run_events(trie, ann, obj, reqs, execu, arrivals=arr,
+                            capacity=24, policy="dynamic_load_aware",
+                            fleet_load=load, admission=pol)
+    assert stats.policy == "cost_aware"
+    assert stats.shed > 0
+    assert stats.downgraded > 0
+    assert sum(r.outcome == SHED for r in res) == stats.shed
+    # downgrade disabled: the same pressure turns into outright sheds
+    pol2 = CostAwareShed(max_occupancy=3, downgrade=False)
+    _, stats2 = run_events(trie, ann, obj, reqs, execu, arrivals=arr,
+                           capacity=24, policy="dynamic_load_aware",
+                           fleet_load=load, admission=pol2)
+    assert stats2.downgraded == 0 and stats2.shed >= stats.shed
+
+
+def test_cost_aware_score_orders_by_goodput_per_token():
+    _, trie, wl, ann = random_setup(9)
+    pol = CostAwareShed(max_occupancy=2)
+    pol.bind(trie, ann, Objective("max_acc"), trie.terminal)
+    # deeper prefixes with more spend score no better than a fresh root
+    root_score = pol.score(0, 0.0)
+    assert root_score > 0
+    assert pol.score(0, 10.0) < root_score
+    # a node with no reachable terminal is shed first (score -inf)
+    dead = np.zeros(trie.n_nodes, dtype=bool)
+    pol2 = CostAwareShed(max_occupancy=2)
+    pol2.bind(trie, ann, Objective("max_acc"), dead)
+    assert pol2.score(0, 0.0) == -np.inf
+
+
+# ----------------------------------------------------------------------
+# the admission probe shares the fleet-step program (no new compiles)
+# ----------------------------------------------------------------------
+def test_admission_probe_adds_no_compiled_programs():
+    _, trie, wl, ann = random_setup(29)
+    obj = Objective("max_acc",
+                    lat_cap=float(np.quantile(ann.lat[trie.terminal], 0.5)))
+    td = TrieDevice.build(trie, ann, None)
+    C, E = 4, len(trie_engines(trie.template))
+    planner = make_fleet_planner(td, obj)
+    u = np.zeros(C, dtype=np.int32)
+    el = np.zeros(C, dtype=np.float32)
+    ec = np.zeros(C, dtype=np.float32)
+    dl = np.zeros((C, E), dtype=np.float32)
+    tgt, _ = planner(u, el, ec, dl)  # warm the (C,)-shaped program
+    c0 = fleet_planner_cache_size()
+    if c0 < 0:
+        pytest.skip("JAX runtime does not expose the jit cache counter")
+    probe = make_admission_probe(td, obj)
+    feas = probe(u, el, ec, dl)
+    assert fleet_planner_cache_size() == c0  # same program, zero compiles
+    assert feas.shape == (C,) and feas.dtype == bool
+    assert np.array_equal(feas, np.asarray(tgt) >= 0)
+    # burned budget flips feasibility off
+    el_burned = np.full(C, 1e6, dtype=np.float32)
+    assert not probe(u, el_burned, ec, dl).any()
+    assert fleet_planner_cache_size() == c0
+    # numpy-default float64/int64 inputs are canonicalized at the probe
+    # boundary — they must NOT trace a new specialization either
+    feas64 = probe(np.zeros(C, dtype=np.int64), np.zeros(C), np.zeros(C),
+                   np.zeros((C, E)))
+    assert np.array_equal(feas64, feas)
+    assert fleet_planner_cache_size() == c0
+
+
+def test_gated_run_adds_no_compiled_programs():
+    """A full gated + cost-aware run through run_events must reuse the
+    always-admit run's capacity-shaped program."""
+    _, trie, wl, ann = random_setup(31)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc",
+                    lat_cap=float(np.quantile(ann.lat[trie.terminal], 0.6)))
+    reqs = np.arange(10)
+    arr = np.linspace(0.0, 1.5, 10)
+    run_events(trie, ann, obj, reqs, execu, arrivals=arr, capacity=4)  # warm
+    c0 = fleet_planner_cache_size()
+    if c0 < 0:
+        pytest.skip("JAX runtime does not expose the jit cache counter")
+    for adm in ("feasibility", CostAwareShed(max_occupancy=2)):
+        run_events(trie, ann, obj, reqs, execu, arrivals=arr, capacity=4,
+                   admission=adm)
+    assert fleet_planner_cache_size() == c0
+
+
+# ----------------------------------------------------------------------
+# run_cohort plumbing
+# ----------------------------------------------------------------------
+def test_run_cohort_admission_routes_to_events():
+    _, trie, wl, ann = random_setup(41)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc",
+                    cost_cap=float(np.quantile(ann.cost[trie.terminal], 0.6)))
+    reqs = np.arange(12)
+    evt = run_cohort(trie, ann, obj, reqs, execu, engine="events",
+                     admission="feasibility")
+    auto = run_cohort(trie, ann, obj, reqs, execu, admission="feasibility")
+    assert_results_identical(evt, auto)
+    with pytest.raises(ValueError, match="events engine"):
+        run_cohort(trie, ann, obj, reqs, execu, engine="scalar",
+                   admission="feasibility")
+    with pytest.raises(ValueError, match="events engine"):
+        run_cohort(trie, ann, obj, reqs, execu, engine="fleet",
+                   admission="always")
+
+
+# ----------------------------------------------------------------------
+# EngineSim.cancel / remaining_work unit behavior
+# ----------------------------------------------------------------------
+def test_engine_sim_cancel_unit_rate():
+    sim = EngineSim("e0")
+    sim.start("a", 2.0, t=0.0)
+    sim.start("b", 3.0, t=0.0)
+    assert sim.remaining_work("a", 1.5) == pytest.approx(0.5)
+    assert sim.cancel("a", 1.0)
+    assert not sim.cancel("a", 1.0)  # idempotent: already gone
+    assert sim.occupancy == 1
+    assert sim.remaining_work("a", 1.0) == float("inf")
+    assert sim.pop_completed(3.0) == [("b", 3.0)]
+
+
+def test_engine_sim_cancel_processor_sharing_speeds_survivors():
+    slowdown = lambda n_others: float(n_others + 1)  # rate 1/k with k jobs
+    sim = EngineSim("e0", slowdown=slowdown)
+    sim.start("a", 1.0, t=0.0)
+    sim.start("b", 1.0, t=0.0)
+    assert sim.next_completion() == pytest.approx(2.0)  # both at half rate
+    # cancel a at t=1: b drained 0.5 by then, finishes alone at t=1.5
+    assert sim.cancel("a", 1.0)
+    assert sim.occupancy == 1
+    assert sim.next_completion() == pytest.approx(1.5)
+    done = sim.pop_completed(1.5)
+    assert [j for j, _ in done] == ["b"]
+    assert done[0][1] == pytest.approx(1.5)
+
+
+def test_engine_sim_remaining_work_processor_sharing():
+    slowdown = lambda n_others: float(n_others + 1)
+    sim = EngineSim("e0", slowdown=slowdown)
+    sim.start("a", 1.0, t=0.0)
+    sim.start("b", 1.0, t=0.5)       # a alone until 0.5: rem 0.5
+    assert sim.remaining_work("a", 0.5) == pytest.approx(0.5)
+    assert sim.remaining_work("a", 1.5) == pytest.approx(0.0)  # done at 1.5
+    assert sim.remaining_work("b", 1.5) == pytest.approx(0.5)
+
+
+# ----------------------------------------------------------------------
+# non-stationary arrival samplers
+# ----------------------------------------------------------------------
+def test_sinusoidal_arrivals_sampler():
+    a = sinusoidal_arrivals(400, 4.0, amplitude=0.8, period_s=20.0, seed=7)
+    b = sinusoidal_arrivals(400, 4.0, amplitude=0.8, period_s=20.0, seed=7)
+    assert np.array_equal(a, b)                      # deterministic
+    assert a.shape == (400,) and np.all(np.diff(a) > 0)
+    # long-run mean rate ~ mean_rate (thinning preserves the mean)
+    assert 400 / a[-1] == pytest.approx(4.0, rel=0.25)
+    # burstiness: windowed rates must swing well beyond a homogeneous
+    # process's sampling noise
+    bins = np.histogram(a, bins=np.arange(0.0, a[-1], 10.0))[0] / 10.0
+    assert bins.max() > 1.5 * bins.min() + 1e-9
+    assert sinusoidal_arrivals(0, 1.0).shape == (0,)
+    with pytest.raises(ValueError):
+        sinusoidal_arrivals(10, 0.0)
+    with pytest.raises(ValueError):
+        sinusoidal_arrivals(10, 1.0, amplitude=1.0)
+    with pytest.raises(ValueError):
+        sinusoidal_arrivals(10, 1.0, period_s=0.0)
+    with pytest.raises(ValueError):
+        sinusoidal_arrivals(-1, 1.0)
+
+
+def test_trace_arrivals_clamps_short_trace_with_warning():
+    # trace shorter than the requested cohort: clamp + warn, never empty
+    with pytest.warns(UserWarning, match="clamping the cohort"):
+        t = trace_arrivals([0.0, 1.0, 2.5], n=5)
+    assert t.tolist() == [0.0, 1.0, 2.5]
+    # long enough: first n of the sorted trace
+    t = trace_arrivals([3.0, 0.0, 1.5, 9.0], n=2)
+    assert t.tolist() == [0.0, 1.5]
+    # rate_scale compresses the trace to a higher offered load
+    t = trace_arrivals([0.0, 2.0, 4.0], rate_scale=2.0)
+    assert t.tolist() == [0.0, 1.0, 2.0]
+    with pytest.raises(ValueError):
+        trace_arrivals([0.0, 1.0], rate_scale=0.0)
+    with pytest.raises(ValueError):
+        trace_arrivals([0.0, 1.0], n=-1)
+
+
+def test_trace_arrivals_clamped_cohort_serves_end_to_end():
+    """The clamped arrival vector drives run_events without tripping the
+    shape check — the caller trims its cohort to len(arrivals)."""
+    _, trie, wl, ann = random_setup(17)
+    execu = make_workload_executor(wl)
+    with pytest.warns(UserWarning):
+        arr = trace_arrivals([0.0, 0.2, 0.9], n=8)
+    reqs = np.arange(len(arr))
+    res, stats = run_events(trie, ann, Objective("max_acc"), reqs, execu,
+                            arrivals=arr, capacity=2)
+    assert len(res) == 3 and stats.admitted == 3
+
+
+# ----------------------------------------------------------------------
+# goodput under overload: the acceptance-shaped scenario in miniature
+# ----------------------------------------------------------------------
+def test_gate_beats_always_admit_under_overload():
+    """Deterministic miniature of the benchmarks/admission.py claim: under
+    heavy overload with a latency SLO, the feasibility gate's shedding
+    converts zombie engine time into survivor goodput."""
+    tpl = presets.nl2sql_2()
+    trie = Trie.build(tpl)
+    wl = generate_workload(tpl, 300, seed=0)
+    ann = wl.exact_annotations(trie)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc",
+                    cost_cap=float(np.quantile(ann.cost[trie.terminal], 0.5)),
+                    lat_cap=float(np.quantile(ann.lat[trie.terminal], 0.8)))
+    engines = sorted({m.engine for m in tpl.models})
+    mean_service = {
+        e: float(np.mean(
+            wl.lat[:, :, [j for j, m in enumerate(tpl.models)
+                          if m.engine == e]]))
+        for e in engines
+    }
+    load = FleetLoadModel(
+        engines={e: EngineLoadModel(e, concurrency=2, jitter=0.0)
+                 for e in engines},
+        mean_service_s=mean_service,
+    )
+    reqs = np.random.default_rng(0).choice(wl.n_requests, 192, replace=True)
+    arr = poisson_arrivals(len(reqs), 2.0, seed=1)
+    out = {}
+    for pol in ("always", "feasibility"):
+        res, _ = run_events(trie, ann, obj, reqs, execu, arrivals=arr,
+                            capacity=32, policy="dynamic_load_aware",
+                            fleet_load=load, admission=pol)
+        out[pol] = summarize(res)
+    assert out["feasibility"]["goodput"] > out["always"]["goodput"]
+    # shedding caps the tail at the SLO: nothing lives past its deadline
+    assert out["feasibility"]["p99_lat"] <= obj.lat_cap + 1e-6
+    assert out["always"]["p99_lat"] > obj.lat_cap
+
+
+def test_always_admit_policy_hooks_are_inert():
+    pol = AdmissionPolicy()
+    _, trie, wl, ann = random_setup(2)
+    pol.bind(trie, ann, Objective("max_acc", lat_cap=0.1), trie.terminal)
+    assert not pol.queue_reject(1e9)
+    assert pol.classify_infeasible(0) == SERVED
+    assert pol.classify_infeasible(3) == SERVED
+    assert pol.overload_actions("e0", [], np.zeros(4, bool)) == []
+    assert pol.max_occupancy is None and not pol.shed_on_deadline

@@ -10,6 +10,13 @@ latency cap are time-invariant — each request's model sequence equals the
 scalar loop's, and its latency is the scalar service time plus its
 admission-queue wait.
 
+Property 3 (ISSUE-3 acceptance): the "always" admission policy is
+result-identical to the PR-2 FIFO behavior (run_events with no admission
+argument) — same results, same control-plane counters, no rejections or
+sheds — over randomized tries, objectives, arrival processes, and
+capacities.  And a feasibility gate with no latency cap can only relabel
+planner-infeasible requests, never change what is served.
+
 This module needs hypothesis; the bare-interpreter tier-1 run skips it at
 collection (tests/conftest.py) and CI installs the pinned environment.
 """
@@ -68,3 +75,59 @@ def test_events_open_arrival_time_invariant_plans(seed, rate, capacity):
         assert a.success == b.success
         assert a.total_cost == pytest.approx(b.total_cost, abs=1e-12)
         assert b.total_lat == pytest.approx(a.total_lat + w, abs=1e-9)
+
+
+@given(seed=st.integers(0, 10**6),
+       rate=st.floats(0.25, 32.0),
+       capacity=st.integers(1, 8))
+@settings(max_examples=15, deadline=None)
+def test_always_admit_identical_to_pr2_property(seed, rate, capacity):
+    """admission="always" IS the PR-2 FIFO runtime: results and control-
+    plane counters match a run with no admission argument exactly, and no
+    request is ever rejected, shed, or downgraded."""
+    rng, trie, wl, ann = random_setup(seed, n_requests=60)
+    execu = make_workload_executor(wl)
+    obj = random_objective(rng, trie, ann)
+    n = int(rng.integers(3, 12))
+    reqs = rng.choice(wl.n_requests, n, replace=False)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    base, bstats = run_events(trie, ann, obj, reqs, execu,
+                              arrivals=arrivals, capacity=capacity)
+    alw, astats = run_events(trie, ann, obj, reqs, execu,
+                             arrivals=arrivals, capacity=capacity,
+                             admission="always")
+    assert_results_identical(base, alw)
+    assert [r.outcome for r in alw] == ["served"] * n
+    assert astats.rejected == astats.shed == astats.downgraded == 0
+    assert (astats.admitted, astats.events, astats.replans) == \
+        (bstats.admitted, bstats.events, bstats.replans)
+    assert astats.done_t.tolist() == bstats.done_t.tolist()
+
+
+@given(seed=st.integers(0, 10**6),
+       rate=st.floats(0.25, 32.0),
+       capacity=st.integers(1, 8))
+@settings(max_examples=15, deadline=None)
+def test_gate_without_deadline_serves_identically_property(seed, rate,
+                                                           capacity):
+    """With no latency cap the feasibility gate has no deadline to shed
+    against and its probe is the planner call FIFO already makes — it may
+    only relabel never-executed requests as rejected."""
+    rng, trie, wl, ann = random_setup(seed, n_requests=60)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc", cost_cap=float(
+        np.quantile(ann.cost[trie.terminal], rng.uniform(0.2, 0.8))))
+    n = int(rng.integers(3, 12))
+    reqs = rng.choice(wl.n_requests, n, replace=False)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    alw, _ = run_events(trie, ann, obj, reqs, execu,
+                        arrivals=arrivals, capacity=capacity,
+                        admission="always")
+    gate, gstats = run_events(trie, ann, obj, reqs, execu,
+                              arrivals=arrivals, capacity=capacity,
+                              admission="feasibility")
+    assert_results_identical(alw, gate)
+    assert gstats.shed == 0
+    for r in gate:
+        assert r.outcome == ("rejected" if r.models == [] and not r.success
+                             else "served")

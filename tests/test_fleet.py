@@ -208,7 +208,8 @@ def test_fleet_empty_cohort():
     s = summarize(res)
     assert set(s) == {"accuracy", "goodput", "mean_cost", "mean_lat",
                       "p99_lat", "slo_violation_rate",
-                      "mean_replan_overhead_s", "mean_stages"}
+                      "mean_replan_overhead_s", "mean_stages",
+                      "reject_rate", "shed_rate"}
     assert all(v == 0.0 for v in s.values())
 
 

@@ -1,0 +1,119 @@
+"""Docs gate: markdown link integrity + a runnable README quickstart.
+
+Two checks, both cheap enough for every CI run (the `docs` job in
+.github/workflows/ci.yml):
+
+1. every relative link in README.md and docs/*.md resolves to an existing
+   file or directory (external http(s)/mailto links and pure #anchors are
+   skipped; a #fragment on a relative link is checked against the target
+   file's headings when the target is markdown);
+2. the first ```python fence under README's "## Quickstart" heading is
+   extracted and executed in a subprocess with src/ on PYTHONPATH — the
+   snippet users copy-paste first must actually run.
+
+Exit status is non-zero on any failure, with one line per problem.
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def _anchor(heading: str) -> str:
+    """GitHub-style anchor for a heading."""
+    h = heading.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def _strip_fences(text: str) -> str:
+    """Remove fenced code blocks so shell snippets aren't link-checked."""
+    return re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+
+
+def check_links(md_path: str) -> list[str]:
+    errors = []
+    with open(md_path) as f:
+        text = f.read()
+    base = os.path.dirname(md_path)
+    for link in _LINK.findall(_strip_fences(text)):
+        if link.startswith(("http://", "https://", "mailto:")):
+            continue
+        target, _, frag = link.partition("#")
+        if not target:  # same-file anchor
+            target_path = md_path
+        else:
+            target_path = os.path.normpath(os.path.join(base, target))
+            if not os.path.exists(target_path):
+                errors.append(f"{os.path.relpath(md_path, ROOT)}: broken "
+                              f"link -> {link}")
+                continue
+        if frag and target_path.endswith(".md"):
+            with open(target_path) as f:
+                anchors = {_anchor(h) for h in _HEADING.findall(f.read())}
+            if frag not in anchors:
+                errors.append(f"{os.path.relpath(md_path, ROOT)}: missing "
+                              f"anchor -> {link}")
+    return errors
+
+
+def check_quickstart(readme_path: str) -> list[str]:
+    with open(readme_path) as f:
+        text = f.read()
+    m = re.search(r"^## Quickstart$(.*?)(?=^## )", text,
+                  re.MULTILINE | re.DOTALL)
+    if not m:
+        return ["README.md: no '## Quickstart' section"]
+    fence = _FENCE.search(m.group(1))
+    if not fence:
+        return ["README.md: Quickstart has no ```python fence"]
+    with tempfile.NamedTemporaryFile("w", suffix="_quickstart.py",
+                                     delete=False) as f:
+        f.write(fence.group(1))
+        path = f.name
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    try:
+        proc = subprocess.run([sys.executable, path], env=env,
+                              capture_output=True, text=True, timeout=600)
+    finally:
+        os.unlink(path)
+    if proc.returncode != 0:
+        return [f"README.md: Quickstart snippet failed "
+                f"(rc={proc.returncode}):\n{proc.stdout}{proc.stderr}"]
+    print(f"quickstart OK:\n{proc.stdout.rstrip()}")
+    return []
+
+
+def main() -> int:
+    docs = [os.path.join(ROOT, "README.md")]
+    docs_dir = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs_dir):
+        docs += [os.path.join(docs_dir, f) for f in sorted(os.listdir(docs_dir))
+                 if f.endswith(".md")]
+    errors = []
+    for md in docs:
+        errors += check_links(md)
+    errors += check_quickstart(os.path.join(ROOT, "README.md"))
+    for e in errors:
+        print(f"DOCS ERROR: {e}", file=sys.stderr)
+    if not errors:
+        print(f"docs OK: {len(docs)} files link-checked, quickstart ran")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
