@@ -85,7 +85,7 @@ def run(wf: str = "nl2sql_2", rates=FULL_RATES, n_requests: int = 192,
     load = make_fleet_load(trie, wl, concurrency=concurrency)
     reqs = np.random.default_rng(0).choice(wl.n_requests, n_requests,
                                            replace=True)
-    cache0 = fleet_planner_cache_size()
+    cache0 = None
     rows = []
     always_goodput: dict[float, float] = {}
     gate_goodput: dict[float, float] = {}
@@ -99,6 +99,10 @@ def run(wf: str = "nl2sql_2", rates=FULL_RATES, n_requests: int = 192,
                 policy="dynamic_load_aware", fleet_load=load,
                 admission=pol,
             )
+            if cache0 is None:
+                # the first run compiles the device-resident program set
+                # once; every later (rate, policy) combination must reuse it
+                cache0 = fleet_planner_cache_size()
             s = summarize(res)
             if pol == "always":
                 always_goodput[rate] = s["goodput"]
@@ -156,11 +160,11 @@ def run(wf: str = "nl2sql_2", rates=FULL_RATES, n_requests: int = 192,
 
     cache1 = fleet_planner_cache_size()
     retraces = (cache1 - cache0) if cache0 >= 0 and cache1 >= 0 else -1
-    if retraces > 1:
+    if retraces > 0:
         raise RuntimeError(
             f"fleet planner re-traced {retraces} times across the admission "
             "sweep — admission probes must reuse the capacity-shaped "
-            "fleet-step program, not add compiled specializations")
+            "resident program set, not add compiled specializations")
 
     knee = find_knee(rates, always_goodput)
     overload = [r for r in rates if r >= 2.0 * knee]

@@ -8,8 +8,10 @@ wall-clock time.  SLO latency is measured from each request's arrival, so
 the curves show the classic serving knee — goodput collapses and p99
 explodes once the offered load crosses what the engines absorb.
 
-The planner batch is pinned at the slot capacity, so the whole sweep must
-compile the fleet-step program at most ONCE; the benchmark asserts this via
+The planner batch is pinned at the slot capacity and the device-resident
+slot-state scatters at a fixed width, so the whole sweep must compile the
+planner program set exactly once (during the first rate); the benchmark
+asserts zero growth afterwards via
 `controller_jax.fleet_planner_cache_size` and fails loudly on re-tracing
 (that is the regression it exists to catch).
 
@@ -62,7 +64,7 @@ def run(wf: str = "nl2sql_8", rates=FULL_RATES, n_requests: int = 192,
     load = make_fleet_load(trie, wl)
     reqs = np.random.default_rng(0).choice(wl.n_requests, n_requests,
                                            replace=True)
-    cache0 = fleet_planner_cache_size()
+    cache0 = None
     rows = []
     t_total = time.perf_counter()
     for rate in rates:
@@ -72,6 +74,11 @@ def run(wf: str = "nl2sql_8", rates=FULL_RATES, n_requests: int = 192,
             arrivals=arr, capacity=capacity,
             policy="dynamic_load_aware", fleet_load=load,
         )
+        if cache0 is None:
+            # the first rate compiles the device-resident program set once
+            # (fixed-width slot scatter + capacity-shaped replan); nothing
+            # later in the sweep may add to it
+            cache0 = fleet_planner_cache_size()
         s = summarize(res)
         rows.append({
             "workflow": wf,
@@ -90,10 +97,11 @@ def run(wf: str = "nl2sql_8", rates=FULL_RATES, n_requests: int = 192,
         })
     cache1 = fleet_planner_cache_size()
     retraces = (cache1 - cache0) if cache0 >= 0 and cache1 >= 0 else -1
-    if retraces > 1:
+    if retraces > 0:
         raise RuntimeError(
             f"fleet planner re-traced {retraces} times across the sweep — "
-            "the events runtime must pin its batch at slot capacity")
+            "the events runtime must pin its replan batch at slot capacity "
+            "and its state scatters at the fixed update width")
     elapsed = time.perf_counter() - t_total
     save_report("open_arrival", rows)
     return {

@@ -10,18 +10,36 @@ over the structure-of-arrays trie:
 - budget feasibility and the accuracy floor are elementwise masks;
 - the paper's monotone pruning becomes algebraic masking (same optimum,
   data-parallel instead of search-order dependent);
-- live engine-delay inflation uses a dense (N, max_depth) path-model table
-  instead of pointer chasing;
-- the whole replan is one jitted XLA program, `vmap`-ed over a batch of
-  requests with different prefixes, elapsed budgets, and live engine delays;
 - tie-breaking is an exact multi-pass lexicographic argmin (NOT an
   epsilon-weighted composite key, whose sub-float32-resolution epsilon
   terms silently collapse ties) so the device planner picks the *same*
   node as the host `select_path` — the property `repro.core.fleet` relies
   on for batched-vs-sequential equivalence;
 - `path_models` doubles as a device-side *first-step table*: the next model
-  on the path u -> target is `path_models[target, depth[u]]`, one gather
-  per request instead of a host-side `ancestors()` walk (`_fleet_step`).
+  on the path u -> target is `path_models[target, depth[u]]`.
+
+The replan itself dispatches through `repro.kernels.ops.trie_plan`
+(ops.py-style ``use_pallas``/variant switch):
+
+- "fused" (default) — the blocked XLA mirror (`kernels/xla_trie.py`):
+  per-request running lexicographic minima carried across node tiles,
+  cumulative engine delay as a path-counts matmul, first-step gather fused
+  into the tournament — no (N, Dmax) intermediate, no full-array min-pass;
+- "pallas" — the fused Pallas kernel (`kernels/trie_plan.py`), the same
+  tile math on a (node tiles x batch lanes) grid with the trie SoA tiles
+  VMEM-resident (``interpret=True`` on CPU, compiled on TPU);
+- "dense" — the pre-fusion reference (`kernels/ref.fleet_plan`), kept as
+  the oracle and as the baseline `benchmarks/table3_overhead.py` measures.
+
+All variants pick the identical node.  The default comes from the
+``REPRO_PLAN_VARIANT`` env var (``fused`` unless overridden).
+
+For the event-driven runtime, `make_resident_planner` additionally keeps
+the per-slot control state (prefix node, elapsed latency/cost) *resident on
+the device* across events: updates for the few slots an event touched are
+scattered into donated buffers, so a replan sends only those update lanes
+plus one (E,) delay row host->device instead of round-tripping the full
+capacity-sized slot arrays every call.
 
 `benchmarks/table3_overhead.py` measures per-replan latency of this path;
 `benchmarks/fleet_throughput.py` measures the full fleet step.
@@ -29,6 +47,8 @@ over the structure-of-arrays trie:
 from __future__ import annotations
 
 import dataclasses
+import os
+import warnings
 from functools import partial
 
 import jax
@@ -37,8 +57,28 @@ import numpy as np
 
 from repro.core.controller import Objective
 from repro.core.trie import Trie, TrieAnnotations
+from repro.kernels import ops as kernel_ops
 
 _BIG = 1e30
+
+PLAN_VARIANTS = kernel_ops.TRIE_PLAN_VARIANTS
+
+
+def default_plan_variant() -> str:
+    """Dispatch variant used when callers pass ``variant=None``."""
+    v = os.environ.get("REPRO_PLAN_VARIANT", "fused")
+    if v not in PLAN_VARIANTS:
+        raise ValueError(f"REPRO_PLAN_VARIANT={v!r}: expected one of "
+                         f"{PLAN_VARIANTS}")
+    return v
+
+
+def _resolve_variant(variant: str | None) -> str:
+    if variant is None:
+        return default_plan_variant()
+    if variant not in PLAN_VARIANTS:
+        raise ValueError(f"unknown plan variant {variant!r}: {PLAN_VARIANTS}")
+    return variant
 
 
 def trie_engines(template) -> list[str]:
@@ -50,7 +90,14 @@ def trie_engines(template) -> list[str]:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class TrieDevice:
-    """Trie + annotations as device arrays (immutable during serving)."""
+    """Trie + annotations as device arrays (immutable during serving).
+
+    ``path_counts[u, m]`` is the multiplicity of model m on the root->u
+    path: the fused planner's cumulative engine delay is one
+    ``path_counts @ per_model_delays`` contraction instead of the dense
+    (N, Dmax) gather+sum.  ``n_engines`` is static aux data computed once
+    at build time — reading it never syncs a device array to the host.
+    """
 
     terminal: jnp.ndarray         # (N,) float32 0/1
     depth: jnp.ndarray            # (N,) float32
@@ -59,18 +106,21 @@ class TrieDevice:
     lat: jnp.ndarray              # (N,)
     subtree_size: jnp.ndarray     # (N,) int32
     path_models: jnp.ndarray      # (N, Dmax) int32, -1 padded
+    path_counts: jnp.ndarray      # (N, M) float32 path multiplicities
     engine_of_model: jnp.ndarray  # (M,) int32
+    n_engines: int = 0            # static aux (no device sync on access)
 
     def tree_flatten(self):
         return (
             (self.terminal, self.depth, self.acc, self.cost, self.lat,
-             self.subtree_size, self.path_models, self.engine_of_model),
-            None,
+             self.subtree_size, self.path_models, self.path_counts,
+             self.engine_of_model),
+            self.n_engines,
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children)
+        return cls(*children, n_engines=aux)
 
     @staticmethod
     def build(trie: Trie, ann: TrieAnnotations,
@@ -84,11 +134,22 @@ class TrieDevice:
         eidx = {e: i for i, e in enumerate(engines)}
         eom = np.array([eidx[m.engine] for m in trie.template.models],
                        dtype=np.int32)
+        n = trie.n_nodes
         dmax = trie.template.max_depth
-        pm = np.full((trie.n_nodes, dmax), -1, dtype=np.int32)
-        for u in range(1, trie.n_nodes):
-            path = trie.path(u)
-            pm[u, : len(path)] = path
+        # parent-pointer fill, one vectorized pass per depth level: each
+        # level copies its parents' path prefixes/counts and appends its own
+        # edge (the per-node `trie.path(u)` walk is O(N * Dmax) in Python
+        # and dominated cold-start for large tries)
+        pm = np.full((n, dmax), -1, dtype=np.int32)
+        counts = np.zeros((n, trie.template.n_models), dtype=np.float32)
+        for d in range(1, int(trie.depth.max()) + 1):
+            nodes = np.nonzero(trie.depth == d)[0]
+            par = trie.parent[nodes]
+            if d > 1:
+                pm[nodes, : d - 1] = pm[par, : d - 1]
+                counts[nodes] = counts[par]
+            pm[nodes, d - 1] = trie.model[nodes]
+            counts[nodes, trie.model[nodes]] += 1.0
         return TrieDevice(
             terminal=jnp.asarray(terminal, jnp.float32),
             depth=jnp.asarray(trie.depth, jnp.float32),
@@ -97,72 +158,183 @@ class TrieDevice:
             lat=jnp.asarray(ann.lat, jnp.float32),
             subtree_size=jnp.asarray(trie.subtree_size, jnp.int32),
             path_models=jnp.asarray(pm, jnp.int32),
+            path_counts=jnp.asarray(counts, jnp.float32),
             engine_of_model=jnp.asarray(eom, jnp.int32),
+            n_engines=int(eom.max()) + 1,
         )
 
-    @property
-    def n_engines(self) -> int:
-        return int(np.asarray(self.engine_of_model).max()) + 1
+
+def _dispatch_plan(td: TrieDevice, prefixes, elapsed_lat, elapsed_cost,
+                   engine_delays, acc_floor, cost_cap, lat_cap,
+                   *, kind, variant):
+    return kernel_ops.trie_plan(
+        td.terminal, td.depth, td.acc, td.cost, td.lat, td.subtree_size,
+        td.path_models, td.path_counts, td.engine_of_model,
+        prefixes, elapsed_lat, elapsed_cost, engine_delays,
+        acc_floor, cost_cap, lat_cap, kind=kind, variant=variant)
 
 
-def _cum_engine_delay(td: TrieDevice, engine_delays: jnp.ndarray) -> jnp.ndarray:
-    """delay(u) = sum over the u-path's stages of delta_engine(model)."""
-    per_model = engine_delays[td.engine_of_model]                  # (M,)
-    pm = td.path_models                                            # (N, D)
-    vals = jnp.where(pm >= 0, per_model[jnp.maximum(pm, 0)], 0.0)  # (N, D)
-    return vals.sum(axis=1)
+@partial(jax.jit, static_argnames=("kind", "variant"))
+def _plan_shared_delays(td, prefixes, elapsed_lat, elapsed_cost,
+                        engine_delays, acc_floor, cost_cap, lat_cap,
+                        *, kind, variant):
+    delays = jnp.broadcast_to(
+        engine_delays[None, :], (prefixes.shape[0], engine_delays.shape[0]))
+    tgt, _ = _dispatch_plan(td, prefixes, elapsed_lat, elapsed_cost, delays,
+                            acc_floor, cost_cap, lat_cap,
+                            kind=kind, variant=variant)
+    return tgt
 
 
-def _lex_argmin(feas: jnp.ndarray, keys: tuple) -> jnp.ndarray:
-    """Exact lexicographic argmin over the feasible set.
+@partial(jax.jit, static_argnames=("kind", "variant"))
+def _fleet_step(td, prefixes, elapsed_lat, elapsed_cost, engine_delays,
+                acc_floor, cost_cap, lat_cap, *, kind, variant):
+    """One lockstep replan for a whole fleet: targets AND first steps.
 
-    Narrows the candidate mask one key at a time (`k == min(k | candidates)`
-    compares identical float32 values, so each pass is exact); the final
-    tie-break is the lowest node index, matching np.lexsort's stable order
-    in the host `select_path`."""
-    n = feas.shape[0]
-    cand = feas
-    for k in keys:
-        kk = jnp.where(cand, k, _BIG)
-        cand = cand & (kk <= kk.min())
-    idx = jnp.arange(n, dtype=jnp.int32)
-    best = jnp.min(jnp.where(cand, idx, n)).astype(jnp.int32)
-    return jnp.where(jnp.any(cand), best, jnp.int32(-1))
+    `engine_delays` is (B, E) — per-request live delay vectors, so a
+    load-aware fleet can charge each request the congestion it would
+    actually see.  The "next model on the path u -> target" lookup is a
+    single gather into the dense first-step table: `path_models[v, d]` is
+    the model chosen at invocation position d on the root->v path, and the
+    next step from a depth-d prefix toward v is exactly that entry (fused
+    into the tiled pass under the "fused"/"pallas" variants).
+    """
+    return _dispatch_plan(td, prefixes, elapsed_lat, elapsed_cost,
+                          engine_delays, acc_floor, cost_cap, lat_cap,
+                          kind=kind, variant=variant)
 
 
-@partial(jax.jit, static_argnames=("kind",))
-def _select_single(
-    td: TrieDevice,
-    u: jnp.ndarray,              # () int32 realized prefix node
-    elapsed_lat: jnp.ndarray,    # ()
-    elapsed_cost: jnp.ndarray,   # ()
-    engine_delays: jnp.ndarray,  # (E,)
-    acc_floor: jnp.ndarray,      # ()  floor + margin (ignored for max_acc)
-    cost_cap: jnp.ndarray,       # ()  (+inf if absent)
-    lat_cap: jnp.ndarray,        # ()  (+inf if absent)
-    *,
-    kind: str,
-) -> jnp.ndarray:
-    n = td.acc.shape[0]
-    idx = jnp.arange(n, dtype=jnp.int32)
-    lo = u
-    hi = u + td.subtree_size[u]
-    delay = _cum_engine_delay(td, engine_delays)
-    d_lat = (td.lat - td.lat[u]) + (delay - delay[u])
-    d_cost = td.cost - td.cost[u]
-    feas = (td.terminal > 0.5) & (idx >= lo) & (idx < hi)
-    feas &= d_lat <= (lat_cap - elapsed_lat) + 1e-6
-    # cost budgets are expectation-based plan-level constraints (§3.3):
-    # absolute C(v) <= cap, not re-conditioned on realized spend.  The
-    # slack is *relative* — costs sit at ~1e-3 $ where an absolute 1e-6
-    # would admit plans the float64 host search rejects.
-    feas &= td.cost <= cost_cap + 1e-6 * jnp.abs(cost_cap)
-    if kind == "min_cost":
-        feas &= td.acc >= acc_floor - 1e-6
-        keys = (d_cost, d_lat, td.depth)
-    else:
-        keys = (-td.acc, d_cost, d_lat)
-    return _lex_argmin(feas, keys)
+# ----------------------------------------------------------------------
+# device-resident slot state for the event-driven runtime
+# ----------------------------------------------------------------------
+_UPDATE_WIDTH = 8  # slots per scatter call; events touch few lanes each
+
+
+@partial(jax.jit, donate_argnums=(0, 1, 2))
+def _apply_slot_updates(u, el, ec, idx, new_u, new_el, new_ec):
+    """Scatter one fixed-width batch of per-slot updates into the donated
+    device-resident state (padding lanes use idx == capacity -> dropped)."""
+    u = u.at[idx].set(new_u, mode="drop")
+    el = el.at[idx].set(new_el, mode="drop")
+    ec = ec.at[idx].set(new_ec, mode="drop")
+    return u, el, ec
+
+
+@partial(jax.jit, static_argnames=("kind", "variant"))
+def _resident_plan(td, u, el, ec, delay_row, acc_floor, cost_cap, lat_cap,
+                   *, kind, variant):
+    """Replan over the device-resident slot arrays with one shared (E,)
+    delay row (the only per-replan host->device tensor)."""
+    delays = jnp.broadcast_to(
+        delay_row[None, :], (u.shape[0], delay_row.shape[0]))
+    return _dispatch_plan(td, u, el, ec, delays, acc_floor, cost_cap,
+                          lat_cap, kind=kind, variant=variant)
+
+
+class ResidentPlanner:
+    """Fleet replanner whose slot state lives on the device across events.
+
+    The event-driven runtime (`repro.core.events`) holds the authoritative
+    per-slot control state on the host (policies and the executor need it),
+    and mirrors the lanes each event touches into donated device buffers
+    via `update` — fixed-width scatters, so the program set never retraces.
+    `replan` then runs the fused planner over the resident arrays without
+    re-uploading them: per replan the wire carries only the update lanes
+    and one (E,) delay row in, and the (C,) target/next-model lanes out.
+
+    Slots not updated since their last replan may hold stale values — the
+    event loop only reads lanes it just updated (exactly the lanes whose
+    state changed), so staleness is never observable.
+    """
+
+    def __init__(self, td: TrieDevice, obj: Objective, capacity: int,
+                 variant: str | None = None):
+        self.capacity = int(capacity)
+        self.variant = _resolve_variant(variant)
+        self._td = td
+        self._kind = obj.kind
+        self._scalars = _objective_scalars(obj)
+        self._u = jnp.zeros((self.capacity,), jnp.int32)
+        self._el = jnp.zeros((self.capacity,), jnp.float32)
+        self._ec = jnp.zeros((self.capacity,), jnp.float32)
+        # two fixed scatter widths: a small one for the few lanes a steady-
+        # state event touches, and a capacity-wide one so an admission burst
+        # is a single dispatch instead of ceil(C / width) sequential calls
+        self._w_small = min(_UPDATE_WIDTH, self.capacity)
+        # warm both programs now: the no-retrace guards snapshot the compile
+        # counter after the first replan, and the burst width must not trace
+        # mid-sweep the first time a full cohort lands in one event
+        for w in {self._w_small, self.capacity}:
+            self._scatter(np.full(w, self.capacity, dtype=np.int32),
+                          np.zeros(w, dtype=np.int32),
+                          np.zeros(w, dtype=np.float32),
+                          np.zeros(w, dtype=np.float32))
+
+    def _scatter(self, idx, nu, nel, nec) -> None:
+        with warnings.catch_warnings():
+            # donation falls back to copies on backends without support
+            # (e.g. some CPU jaxlibs) — harmless, don't spam every event
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            self._u, self._el, self._ec = _apply_slot_updates(
+                self._u, self._el, self._ec, idx, nu, nel, nec)
+
+    def update(self, slots, u_vals, el_vals, ec_vals) -> None:
+        """Mirror host-side state for ``slots`` into the resident buffers."""
+        slots = np.asarray(slots, dtype=np.int32)
+        u_vals = np.asarray(u_vals, dtype=np.int32)
+        el_vals = np.asarray(el_vals, dtype=np.float32)
+        ec_vals = np.asarray(ec_vals, dtype=np.float32)
+        n = slots.shape[0]
+        w = self._w_small if n <= self._w_small else self.capacity
+        idx = np.full(w, self.capacity, dtype=np.int32)  # pad -> dropped
+        nu = np.zeros(w, dtype=np.int32)
+        nel = np.zeros(w, dtype=np.float32)
+        nec = np.zeros(w, dtype=np.float32)
+        idx[:n] = slots
+        nu[:n] = u_vals
+        nel[:n] = el_vals
+        nec[:n] = ec_vals
+        self._scatter(idx, nu, nel, nec)
+
+    def replan(self, delay_row) -> tuple[np.ndarray, np.ndarray]:
+        """One fused replan over all capacity lanes; returns host
+        (targets, next_models).  ``delay_row`` is the (E,) shared delta_e
+        vector for this instant."""
+        tgt, nxt = _resident_plan(
+            self._td, self._u, self._el, self._ec,
+            np.asarray(delay_row, dtype=np.float32),
+            *self._scalars, kind=self._kind, variant=self.variant)
+        return np.asarray(tgt), np.asarray(nxt)
+
+
+def make_resident_planner(td: TrieDevice, obj: Objective, capacity: int,
+                          variant: str | None = None) -> ResidentPlanner:
+    """Device-resident fleet replanner for the event-driven runtime."""
+    return ResidentPlanner(td, obj, capacity, variant)
+
+
+def fleet_planner_cache_size() -> int:
+    """Total compiled specializations across the planner's jitted programs,
+    or -1 when the JAX runtime doesn't expose the counter.
+
+    Covers the fleet-step program (one entry per trie shape x batch size x
+    objective kind x variant), the shared-delay batched form, and the
+    device-resident pair (slot-update scatter + resident replan).  The
+    event-driven runtime pins its planner batch at the slot capacity and
+    its scatter width at `_UPDATE_WIDTH` precisely so this stays flat while
+    the number of in-flight requests fluctuates — tests and
+    `benchmarks/open_arrival.py` assert no growth across a whole
+    arrival-rate sweep."""
+    total, found = 0, False
+    for fn in (_fleet_step, _plan_shared_delays, _resident_plan,
+               _apply_slot_updates):
+        try:
+            total += int(fn._cache_size())
+            found = True
+        except Exception:
+            pass
+    return total if found else -1
 
 
 def _objective_scalars(obj: Objective):
@@ -174,88 +346,45 @@ def _objective_scalars(obj: Objective):
     return acc_floor, cost_cap, lat_cap
 
 
-@partial(jax.jit, static_argnames=("kind",))
-def _plan_shared_delays(td, prefixes, elapsed_lat, elapsed_cost,
-                        engine_delays, acc_floor, cost_cap, lat_cap, *, kind):
-    return jax.vmap(
-        lambda u, el, ec: _select_single(
-            td, u, el, ec, engine_delays, acc_floor, cost_cap, lat_cap,
-            kind=kind)
-    )(prefixes, elapsed_lat, elapsed_cost)
-
-
-@partial(jax.jit, static_argnames=("kind",))
-def _fleet_step(td, prefixes, elapsed_lat, elapsed_cost, engine_delays,
-                acc_floor, cost_cap, lat_cap, *, kind):
-    """One lockstep replan for a whole fleet: targets AND first steps.
-
-    `engine_delays` is (B, E) — per-request live delay vectors, so a
-    load-aware fleet can charge each request the congestion it would
-    actually see.  The "next model on the path u -> target" lookup is a
-    single gather into the dense first-step table: `path_models[v, d]` is
-    the model chosen at invocation position d on the root->v path, and the
-    next step from a depth-d prefix toward v is exactly that entry.
-    """
-    tgt = jax.vmap(
-        lambda u, el, ec, ed: _select_single(
-            td, u, el, ec, ed, acc_floor, cost_cap, lat_cap, kind=kind)
-    )(prefixes, elapsed_lat, elapsed_cost, engine_delays)
-    du = td.depth[prefixes].astype(jnp.int32)
-    dmax = td.path_models.shape[1]
-    nxt = td.path_models[jnp.maximum(tgt, 0), jnp.minimum(du, dmax - 1)]
-    nxt = jnp.where((tgt < 0) | (tgt == prefixes), jnp.int32(-1), nxt)
-    return tgt, nxt
-
-
-def fleet_planner_cache_size() -> int:
-    """Number of compiled specializations of the fleet-step program, or -1
-    when the JAX runtime doesn't expose the counter.
-
-    One entry exists per (trie shape, batch size, objective kind).  The
-    event-driven runtime (`repro.core.events`) pins its planner batch at
-    the slot capacity precisely so this stays flat while the number of
-    in-flight requests fluctuates — tests and `benchmarks/open_arrival.py`
-    assert no growth across a whole arrival-rate sweep."""
-    try:
-        return int(_fleet_step._cache_size())
-    except Exception:
-        return -1
-
-
-def make_batched_planner(td: TrieDevice, obj: Objective):
+def make_batched_planner(td: TrieDevice, obj: Objective,
+                         variant: str | None = None):
     """Returns plan(prefixes, elapsed_lat, elapsed_cost, engine_delays) ->
-    best terminating node per request (int32, -1 infeasible), vmapped over
+    best terminating node per request (int32, -1 infeasible), batched over
     the request batch with one shared (E,) engine-delay vector.
 
     The underlying jitted program is module-level, so planners built for
     different objectives (or rebuilt per cohort) share one compilation per
-    (trie shape, batch size, objective kind) — objective scalars are traced
-    operands, not compile-time constants."""
+    (trie shape, batch size, objective kind, variant) — objective scalars
+    are traced operands, not compile-time constants."""
     scalars = _objective_scalars(obj)
+    variant = _resolve_variant(variant)
 
     def plan(prefixes, elapsed_lat, elapsed_cost, engine_delays):
         return _plan_shared_delays(
             td, prefixes, elapsed_lat, elapsed_cost, engine_delays,
-            *scalars, kind=obj.kind)
+            *scalars, kind=obj.kind, variant=variant)
 
     return plan
 
 
-def make_fleet_planner(td: TrieDevice, obj: Objective):
+def make_fleet_planner(td: TrieDevice, obj: Objective,
+                       variant: str | None = None):
     """Returns step(prefixes, elapsed_lat, elapsed_cost, engine_delays) ->
     (targets, next_models), the fleet runtime's one-call-per-step replanner.
     `engine_delays` has shape (B, E): one live delay vector per request."""
     scalars = _objective_scalars(obj)
+    variant = _resolve_variant(variant)
 
     def step(prefixes, elapsed_lat, elapsed_cost, engine_delays):
         return _fleet_step(
             td, prefixes, elapsed_lat, elapsed_cost, engine_delays,
-            *scalars, kind=obj.kind)
+            *scalars, kind=obj.kind, variant=variant)
 
     return step
 
 
-def make_admission_probe(td: TrieDevice, obj: Objective):
+def make_admission_probe(td: TrieDevice, obj: Objective,
+                         variant: str | None = None):
     """Batched admission-feasibility probe for the load-shedding layer.
 
     Returns feasible(prefixes, elapsed_lat, elapsed_cost, engine_delays) ->
@@ -270,6 +399,7 @@ def make_admission_probe(td: TrieDevice, obj: Objective):
     gets the same answer for free by loading probe rows into free planner
     lanes; this standalone wrapper serves external admission gates."""
     scalars = _objective_scalars(obj)
+    variant = _resolve_variant(variant)
 
     def feasible(prefixes, elapsed_lat, elapsed_cost, engine_delays):
         # canonicalize dtypes BEFORE the jit boundary: a float64 operand
@@ -281,7 +411,7 @@ def make_admission_probe(td: TrieDevice, obj: Objective):
             np.asarray(elapsed_lat, dtype=np.float32),
             np.asarray(elapsed_cost, dtype=np.float32),
             np.asarray(engine_delays, dtype=np.float32),
-            *scalars, kind=obj.kind)
+            *scalars, kind=obj.kind, variant=variant)
         return np.asarray(tgt) >= 0
 
     return feasible

@@ -9,19 +9,25 @@ each one's trie against the load its in-flight peers impose at that moment.
 - three event kinds — request **arrival**, **stage completion**, and (under
   a shedding admission policy) **deadline shed** — drive the clock; nothing
   happens between events, so the loop is O(events), not O(time);
-- per-request control state lives in **fixed-capacity slot arrays**: the
-  batched device planner (`controller_jax.make_fleet_planner`) is always
-  called with batch shape ``(capacity,)`` and free/stale slots are simply
-  masked out on the host, so the jitted program **never re-traces** as the
-  number of in-flight requests fluctuates (one compile per capacity × trie
-  × objective kind — `controller_jax.fleet_planner_cache_size` exposes the
-  counter the tests/benchmarks assert on);
+- per-request control state lives in **fixed-capacity slot arrays**, and
+  the planner's copy of that state is **device-resident**
+  (`controller_jax.make_resident_planner`): the lanes an event touched are
+  scattered into donated device buffers, and each batched replan ships
+  only those update lanes plus one (E,) delay row host->device — the full
+  capacity-sized slot arrays never round-trip.  The planner batch is
+  always the capacity, so the jitted program set **never re-traces** as
+  the number of in-flight requests fluctuates (one compile per capacity ×
+  trie × objective kind × variant — `controller_jax
+  .fleet_planner_cache_size` exposes the counter the tests/benchmarks
+  assert on);
 - arrivals that find every slot busy wait in a FIFO **admission queue**;
   requests admitted mid-flight join the next batched replan alongside the
-  requests already in service;
+  requests already in service; free slots, replan lanes and deadline
+  events are all boolean-mask/array bookkeeping — no per-event O(C)
+  Python scans;
 - per-engine occupancy is computed from **overlapping wall-clock stage
-  intervals** (a processor-sharing simulation per engine,
-  `repro.serving.loadsim.EngineSim`), not lockstep rounds: a stage's
+  intervals** (a vectorized processor-sharing calendar across all engines,
+  `repro.serving.loadsim.FleetEngineSim`), not lockstep rounds: a stage's
   service rate changes every time its engine's occupancy changes, and the
   planner's delta_e(t) delay terms come from the occupancy at the instant
   of each replan;
@@ -34,10 +40,11 @@ each one's trie against the load its in-flight peers impose at that moment.
   stage-completion event: it can reject requests whose remaining budget
   admits no feasible path (per the batched planner's own feasibility
   output under the live delays), drop hopeless requests from the queue,
-  abort in-service stages at the deadline (`EngineSim.cancel` releases the
-  engine share so survivors speed up), and under overload downgrade or
-  shed in-flight requests by a goodput-per-token score.  The default
-  (``admission=None`` == ``"always"``) keeps the pure FIFO behavior.
+  abort in-service stages at the deadline (`FleetEngineSim.cancel`
+  releases the engine share so survivors speed up), and under overload
+  downgrade or shed in-flight requests by a goodput-per-token score.  The
+  default (``admission=None`` == ``"always"``) keeps the pure FIFO
+  behavior.
 
 Event-loop contract (what an executor/policy author may rely on): events
 are processed in virtual-time order; at one timestamp the order is (1)
@@ -61,7 +68,6 @@ implementation is `repro.serving.loadsim.FleetLoadModel`.
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import time
 from collections import deque
 from typing import Callable
@@ -78,7 +84,7 @@ from repro.core.admission import (
 from repro.core.controller import Objective
 from repro.core.controller_jax import (
     TrieDevice,
-    make_fleet_planner,
+    make_resident_planner,
     next_model_for,
     trie_engines,
 )
@@ -150,6 +156,7 @@ def run_events(
     load_probe: Callable[[float], dict[str, float]] | None = None,
     fleet_load=None,
     t_start: float = 0.0,
+    plan_variant: str | None = None,
 ) -> tuple[list[ExecutionResult], EventStats]:
     """Serve an open-arrival stream of ``requests`` event-by-event.
 
@@ -165,6 +172,8 @@ def run_events(
     `repro.core.admission.AdmissionPolicy` instance; rejected and shed
     requests are reported with ``ExecutionResult.outcome`` set to
     ``"rejected"`` / ``"shed"`` and counted in `EventStats`.
+    ``plan_variant`` picks the planner dispatch path
+    (`controller_jax.PLAN_VARIANTS`; None = the session default).
     Results are returned in ``requests`` order; `total_lat` and the SLO
     check are measured from each request's *arrival*, so admission-queue
     wait counts against the deadline.
@@ -201,7 +210,7 @@ def run_events(
         return [], stats
 
     td = TrieDevice.build(trie, ann, restrict_nodes)
-    plan_step = make_fleet_planner(td, obj)
+    planner = make_resident_planner(td, obj, C, variant=plan_variant)
     engines = trie_engines(trie.template)
     E = len(engines)
     engine_of_model = np.asarray(td.engine_of_model, dtype=np.int64)
@@ -218,21 +227,20 @@ def run_events(
     pol.bind(trie, ann, obj, term_mask)
     deadline_sheds = pol.shed_on_deadline and obj.lat_cap is not None
 
-    # one processor-sharing simulation per engine; numpy-only module, but
-    # imported lazily so `repro.core` stays importable without the serving
-    # package's model stack
-    from repro.serving.loadsim import EngineSim
-    sims = {
-        e: EngineSim(
-            e,
-            slowdown=(lambda n, _e=e: fleet_load.slowdown(_e, n))
-            if (load_aware and fleet_load is not None) else None,
-        )
-        for e in engines
-    }
+    # vectorized processor-sharing calendar across all engines; numpy-only
+    # module, but imported lazily so `repro.core` stays importable without
+    # the serving package's model stack
+    from repro.serving.loadsim import FleetEngineSim
+    sim = FleetEngineSim(
+        engines, C,
+        slowdown=(lambda ei, n: fleet_load.slowdown(engines[ei], n))
+        if (load_aware and fleet_load is not None) else None,
+    )
     stats.peak_occupancy = {e: 0 for e in engines}
 
-    # fixed-capacity slot arrays — the planner's batch shape never changes
+    # fixed-capacity slot arrays — the authoritative host mirror of the
+    # control state (policies and the executor read it); the planner's
+    # device-resident copy is refreshed lane-by-lane at each replan
     slot_owner = np.full(C, -1, dtype=np.int64)    # request position, -1 free
     u = np.zeros(C, dtype=np.int32)                # realized prefix node
     elapsed_lat = np.zeros(C, dtype=np.float64)    # t - arrival at last replan
@@ -240,8 +248,9 @@ def run_events(
     stage_model = np.full(C, -1, dtype=np.int64)   # in-service stage, -1 idle
     stage_success = np.zeros(C, dtype=bool)
     downgraded = np.zeros(C, dtype=bool)           # cost-aware re-route flag
-    free: list[int] = list(range(C))
-    heapq.heapify(free)
+    free_mask = np.ones(C, dtype=bool)             # free slots
+    need_mask = np.zeros(C, dtype=bool)            # lanes to replan this event
+    deadline = np.full(C, np.inf)                  # scheduled shed, inf = none
 
     # per-request outputs (aligned with ``requests``)
     success = np.zeros(B, dtype=bool)
@@ -253,9 +262,6 @@ def run_events(
     order = np.argsort(arrivals, kind="stable")
     arr_ptr = 0
     pending: deque[int] = deque()
-    # (deadline, slot, owner) — lazily invalidated when the slot changes
-    # hands; owner mismatch == stale entry
-    shed_heap: list[tuple[float, int, int]] = []
 
     def finish(i: int, slot: int, t: float) -> None:
         stats.done_t[i] = t
@@ -266,76 +272,66 @@ def run_events(
         elapsed_cost[slot] = 0.0
         stage_model[slot] = -1
         downgraded[slot] = False
-        heapq.heappush(free, slot)
-
-    def next_shed() -> float:
-        while shed_heap and slot_owner[shed_heap[0][1]] != shed_heap[0][2]:
-            heapq.heappop(shed_heap)
-        return shed_heap[0][0] if shed_heap else np.inf
+        deadline[slot] = np.inf
+        free_mask[slot] = True
 
     def shed(i: int, slot: int, t: float) -> None:
         """Abort a request mid-flight; its engine share frees immediately."""
-        m = int(stage_model[slot])
-        if m >= 0:
-            sims[engines[int(engine_of_model[m])]].cancel(slot, t)
+        if stage_model[slot] >= 0:
+            sim.cancel(slot, t)
         stats.outcome[i] = SHED
         stats.shed += 1
         finish(i, slot, t)
 
     while True:
         t_arr = arrivals[order[arr_ptr]] if arr_ptr < B else np.inf
-        t_done = min((s.next_completion() for s in sims.values()),
-                     default=np.inf)
-        t = min(t_arr, t_done, next_shed())
+        t = min(t_arr, sim.next_completion(), float(deadline.min()))
         if not np.isfinite(t):
             assert not pending and np.all(slot_owner < 0), \
                 "event loop stalled with work outstanding"
             break
         stats.events += 1
-        need_replan: list[int] = []
+        need_mask[:] = False
 
-        # 1. stage completions at exactly t (engines in canonical order)
-        for e in engines:
-            for slot, realized_s in sims[e].pop_completed(t):
-                i = int(slot_owner[slot])
-                m = int(stage_model[slot])
-                stage_model[slot] = -1
-                models[i].append(m)
-                u[slot] = trie.child[u[slot], m]
-                if stage_success[slot]:
-                    success[i] = True
-                    finish(i, slot, t)
-                elif int(trie.depth[u[slot]]) >= max_depth:
-                    finish(i, slot, t)
-                else:
-                    need_replan.append(slot)
+        # 1. stage completions at exactly t (canonical engine order, then
+        #    admission order — FleetEngineSim reports them pre-sorted)
+        for slot, _realized_s in sim.pop_completed(t):
+            i = int(slot_owner[slot])
+            m = int(stage_model[slot])
+            stage_model[slot] = -1
+            models[i].append(m)
+            u[slot] = trie.child[u[slot], m]
+            if stage_success[slot]:
+                success[i] = True
+                finish(i, slot, t)
+            elif int(trie.depth[u[slot]]) >= max_depth:
+                finish(i, slot, t)
+            else:
+                need_mask[slot] = True
 
         # 1b. deadline sheds.  (i) Certainty test: the processor-sharing
         #     rate never exceeds 1, so ``t + remaining unloaded work`` lower-
         #     bounds an in-service stage's completion; the moment that bound
         #     overruns the deadline the request can never make its SLO and
         #     is shed immediately — under saturation this fires well before
-        #     the deadline itself.  (ii) Backstop: the deadline is also a
-        #     scheduled event (shed_heap), so a doomed request never
-        #     outlives its cap waiting for an unrelated event.  Completions
-        #     at the same instant (step 1) win the tie.
+        #     the deadline itself.  One vectorized comparison over the
+        #     calendar's remaining-work column.  (ii) Backstop: the deadline
+        #     is also a scheduled event (the ``deadline`` column feeds the
+        #     clock), so a doomed request never outlives its cap waiting for
+        #     an unrelated event.  Completions at the same instant (step 1)
+        #     win the tie.
         if deadline_sheds:
-            for slot in range(C):
-                i = int(slot_owner[slot])
-                if i < 0 or stage_model[slot] < 0:
-                    continue
-                ddl = arrivals[i] + obj.lat_cap
-                e = engines[int(engine_of_model[stage_model[slot]])]
-                if (t >= ddl
-                        or t + sims[e].remaining_work(slot, t) > ddl + 1e-9):
-                    shed(i, slot, t)
-        while shed_heap and shed_heap[0][0] <= t:
-            _, slot, i = heapq.heappop(shed_heap)
-            if slot_owner[slot] != i:
-                continue  # stale: the request finished, slot moved on
-            if slot in need_replan:
-                need_replan.remove(slot)
-            shed(i, slot, t)
+            insvc = (slot_owner >= 0) & (stage_model >= 0)
+            if insvc.any():
+                rem = sim.remaining(t)
+                slots = np.nonzero(insvc)[0]
+                ddl = arrivals[slot_owner[slots]] + obj.lat_cap
+                doomed = (t >= ddl) | (t + rem[slots] > ddl + 1e-9)
+                for slot in slots[doomed]:
+                    shed(int(slot_owner[slot]), int(slot), t)
+            for slot in np.nonzero(deadline <= t)[0]:
+                need_mask[slot] = False
+                shed(int(slot_owner[slot]), int(slot), t)
 
         # 2. arrivals at exactly t join the admission queue (FIFO)
         while arr_ptr < B and arrivals[order[arr_ptr]] <= t:
@@ -364,8 +360,9 @@ def run_events(
         # with no future event to drain them)
         while True:
             # 3. admissions: free slots (lowest index first) serve the queue
-            while free and pending:
-                slot = heapq.heappop(free)
+            while free_mask.any() and pending:
+                slot = int(np.argmax(free_mask))
+                free_mask[slot] = False
                 i = pending.popleft()
                 slot_owner[slot] = i
                 u[slot] = 0
@@ -375,56 +372,50 @@ def run_events(
                 if deadline_sheds:
                     t_d = arrivals[i] + obj.lat_cap
                     if t_d > t:
-                        heapq.heappush(shed_heap, (t_d, slot, i))
-                need_replan.append(slot)
+                        deadline[slot] = t_d
+                need_mask[slot] = True
 
-            if not need_replan:
+            need = np.nonzero(need_mask)[0]
+            if need.size == 0:
                 break
-            need_replan.sort()
 
             # 4. refresh deadline-elapsed (queue wait burns the budget) for
-            #    the slots being planned, then ONE batched planner call over
-            #    the full fixed-capacity arrays — free/mid-stage slots are
-            #    computed but masked out on the host.  This same call is the
-            #    admission probe: a newly admitted request whose lane comes
-            #    back -1 had no feasible path at its admission instant.
-            for slot in need_replan:
-                elapsed_lat[slot] = t - arrivals[slot_owner[slot]]
-            delays = np.zeros((C, E), dtype=np.float32)
+            #    the lanes being planned, mirror exactly those lanes into
+            #    the device-resident slot state, then ONE batched replan
+            #    over the full fixed-capacity arrays — free/mid-stage lanes
+            #    are computed but masked out on the host.  This same call
+            #    is the admission probe: a newly admitted request whose
+            #    lane comes back -1 had no feasible path at its admission
+            #    instant.
+            elapsed_lat[need] = t - arrivals[slot_owner[need]]
+            delay_row = np.zeros(E, dtype=np.float32)
             delay_dict: dict[str, float] | None = None
             if load_aware:
+                occ = sim.occupancies()
                 if fleet_load is not None:
                     delay_dict = fleet_load.delays(
-                        {e: sims[e].occupancy for e in engines})
-                    delays[:] = np.array(
-                        [delay_dict.get(e, 0.0) for e in engines],
-                        dtype=np.float32)
+                        {e: int(occ[j]) for j, e in enumerate(engines)})
+                    delay_row[:] = [delay_dict.get(e, 0.0) for e in engines]
                 elif load_probe is not None:
                     delay_dict = load_probe(t_start + t)
-                    row = [delay_dict.get(e, 0.0) for e in engines]
-                    for slot in need_replan:
-                        delays[slot] = row
+                    delay_row[:] = [delay_dict.get(e, 0.0) for e in engines]
             t0 = time.perf_counter()
-            tgts, nxts = plan_step(
-                u,
-                elapsed_lat.astype(np.float32),
-                elapsed_cost.astype(np.float32),
-                delays,
-            )
-            nxts = np.asarray(nxts)  # blocks until the device call is done
-            tgts = np.asarray(tgts)
+            planner.update(need, u[need],
+                           elapsed_lat[need].astype(np.float32),
+                           elapsed_cost[need].astype(np.float32))
+            tgts, nxts = planner.replan(delay_row)
             replan_s = time.perf_counter() - t0
             stats.replans += 1
             stats.replan_s.append(replan_s)
-            stats.planned_per_replan.append(len(need_replan))
-            share = replan_s / len(need_replan)
+            stats.planned_per_replan.append(int(need.size))
+            share = replan_s / need.size
 
             # 4b. downgraded slots re-route to the cheapest feasible path
             #     (host float64 search, zero extra device programs); the
             #     batched lane is computed anyway and simply overridden
             if downgraded.any():
                 nxts, tgts = nxts.copy(), tgts.copy()
-                for slot in need_replan:
+                for slot in need:
                     if not downgraded[slot]:
                         continue
                     tgt = cheapest_feasible_target(
@@ -435,7 +426,7 @@ def run_events(
                                   if tgt >= 0 else -1)
 
             # 5. dispatch: start the chosen stage of every planned slot
-            for slot in need_replan:
+            for slot in need:
                 i = int(slot_owner[slot])
                 overhead[i] += share
                 m = int(nxts[slot])
@@ -464,28 +455,31 @@ def run_events(
                 elapsed_cost[slot] += c
                 stage_model[slot] = m
                 stage_success[slot] = bool(s)
-                e = engines[int(engine_of_model[m])]
-                sims[e].start(slot, lat, t)
-            for e in engines:
-                stats.peak_occupancy[e] = max(
-                    stats.peak_occupancy[e], sims[e].occupancy)
-            need_replan = []
+                sim.start(int(slot), int(engine_of_model[m]), lat, t)
+            occ = sim.occupancies()
+            for j, e in enumerate(engines):
+                stats.peak_occupancy[e] = max(stats.peak_occupancy[e],
+                                              int(occ[j]))
+            need_mask[:] = False
 
             # 5b. overload shedding/downgrading: the policy ranks in-service
             #     requests on any engine past its occupancy target by
             #     goodput-per-token and trims the excess; freed slots can
             #     absorb queued arrivals in the next pass of this loop
             if pol.max_occupancy is not None:
-                for e in engines:
-                    if sims[e].occupancy <= pol.max_occupancy:
+                for j, e in enumerate(engines):
+                    if occ[j] <= pol.max_occupancy:
                         continue
+                    # recompute per engine: a shed on an earlier engine
+                    # freed its slot (slot_owner/stage_model reset), and a
+                    # stale mask would resurrect it into this engine's jobs
+                    insvc = (slot_owner >= 0) & (stage_model >= 0)
+                    on_e = insvc.copy()
+                    on_e[insvc] = engine_of_model[stage_model[insvc]] == j
                     jobs = [
-                        (slot, int(u[slot]), float(elapsed_cost[slot]),
+                        (int(slot), int(u[slot]), float(elapsed_cost[slot]),
                          t - arrivals[slot_owner[slot]])
-                        for slot in range(C)
-                        if slot_owner[slot] >= 0 and stage_model[slot] >= 0
-                        and engines[int(engine_of_model[stage_model[slot]])]
-                        == e
+                        for slot in np.nonzero(on_e)[0]
                     ]
                     for slot, action in pol.overload_actions(
                             e, jobs, downgraded):
@@ -496,7 +490,7 @@ def run_events(
                         else:
                             shed(int(slot_owner[slot]), slot, t)
 
-            if not (free and pending):
+            if not (free_mask.any() and pending):
                 break
 
     results = []

@@ -87,9 +87,12 @@ def run_fleet(
     load_probe: Callable[[float], dict[str, float]] | None = None,
     fleet_load=None,
     t_start: float = 0.0,
+    plan_variant: str | None = None,
 ) -> tuple[list[ExecutionResult], FleetStats]:
     """Serve ``requests`` in lockstep with one batched replan per round.
 
+    ``plan_variant`` picks the planner dispatch path ("dense", "fused",
+    "pallas"; None = the session default — see `controller_jax`).
     ``policy`` is "dynamic" or "dynamic_load_aware" (the "static" baseline
     plans once per request — there is nothing to batch; `run_cohort` keeps
     it on the scalar path).  Under "dynamic_load_aware" the planner's
@@ -112,7 +115,7 @@ def run_fleet(
         # aggregate properties are defined to be 0.0 in that state)
         return [], FleetStats()
     td = TrieDevice.build(trie, ann, restrict_nodes)
-    plan_step = make_fleet_planner(td, obj)
+    plan_step = make_fleet_planner(td, obj, variant=plan_variant)
     engines = trie_engines(trie.template)  # same ordering TrieDevice uses
     E = len(engines)
     engine_of_model = np.asarray(td.engine_of_model, dtype=np.int64)

@@ -22,8 +22,10 @@ from repro.kernels.decode_attention import decode_attention as _pallas_decode
 from repro.kernels.flash_attention import flash_attention as _pallas_flash
 from repro.kernels.rmsnorm import rms_norm as _pallas_rmsnorm
 from repro.kernels.ssd_scan import ssd_scan as _pallas_ssd
+from repro.kernels.trie_plan import trie_plan_pallas as _pallas_trie_plan
 from repro.kernels.xla_flash import decode_attention_xla, flash_attention_xla
 from repro.kernels.xla_ssd import ssd_scan_chunked
+from repro.kernels.xla_trie import fleet_plan_blocked
 
 # below this many score elements the naive reference is cheaper than the
 # blocked path (and small shapes may not tile evenly)
@@ -129,3 +131,50 @@ def rms_norm(x, scale, eps=1e-6, *, use_pallas=False):
     if use_pallas:
         return _pallas_rmsnorm(x, scale, eps, interpret=_INTERPRET)
     return ref.rms_norm(x, scale, eps)
+
+
+TRIE_PLAN_VARIANTS = ("dense", "fused", "pallas")
+
+
+def trie_plan(terminal, depth, acc, cost, lat, subtree_size, path_models,
+              path_counts, engine_of_model, prefixes, elapsed_lat,
+              elapsed_cost, engine_delays, acc_floor, cost_cap, lat_cap,
+              *, kind, variant="fused", use_pallas=False):
+    """Fused fleet replan -> (targets, next_models), both (B,) int32.
+
+    The VineLM control-plane hot path (`controller_jax._fleet_step` routes
+    here).  ``variant`` selects the implementation:
+
+    - "pallas" (or ``use_pallas=True``) -> the tiled Pallas kernel
+      (``interpret=True`` on CPU, compiled on TPU);
+    - "fused"  -> the blocked XLA mirror (same tile math, jnp fori-loop) —
+      the default serving path and the form CPU CI benchmarks;
+    - "dense"  -> the pure-jnp reference (`ref.fleet_plan`): one full
+      min-pass per lexicographic key with the (N, Dmax) delay intermediate
+      materialized — the oracle tests compare against and the pre-fusion
+      baseline `benchmarks/table3_overhead.py` measures.
+
+    All three pick the identical node (exact float32 key comparisons, same
+    tie-breaking as the host ``select_path``); inference-only, no vjp.
+    """
+    if use_pallas:
+        variant = "pallas"
+    if variant == "pallas":
+        return _pallas_trie_plan(
+            terminal, depth, acc, cost, lat, subtree_size, path_models,
+            path_counts, engine_of_model, prefixes, elapsed_lat,
+            elapsed_cost, engine_delays, acc_floor, cost_cap, lat_cap,
+            kind=kind, interpret=_INTERPRET)
+    if variant == "fused":
+        return fleet_plan_blocked(
+            terminal, depth, acc, cost, lat, subtree_size, path_models,
+            path_counts, engine_of_model, prefixes, elapsed_lat,
+            elapsed_cost, engine_delays, acc_floor, cost_cap, lat_cap,
+            kind=kind)
+    if variant != "dense":
+        raise ValueError(
+            f"unknown trie_plan variant {variant!r}: {TRIE_PLAN_VARIANTS}")
+    return ref.fleet_plan(
+        terminal, depth, acc, cost, lat, subtree_size, path_models,
+        engine_of_model, prefixes, elapsed_lat, elapsed_cost,
+        engine_delays, acc_floor, cost_cap, lat_cap, kind=kind)

@@ -155,3 +155,86 @@ def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarr
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
     return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# trie fleet-replan (VineLM controller)
+# ----------------------------------------------------------------------
+_PLAN_BIG = 1e30
+
+
+def _plan_lex_argmin(feas: jnp.ndarray, keys: tuple) -> jnp.ndarray:
+    """Exact lexicographic argmin over the feasible set (multi-pass
+    narrowing; final tie-break is the lowest node index, matching
+    np.lexsort's stable order in the host ``select_path``)."""
+    n = feas.shape[0]
+    cand = feas
+    for k in keys:
+        kk = jnp.where(cand, k, _PLAN_BIG)
+        cand = cand & (kk <= kk.min())
+    idx = jnp.arange(n, dtype=jnp.int32)
+    best = jnp.min(jnp.where(cand, idx, n)).astype(jnp.int32)
+    return jnp.where(jnp.any(cand), best, jnp.int32(-1))
+
+
+def fleet_plan(
+    terminal: jnp.ndarray,         # (N,) float32 0/1
+    depth: jnp.ndarray,            # (N,) float32
+    acc: jnp.ndarray,              # (N,)
+    cost: jnp.ndarray,             # (N,)
+    lat: jnp.ndarray,              # (N,)
+    subtree_size: jnp.ndarray,     # (N,) int32
+    path_models: jnp.ndarray,      # (N, Dmax) int32, -1 padded
+    engine_of_model: jnp.ndarray,  # (M,) int32
+    prefixes: jnp.ndarray,         # (B,) int32 realized prefix nodes
+    elapsed_lat: jnp.ndarray,      # (B,)
+    elapsed_cost: jnp.ndarray,     # (B,)  (reporting only, see select_path)
+    engine_delays: jnp.ndarray,    # (B, E) live per-engine delay vectors
+    acc_floor: jnp.ndarray,        # ()  floor + margin (ignored for max_acc)
+    cost_cap: jnp.ndarray,         # ()  (+_PLAN_BIG if absent)
+    lat_cap: jnp.ndarray,          # ()  (+_PLAN_BIG if absent)
+    *,
+    kind: str,
+):
+    """Dense masked-reduction oracle of the fused trie-replan kernel.
+
+    One full min-pass per lexicographic key per request, with the (N, Dmax)
+    cumulative-delay intermediate materialized — the pre-fusion form of the
+    fleet step, kept as the correctness ground truth (`trie_plan.py` and
+    `xla_trie.py` must pick the *identical* node) and as the "dense"
+    dispatch variant benchmarked in `benchmarks/table3_overhead.py`.
+    Returns (targets, next_models), both (B,) int32 with -1 = infeasible /
+    stop here.
+    """
+    n = acc.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+
+    def select(u, el, ec, ed):
+        per_model = ed[engine_of_model]                              # (M,)
+        pm = path_models                                             # (N, D)
+        vals = jnp.where(pm >= 0, per_model[jnp.maximum(pm, 0)], 0.0)
+        delay = vals.sum(axis=1)
+        lo = u
+        hi = u + subtree_size[u]
+        d_lat = (lat - lat[u]) + (delay - delay[u])
+        d_cost = cost - cost[u]
+        feas = (terminal > 0.5) & (idx >= lo) & (idx < hi)
+        feas &= d_lat <= (lat_cap - el) + 1e-6
+        # cost budgets are expectation-based plan-level constraints (§3.3):
+        # absolute C(v) <= cap, not re-conditioned on realized spend.  The
+        # slack is *relative* — costs sit at ~1e-3 $ where an absolute 1e-6
+        # would admit plans the float64 host search rejects.
+        feas &= cost <= cost_cap + 1e-6 * jnp.abs(cost_cap)
+        if kind == "min_cost":
+            feas2 = feas & (acc >= acc_floor - 1e-6)
+            keys = (d_cost, d_lat, depth)
+            return _plan_lex_argmin(feas2, keys)
+        keys = (-acc, d_cost, d_lat)
+        return _plan_lex_argmin(feas, keys)
+
+    tgt = jax.vmap(select)(prefixes, elapsed_lat, elapsed_cost, engine_delays)
+    du = depth[prefixes].astype(jnp.int32)
+    dmax = path_models.shape[1]
+    nxt = path_models[jnp.maximum(tgt, 0), jnp.minimum(du, dmax - 1)]
+    nxt = jnp.where((tgt < 0) | (tgt == prefixes), jnp.int32(-1), nxt)
+    return tgt, nxt

@@ -1,0 +1,86 @@
+"""XLA mirror of the fused trie-replan kernel (`trie_plan.py`).
+
+Same blocked algorithm — per-request running lexicographic minima carried
+across node tiles, cumulative engine delay as a path-counts matmul, the
+first-step gather fused into the tournament — expressed as a jnp fori-loop
+instead of a Pallas grid.  This is the path CPU CI benchmarks and the
+default `use_pallas=False` dispatch run; it executes the *same*
+`_tile_lexmin_update` helper as the kernel body, so the two cannot drift.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.trie_plan import (
+    BIG,
+    BIG_IDX,
+    DEFAULT_BLOCK_NODES,
+    _pad_to,
+    _tile_lexmin_update,
+    finalize,
+    request_stats,
+)
+
+
+def fleet_plan_blocked(
+    terminal, depth, acc, cost, lat, subtree_size, path_models,
+    path_counts, engine_of_model, prefixes, elapsed_lat, elapsed_cost,
+    engine_delays, acc_floor, cost_cap, lat_cap,
+    *,
+    kind: str,
+    block_nodes: int = DEFAULT_BLOCK_NODES,
+):
+    """Fused fleet replan: (targets, next_models), both (B,) int32.
+
+    Same contract as `ref.fleet_plan` / `trie_plan.trie_plan_pallas`.
+    """
+    del elapsed_cost
+    n = terminal.shape[0]
+    bsz = prefixes.shape[0]
+    # small tries fit one tile: skip the loop machinery entirely (the
+    # running-minima pass degenerates to a single tile update)
+    if n <= 4 * block_nodes:
+        block_nodes = max((n + 7) // 8 * 8, 8)
+    n_pad = -(-n // block_nodes) * block_nodes
+    n_tiles = n_pad // block_nodes
+
+    lo, hi, du, lat_u, cost_u, delay_u, thr, pmd, cap_eff, floor_eff = \
+        request_stats(depth, cost, lat, subtree_size, path_counts,
+                      engine_of_model, prefixes, elapsed_lat, engine_delays,
+                      lat_cap, cost_cap, acc_floor)
+
+    f32 = jnp.float32
+    term_p = _pad_to(terminal.astype(f32), n_pad, 0.0)
+    depth_p = _pad_to(depth.astype(f32), n_pad, 0.0)
+    acc_p = _pad_to(acc.astype(f32), n_pad, 0.0)
+    cost_p = _pad_to(cost.astype(f32), n_pad, 0.0)
+    lat_p = _pad_to(lat.astype(f32), n_pad, 0.0)
+    counts_p = _pad_to(path_counts.astype(f32), n_pad, 0.0)
+    pm_p = _pad_to(path_models.astype(f32), n_pad, -1.0)
+
+    carry0 = (
+        jnp.full((bsz,), BIG, f32),
+        jnp.full((bsz,), BIG, f32),
+        jnp.full((bsz,), BIG, f32),
+        jnp.full((bsz,), BIG_IDX, jnp.int32),
+        jnp.full((bsz,), -1.0, f32),
+    )
+
+    def body(i, carry):
+        s = i * block_nodes
+
+        def tile(a):
+            return jax.lax.dynamic_slice_in_dim(a, s, block_nodes)
+
+        return _tile_lexmin_update(
+            carry, s, tile(term_p), tile(depth_p), tile(acc_p),
+            tile(cost_p), tile(lat_p), tile(counts_p), tile(pm_p),
+            lo, hi, du, lat_u, cost_u, delay_u, thr, pmd,
+            cap_eff, floor_eff, kind=kind)
+
+    if n_tiles == 1:
+        carry = body(0, carry0)
+    else:
+        carry = jax.lax.fori_loop(0, n_tiles, body, carry0)
+    return finalize(carry, lo)

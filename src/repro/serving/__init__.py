@@ -3,12 +3,14 @@ from repro.serving.engine import RequestRecord, ServingEngine, ServingScheduler
 from repro.serving.loadsim import (
     EngineLoadModel,
     EngineSim,
+    FleetEngineSim,
     FleetLoadModel,
     LoadTrace,
     fit_slowdown_curve,
 )
 from repro.serving.zoo import build_zoo, sequence_accuracy
 
-__all__ = ["EngineLoadModel", "EngineSim", "FleetLoadModel", "LoadTrace",
-           "RequestRecord", "ServingEngine", "ServingScheduler", "build_zoo",
-           "fit_slowdown_curve", "sequence_accuracy"]
+__all__ = ["EngineLoadModel", "EngineSim", "FleetEngineSim",
+           "FleetLoadModel", "LoadTrace", "RequestRecord", "ServingEngine",
+           "ServingScheduler", "build_zoo", "fit_slowdown_curve",
+           "sequence_accuracy"]

@@ -224,6 +224,151 @@ class EngineSim:
         return out
 
 
+class FleetEngineSim:
+    """Vectorized structure-of-arrays event calendar for a whole engine
+    fleet (every engine x every slot), replacing the per-engine dict of
+    `EngineSim` objects in the event-driven runtime.
+
+    Jobs are keyed by slot index; state is numpy columns over slots —
+    completion-time/nominal-work columns for unit-rate engines,
+    remaining-work/start-time columns under processor sharing — so every
+    per-event operation (drain, completion scan, deadline bound) is one
+    vectorized pass instead of a Python loop over slots and engines.
+
+    Semantics are identical to one `EngineSim` per engine (the equivalence
+    and golden suites pin this):
+
+    - all times are virtual seconds, driven monotonically by the caller;
+    - ``slowdown(engine_idx, n_others)`` defines the shared service rate;
+      with ``slowdown=None`` engines are unit-rate and completion times /
+      realized durations are exact (``start + work`` bit-for-bit);
+    - the event loop calls `pop_completed` at every event timestamp, so
+      the single fleet-wide drain clock advances exactly when each
+      per-engine `EngineSim` clock would (same dt sequence, same float64
+      arithmetic);
+    - completions are reported in (canonical engine order, admission
+      order) — the order the per-engine dict loop produced.
+    """
+
+    _DONE_TOL = 1e-9  # remaining-work tolerance (matches EngineSim)
+
+    def __init__(self, engines: list[str], capacity: int, slowdown=None):
+        self.engines = list(engines)
+        self._slowdown = slowdown
+        c = int(capacity)
+        self.job_engine = np.full(c, -1, dtype=np.int64)   # -1 = idle slot
+        self._seq = np.zeros(c, dtype=np.int64)            # admission order
+        self._next_seq = 0
+        self._t_complete = np.full(c, np.inf)              # unit-rate
+        self._work = np.zeros(c)
+        self._remaining = np.full(c, np.inf)               # processor sharing
+        self._t_start = np.zeros(c)
+        self._t_last = 0.0
+
+    @property
+    def n_engines(self) -> int:
+        return len(self.engines)
+
+    def occupancies(self) -> np.ndarray:
+        """(E,) active-job counts per engine."""
+        act = self.job_engine >= 0
+        return np.bincount(self.job_engine[act], minlength=self.n_engines)
+
+    def _rates(self, occ: np.ndarray) -> np.ndarray:
+        """(E,) shared service rate per engine at the given occupancies."""
+        rates = np.ones(self.n_engines)
+        for e in range(self.n_engines):
+            if occ[e] > 0:
+                rates[e] = 1.0 / float(self._slowdown(e, int(occ[e]) - 1))
+        return rates
+
+    def _advance(self, t: float) -> None:
+        """Drain all engines at their current shared rates up to ``t``."""
+        dt = t - self._t_last
+        act = self.job_engine >= 0
+        if dt > 0.0 and self._slowdown is not None and act.any():
+            rates = self._rates(self.occupancies())
+            self._remaining[act] -= dt * rates[self.job_engine[act]]
+        self._t_last = max(self._t_last, t)
+
+    def start(self, slot: int, engine_idx: int, work: float,
+              t: float) -> None:
+        """Admit ``slot`` with ``work`` seconds of unloaded service at t."""
+        if self._slowdown is None:
+            self._t_complete[slot] = t + work
+            self._work[slot] = work
+        else:
+            self._advance(t)
+            self._remaining[slot] = work
+            self._t_start[slot] = t
+        self.job_engine[slot] = engine_idx
+        self._seq[slot] = self._next_seq
+        self._next_seq += 1
+
+    def next_completion(self) -> float:
+        """Virtual time of the next completion fleet-wide (+inf if idle)."""
+        act = self.job_engine >= 0
+        if not act.any():
+            return float("inf")
+        if self._slowdown is None:
+            return float(self._t_complete[act].min())
+        occ = self.occupancies()
+        rates = self._rates(occ)
+        out = float("inf")
+        for e in range(self.n_engines):
+            m = act & (self.job_engine == e)
+            if m.any():
+                rem = max(float(self._remaining[m].min()), 0.0)
+                out = min(out, self._t_last + rem / rates[e])
+        return out
+
+    def pop_completed(self, t: float) -> list:
+        """Remove jobs finished by ``t``; [(slot, realized_s), ...] in
+        (canonical engine order, admission order)."""
+        if self._slowdown is None:
+            done = (self.job_engine >= 0) & (self._t_complete <= t)
+        else:
+            self._advance(t)
+            done = (self.job_engine >= 0) & (self._remaining <= self._DONE_TOL)
+        slots = np.nonzero(done)[0]
+        order = np.lexsort((self._seq[slots], self.job_engine[slots]))
+        out = []
+        for slot in slots[order]:
+            realized = (self._work[slot] if self._slowdown is None
+                        else t - self._t_start[slot])
+            out.append((int(slot), float(realized)))
+            self._clear(int(slot))
+        return out
+
+    def cancel(self, slot: int, t: float) -> bool:
+        """Abort ``slot`` at ``t``: survivors first drain at the pre-cancel
+        shared rate, then its engine share is released.  False if idle."""
+        if self.job_engine[slot] < 0:
+            return False
+        if self._slowdown is not None:
+            self._advance(t)
+        self._clear(slot)
+        return True
+
+    def remaining(self, t: float) -> np.ndarray:
+        """(C,) seconds of *unloaded* service each slot still needs at
+        ``t`` (+inf for idle slots).  The processor-sharing rate never
+        exceeds 1, so ``t + remaining(t)`` lower-bounds every completion —
+        the deadline-shed certainty test is one vectorized comparison."""
+        act = self.job_engine >= 0
+        if self._slowdown is None:
+            return np.where(act, np.maximum(self._t_complete - t, 0.0),
+                            np.inf)
+        self._advance(t)
+        return np.where(act, np.maximum(self._remaining, 0.0), np.inf)
+
+    def _clear(self, slot: int) -> None:
+        self.job_engine[slot] = -1
+        self._t_complete[slot] = np.inf
+        self._work[slot] = 0.0
+        self._remaining[slot] = np.inf
+
+
 @dataclasses.dataclass
 class FleetLoadModel:
     """Self-induced load coupling for the fleet runtime.

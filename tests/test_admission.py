@@ -235,25 +235,28 @@ def test_shed_requests_never_reoccupy_engine():
     capacity == cohort size)."""
     journal = []
 
-    class RecordingSim(EngineSim):
-        def start(self, job, work, t):
-            super().start(job, work, t)
-            journal.append(("start", job, t, set(self._jobs)))
+    class RecordingSim(loadsim.FleetEngineSim):
+        def _in_service(self):
+            return set(np.nonzero(self.job_engine >= 0)[0].tolist())
 
-        def cancel(self, job, t):
-            out = super().cancel(job, t)
-            journal.append(("cancel", job, t, set(self._jobs)))
+        def start(self, slot, engine_idx, work, t):
+            super().start(slot, engine_idx, work, t)
+            journal.append(("start", slot, t, self._in_service()))
+
+        def cancel(self, slot, t):
+            out = super().cancel(slot, t)
+            journal.append(("cancel", slot, t, self._in_service()))
             return out
 
         def pop_completed(self, t):
             out = super().pop_completed(t)
-            journal.append(("pop", None, t, set(self._jobs)))
+            journal.append(("pop", None, t, self._in_service()))
             return out
 
     trie, ann, execu, load = _unit_setup()
     obj = Objective("max_acc", lat_cap=2.0)
     with pytest.MonkeyPatch.context() as mp:
-        mp.setattr(loadsim, "EngineSim", RecordingSim)
+        mp.setattr(loadsim, "FleetEngineSim", RecordingSim)
         _, stats = run_events(trie, ann, obj, np.arange(4), execu,
                               capacity=4, policy="dynamic_load_aware",
                               fleet_load=load, admission="feasibility")
@@ -304,6 +307,56 @@ def test_cost_aware_overload_shed_and_downgrade():
                            capacity=24, policy="dynamic_load_aware",
                            fleet_load=load, admission=pol2)
     assert stats2.downgraded == 0 and stats2.shed >= stats.shed
+
+
+def test_overload_on_two_engines_no_stale_shed():
+    """Sheds on an earlier engine must not leak their freed slots into a
+    later engine's overload triage at the SAME event.  Regression: a stale
+    in-service mask resurrected just-freed slots (stage_model already -1 →
+    engine_of_model[-1] aliases the last model's engine) as phantom jobs
+    with slot_owner == -1, inflating the shed excess so a healthy request
+    on the second engine was trimmed too.
+
+    Construction (binary-exact timestamps): cohort A (q<3) runs a 0.125s
+    draft on e0 then a 2s fix on e1; cohort B (q>=3) runs a 1s draft on e0
+    that already succeeds.  Arrivals 0/.125/.25 stagger A so e0 never
+    overlaps, then B's three arrivals at t=.375 land in the same event as
+    A's last fix dispatch: e0 and e1 both exceed max_occupancy=2 at
+    t=.375.  e0 is triaged first and sheds one B draft; with the stale
+    mask, its freed slot re-entered e1's job list and a second A request
+    was shed there (3 sheds, r1 lost) instead of exactly one per engine.
+    """
+    specs = (
+        ModelSpec("m0", price=0.001, base_latency=1.0,
+                  per_token_latency=0.0, power=0.5, engine="e0"),
+        ModelSpec("m1", price=0.001, base_latency=2.0,
+                  per_token_latency=0.0, power=0.9, engine="e1"),
+    )
+    tpl = WorkflowTemplate("two_stage", specs,
+                           (DecisionPoint("draft", 0, (0,)),
+                            DecisionPoint("fix", 1, (1,))), min_depth=1)
+    trie = Trie.build(tpl)
+    ann = TrieAnnotations(acc=np.array([0.0, 0.5, 0.9]),
+                          cost=np.array([0.0, 0.001, 0.002]),
+                          lat=np.array([0.0, 1.0, 3.0]))
+
+    def execu(q, d, m, t):
+        if d == 0:
+            return (q >= 3), 0.001, 0.125 if q < 3 else 1.0
+        return True, 0.001, 2.0
+
+    arr = np.array([0.0, 0.125, 0.25, 0.375, 0.375, 0.375])
+    pol = CostAwareShed(max_occupancy=2, downgrade=False)
+    res, stats = run_events(trie, ann, Objective("max_acc"), np.arange(6),
+                            execu, arrivals=arr, capacity=8, admission=pol)
+    # exactly one shed per overloaded engine: r0 (lowest-slot tie on e1)
+    # and r3 (lowest-slot tie on e0); r1/r2 finish their fix, r4/r5 their
+    # draft
+    assert [r.outcome for r in res] == \
+        [SHED, SERVED, SERVED, SHED, SERVED, SERVED]
+    assert stats.shed == 2
+    assert stats.shed == sum(r.outcome == SHED for r in res)
+    assert [r.success for r in res] == [False, True, True, False, True, True]
 
 
 def test_cost_aware_score_orders_by_goodput_per_token():

@@ -224,22 +224,24 @@ def test_events_planner_sees_live_occupancy():
     """A request admitted while another is mid-stage must plan against
     nonzero delta_e terms derived from the overlap, not lockstep rounds."""
     import repro.core.events as events_mod
-    from repro.core.controller_jax import make_fleet_planner as orig
+    from repro.core.controller_jax import make_resident_planner as orig
 
     seen = []
 
-    def spying(td, obj):
-        step = orig(td, obj)
+    def spying(td, obj, capacity, variant=None):
+        planner = orig(td, obj, capacity, variant=variant)
+        inner = planner.replan
 
-        def wrapped(prefixes, el, ec, delays):
-            seen.append(float(np.asarray(delays).max()))
-            return step(prefixes, el, ec, delays)
+        def wrapped(delay_row):
+            seen.append(float(np.asarray(delay_row).max()))
+            return inner(delay_row)
 
-        return wrapped
+        planner.replan = wrapped
+        return planner
 
     trie, ann, execu, load = _unit_setup()
     with pytest.MonkeyPatch.context() as mp:
-        mp.setattr(events_mod, "make_fleet_planner", spying)
+        mp.setattr(events_mod, "make_resident_planner", spying)
         run_events(trie, ann, Objective("max_acc"), np.array([0, 1]), execu,
                    arrivals=np.array([0.0, 0.5]), capacity=2,
                    policy="dynamic_load_aware", fleet_load=load)

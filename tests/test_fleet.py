@@ -67,8 +67,8 @@ def test_one_batched_planner_call_per_round(monkeypatch):
     calls = []
     orig = fleet_mod.make_fleet_planner
 
-    def counting(td, obj):
-        step = orig(td, obj)
+    def counting(td, obj, variant=None):
+        step = orig(td, obj, variant=variant)
 
         def wrapped(*args):
             calls.append(1)
@@ -161,8 +161,8 @@ def test_fleet_planner_sees_inflight_congestion():
     seen = []
     orig = fleet_mod.make_fleet_planner
 
-    def spying(td, obj):
-        step = orig(td, obj)
+    def spying(td, obj, variant=None):
+        step = orig(td, obj, variant=variant)
 
         def wrapped(prefixes, el, ec, delays):
             seen.append(np.asarray(delays).max())

@@ -1,0 +1,201 @@
+"""Fused trie-replan dispatch: Pallas-interpret vs XLA mirror vs host.
+
+The three dispatch variants ("dense" reference, "fused" XLA mirror,
+"pallas" interpret-mode kernel) must pick the *identical* node and first
+step as each other — and as the host float64 ``select_path`` — across the
+three paper presets, both objective kinds, and live engine delays.  The
+device-resident planner path must also hold the no-retrace invariant
+across fluctuating update widths (the kernel-path extension of the
+`fleet_planner_cache_size` guard).
+"""
+import numpy as np
+import pytest
+
+from repro.core import presets
+from repro.core.controller import Objective, select_path
+from repro.core.controller_jax import (
+    TrieDevice,
+    fleet_planner_cache_size,
+    make_fleet_planner,
+    make_resident_planner,
+    next_model_for,
+    trie_engines,
+)
+from repro.core.trie import Trie
+from repro.core.workload import generate_workload
+
+_SIZES = {"nl2sql_8": 300, "nl2sql_2": 300, "mathqa_4": 120}
+_VARIANTS = ("dense", "fused", "pallas")
+
+
+def _setup(name):
+    tpl = presets.PRESETS[name]()
+    trie = Trie.build(tpl)
+    wl = generate_workload(tpl, _SIZES[name], seed=0)
+    ann = wl.exact_annotations(trie)
+    return tpl, trie, ann
+
+
+def _objectives(trie, ann):
+    term = trie.terminal
+    return [
+        Objective("max_acc",
+                  cost_cap=float(np.quantile(ann.cost[term], 0.5)),
+                  lat_cap=float(np.quantile(ann.lat[term], 0.8))),
+        Objective("min_cost",
+                  acc_floor=float(np.quantile(ann.acc[term], 0.4)),
+                  lat_cap=float(np.quantile(ann.lat[term], 0.9))),
+    ]
+
+
+@pytest.mark.parametrize("name", sorted(_SIZES))
+def test_variants_match_host_select_path(name):
+    """Equality sweep: every dispatch variant picks the host's node and
+    first step under random prefixes, elapsed budgets, and live delays."""
+    tpl, trie, ann = _setup(name)
+    engines = trie_engines(tpl)
+    td = TrieDevice.build(trie, ann)
+    rng = np.random.default_rng(3)
+    B = 24
+    roots = rng.integers(0, trie.n_nodes, size=B).astype(np.int32)
+    el = rng.uniform(0, 3, size=B).astype(np.float32)
+    ec = np.zeros(B, np.float32)
+    delays = rng.uniform(0, 0.5, size=(B, len(engines))).astype(np.float32)
+    for obj in _objectives(trie, ann):
+        outs = {}
+        for v in _VARIANTS:
+            step = make_fleet_planner(td, obj, variant=v)
+            tgt, nxt = step(roots, el, ec, delays)
+            outs[v] = (np.asarray(tgt), np.asarray(nxt))
+        host_tgt = np.array([
+            select_path(trie, ann, obj, root=int(roots[i]),
+                        elapsed_lat=float(el[i]),
+                        engine_delays={e: float(delays[i, j])
+                                       for j, e in enumerate(engines)})
+            for i in range(B)])
+        host_nxt = np.array([
+            next_model_for(trie, int(roots[i]), int(host_tgt[i]))
+            for i in range(B)])
+        for v in _VARIANTS:
+            np.testing.assert_array_equal(outs[v][0], host_tgt,
+                                          err_msg=f"{name}/{obj.kind}/{v}")
+            np.testing.assert_array_equal(outs[v][1], host_nxt,
+                                          err_msg=f"{name}/{obj.kind}/{v}")
+
+
+def test_variants_agree_on_infeasible_and_stop():
+    """-1 lanes (no feasible path) and stop-here lanes (target == prefix)
+    agree across variants."""
+    tpl, trie, ann = _setup("nl2sql_2")
+    td = TrieDevice.build(trie, ann)
+    obj = Objective("max_acc", cost_cap=0.0)  # nothing affordable
+    roots = np.zeros(8, np.int32)
+    zeros = np.zeros(8, np.float32)
+    dl = np.zeros((8, len(trie_engines(tpl))), np.float32)
+    for v in _VARIANTS:
+        tgt, nxt = make_fleet_planner(td, obj, variant=v)(
+            roots, zeros, zeros, dl)
+        assert np.all(np.asarray(tgt) == -1), v
+        assert np.all(np.asarray(nxt) == -1), v
+    # terminal prefix with an exhausted latency budget: stop where you are
+    term_nodes = np.nonzero(trie.terminal)[0][:8].astype(np.int32)
+    obj2 = Objective("max_acc", lat_cap=1e-9)
+    for v in _VARIANTS:
+        tgt, nxt = make_fleet_planner(td, obj2, variant=v)(
+            term_nodes, zeros, zeros, dl)
+        np.testing.assert_array_equal(np.asarray(tgt), term_nodes, v)
+        assert np.all(np.asarray(nxt) == -1), v
+
+
+def test_trie_device_path_tables_match_path_walk():
+    """The vectorized parent-pointer fill reproduces the per-node
+    ``trie.path(u)`` walk (first-step table AND path-multiplicity counts)."""
+    tpl, trie, ann = _setup("nl2sql_8")
+    td = TrieDevice.build(trie, ann)
+    pm = np.asarray(td.path_models)
+    counts = np.asarray(td.path_counts)
+    dmax = tpl.max_depth
+    assert pm.shape == (trie.n_nodes, dmax)
+    assert counts.shape == (trie.n_nodes, tpl.n_models)
+    for u in range(trie.n_nodes):
+        path = trie.path(u)
+        expect = np.full(dmax, -1, np.int32)
+        expect[: len(path)] = path
+        np.testing.assert_array_equal(pm[u], expect, err_msg=f"node {u}")
+        np.testing.assert_array_equal(
+            counts[u], np.bincount(path, minlength=tpl.n_models),
+            err_msg=f"node {u}")
+
+
+def test_trie_device_n_engines_is_static():
+    """n_engines is plain aux data computed once at build — no device
+    array sync on access, and it survives pytree flatten/unflatten."""
+    import jax
+
+    tpl, trie, ann = _setup("nl2sql_2")
+    td = TrieDevice.build(trie, ann)
+    assert isinstance(td.n_engines, int)
+    assert td.n_engines == len(trie_engines(tpl))
+    leaves, treedef = jax.tree_util.tree_flatten(td)
+    td2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert td2.n_engines == td.n_engines
+
+
+@pytest.mark.parametrize("variant", ["fused", "pallas"])
+def test_resident_planner_no_retrace_across_update_widths(variant):
+    """The device-resident path compiles a fixed program set: scatters are
+    fixed-width and the replan batch is pinned at capacity, so neither
+    fluctuating update counts nor repeated replans add specializations."""
+    tpl, trie, ann = _setup("nl2sql_2")
+    td = TrieDevice.build(trie, ann)
+    obj = Objective("max_acc",
+                    lat_cap=float(np.quantile(ann.lat[trie.terminal], 0.7)))
+    C = 12
+    planner = make_resident_planner(td, obj, C, variant=variant)
+    row = np.zeros(len(trie_engines(tpl)), np.float32)
+    # warm: compile the scatter + resident-plan programs once
+    planner.update([0], [0], [0.0], [0.0])
+    planner.replan(row)
+    c0 = fleet_planner_cache_size()
+    if c0 < 0:
+        pytest.skip("JAX runtime does not expose the jit cache counter")
+    rng = np.random.default_rng(0)
+    for k in (1, 3, 7, 12, 5, 9):
+        slots = rng.choice(C, size=k, replace=False)
+        planner.update(slots, np.zeros(k, np.int32),
+                       rng.uniform(0, 1, k).astype(np.float32),
+                       np.zeros(k, np.float32))
+        tgt, nxt = planner.replan(row)
+        assert tgt.shape == (C,) and nxt.shape == (C,)
+    assert fleet_planner_cache_size() == c0
+
+
+def test_resident_planner_matches_fleet_step():
+    """Scattered device-resident state reaches the same answers as a
+    one-shot fleet-step call with identical host arrays."""
+    tpl, trie, ann = _setup("nl2sql_8")
+    td = TrieDevice.build(trie, ann)
+    engines = trie_engines(tpl)
+    obj = Objective("max_acc",
+                    cost_cap=float(np.quantile(ann.cost[trie.terminal], 0.6)),
+                    lat_cap=float(np.quantile(ann.lat[trie.terminal], 0.8)))
+    C = 16
+    rng = np.random.default_rng(7)
+    u = rng.integers(0, trie.n_nodes, size=C).astype(np.int32)
+    el = rng.uniform(0, 2, size=C).astype(np.float32)
+    ec = rng.uniform(0, 0.01, size=C).astype(np.float32)
+    row = rng.uniform(0, 0.3, size=len(engines)).astype(np.float32)
+
+    planner = make_resident_planner(td, obj, C)
+    # scatter the state in three uneven waves, overwriting some lanes
+    planner.update(np.arange(C), np.zeros(C, np.int32),
+                   np.zeros(C, np.float32), np.zeros(C, np.float32))
+    planner.update(np.arange(0, C, 2), u[0::2], el[0::2], ec[0::2])
+    planner.update(np.arange(1, C, 2), u[1::2], el[1::2], ec[1::2])
+    tgt_r, nxt_r = planner.replan(row)
+
+    step = make_fleet_planner(td, obj)
+    tgt_f, nxt_f = step(u, el, ec,
+                        np.broadcast_to(row, (C, len(engines))).copy())
+    np.testing.assert_array_equal(tgt_r, np.asarray(tgt_f))
+    np.testing.assert_array_equal(nxt_r, np.asarray(nxt_f))
