@@ -16,8 +16,8 @@ import traceback
 def main() -> None:
     from benchmarks import (admission, fig7_frontier, fig8_mae, fig9_policy,
                             fig10_slo, fleet_throughput, open_arrival,
-                            roofline, table1_errors, table2_profiling_cost,
-                            table3_overhead)
+                            priority, roofline, table1_errors,
+                            table2_profiling_cost, table3_overhead)
 
     benches = [
         ("fig8_mae", fig8_mae.run),
@@ -30,6 +30,7 @@ def main() -> None:
         ("fleet_throughput", fleet_throughput.run),
         ("open_arrival", open_arrival.run),
         ("admission", admission.run),
+        ("priority", priority.run),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")

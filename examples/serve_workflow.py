@@ -23,13 +23,20 @@ saturated, and SLO latency is measured from each request's arrival.
 ``--admission`` selects the admission-control/load-shedding policy for
 that mode (`repro.core.admission`): "always" (FIFO, the default),
 "feasibility" (reject infeasible work at the gate, shed it at the
-deadline), or "cost_aware" (adds goodput-per-token triage under engine
-overload).
+deadline), "predictive" (gate on forecast queue wait / backlog instead of
+realized burn), or "cost_aware" (adds goodput-per-token triage under
+engine overload).  ``--classes FRAC`` splits the stream into priority
+classes (`repro.core.workload.SLOClass`): FRAC of requests are
+``interactive`` (tight deadline, 4x weighted-processor-sharing share, may
+preempt in-flight batch stages — paused at their realized trie node and
+resumed later), the rest ``batch``.
 
     PYTHONPATH=src python examples/serve_workflow.py [--requests 60]
     PYTHONPATH=src python examples/serve_workflow.py --arrival-rate 2.0
     PYTHONPATH=src python examples/serve_workflow.py --arrival-rate 4.0 \\
         --admission feasibility --slo 20
+    PYTHONPATH=src python examples/serve_workflow.py --arrival-rate 4.0 \\
+        --classes 0.25 --slo 30
 """
 import argparse
 import time
@@ -42,10 +49,14 @@ from repro.core.events import run_events
 from repro.core.fleet import run_fleet
 from repro.core.murakkab import murakkab_nodes
 from repro.core.profiler import ProfileResult
-from repro.core.runtime import run_cohort, summarize
+from repro.core.runtime import run_cohort, summarize, summarize_by_class
 from repro.core.trie import Trie
 from repro.core.workflow import ModelSpec, make_refinement_workflow
-from repro.core.workload import poisson_arrivals
+from repro.core.workload import (
+    interactive_batch_classes,
+    poisson_arrivals,
+    sample_classes,
+)
 from repro.data import DataConfig, MarkovLMData
 from repro.serving import build_zoo
 
@@ -121,14 +132,27 @@ def main():
     ap.add_argument("--capacity", type=int, default=16,
                     help="admission slots for --arrival-rate mode")
     ap.add_argument("--admission", default="always",
-                    choices=("always", "feasibility", "cost_aware"),
+                    choices=("always", "feasibility", "predictive",
+                             "cost_aware"),
                     help="admission/load-shedding policy for "
                          "--arrival-rate mode (repro.core.admission)")
     ap.add_argument("--slo", type=float, default=None,
                     help="latency SLO in seconds (from arrival) for "
                          "--arrival-rate mode; required for the shedding "
                          "policies to have a deadline to act on")
+    ap.add_argument("--classes", type=float, default=None, metavar="FRAC",
+                    help="priority classes for --arrival-rate mode: FRAC "
+                         "of requests are 'interactive' (deadline = "
+                         "--slo/2, weight 4, may preempt), the rest "
+                         "'batch' (deadline = --slo, weight 1)")
     args = ap.parse_args()
+    if args.classes is not None and not 0.0 < args.classes < 1.0:
+        ap.error("--classes FRAC must be in (0, 1)")
+    if args.classes is not None and args.arrival_rate is None:
+        ap.error("--classes requires --arrival-rate (open-arrival mode)")
+    if args.classes is not None and args.slo is None:
+        ap.error("--classes requires --slo (the interactive deadline is "
+                 "derived from it)")
 
     print("== 1. training the model zoo (real JAX models) ==")
     zoo = build_zoo(vocab=VOCAB, seq_len=SEQ, seed=0)
@@ -178,9 +202,17 @@ def main():
         if args.slo is not None:
             obj = Objective("max_acc", cost_cap=cap, lat_cap=args.slo)
         arr = poisson_arrivals(len(fresh), args.arrival_rate, seed=1)
+        kw = {}
+        specs = None
+        if args.classes is not None:
+            specs = interactive_batch_classes(args.slo / 2.0)
+            kw = dict(class_specs=specs,
+                      classes=sample_classes(
+                          len(fresh),
+                          (args.classes, 1.0 - args.classes), seed=2))
         res, stats = run_events(trie, ann, obj, fresh, executor,
                                 arrivals=arr, capacity=args.capacity,
-                                admission=args.admission)
+                                admission=args.admission, **kw)
         s = summarize(res)
         print(f"   budget=${cap:.4f}  rate={args.arrival_rate:.2f}/s "
               f"capacity={args.capacity}  admission={stats.policy}"
@@ -193,6 +225,15 @@ def main():
               f"peak in-flight {max(stats.peak_occupancy.values())}")
         print(f"   admitted={stats.admitted} rejected={stats.rejected} "
               f"shed={stats.shed} downgraded={stats.downgraded}")
+        if specs is not None:
+            print(f"   preemptions={stats.preemptions} "
+                  f"resumed={stats.resumed}")
+            for name, cs in summarize_by_class(res, stats.class_of,
+                                               specs).items():
+                print(f"   class {name:11s}: n={cs['n']:3d} "
+                      f"goodput={cs['goodput']:.3f} "
+                      f"p99={cs['p99_lat']:.2f}s "
+                      f"shed={cs['shed_rate']:.3f}")
         return
     # VineLM: the fleet runtime serves the whole cohort in lockstep — one
     # batched replan per round against the live engines

@@ -21,7 +21,14 @@ at each arrival and each stage-completion event:
   requests are ranked by a goodput-per-token score (attainable success
   probability per dollar of remaining spend) and the worst are downgraded
   to the cheapest feasible path — or shed outright — until occupancy drops
-  back under the target.
+  back under the target;
+- **predictive gating**: queued requests are charged their *forecast*
+  remaining queue wait (projected completion times from the engine
+  calendar's remaining-work columns) against their deadline, so work that
+  is expected to die before a slot frees never enters service — fixing
+  the NL2SQL-8 mid-load anomaly where realized-burn shedding handed
+  always-admit's self-regulating congestion back to the planner as
+  optimism.
 
 Every decision is host-side numpy or reuses the SAME capacity-shaped jitted
 fleet-step program (free planner lanes double as admission probes), so
@@ -32,8 +39,8 @@ admission path (asserted by `benchmarks/admission.py`).
 Policies are selected by name via ``run_cohort(admission=...)`` /
 ``run_events(admission=...)``: ``"always"`` (the PR-2 FIFO behavior,
 result-identical to passing nothing), ``"feasibility"``
-(`FeasibilityGate`), ``"cost_aware"`` (`CostAwareShed`), or any
-`AdmissionPolicy` instance.
+(`FeasibilityGate`), ``"predictive"`` (`PredictiveGate`), ``"cost_aware"``
+(`CostAwareShed`), or any `AdmissionPolicy` instance.
 """
 from __future__ import annotations
 
@@ -74,9 +81,14 @@ class AdmissionPolicy:
     well-defined points of each virtual-clock event (all times are seconds
     of virtual time, elapsed budgets are measured from *arrival*):
 
-    ``queue_reject(elapsed)``
+    ``queue_reject(elapsed, lat_cap=None, wait_forecast=0.0)``
         called for every request still waiting in the admission queue;
         return True to reject it without ever assigning a slot.
+        ``lat_cap`` is the request's own deadline budget when it differs
+        from the objective's (per-class SLOs; None falls back to
+        ``obj.lat_cap``); ``wait_forecast`` is the runtime's forecast of
+        this request's remaining queue wait (only populated for policies
+        with ``wants_forecast = True``).
     ``classify_infeasible(n_executed_stages)``
         called when the batched planner returns no feasible path for a
         request; returns the outcome label (`SERVED` keeps the PR-2
@@ -98,14 +110,25 @@ class AdmissionPolicy:
     name = "always"
     shed_on_deadline = False
     max_occupancy: int | None = None
+    # True: `run_events` computes a queue-wait forecast from the engine
+    # calendar and passes it to queue_reject (predictive admission)
+    wants_forecast = False
 
     def bind(self, trie: Trie, ann: TrieAnnotations, obj: Objective,
              terminal_mask: np.ndarray) -> None:
         """Precompute per-run lookups; called once per `run_events`."""
         self.obj = obj
 
-    def queue_reject(self, elapsed: float) -> bool:
+    def queue_reject(self, elapsed: float, lat_cap: float | None = None,
+                     wait_forecast: float = 0.0) -> bool:
         return False
+
+    def forecast_delay_row(self, delay_row: np.ndarray, sim,
+                           t: float) -> np.ndarray:
+        """Hook for predictive policies to fold an engine-backlog forecast
+        into the planner's delta_e row (load-aware serving only; called
+        once per replan).  The default is a no-op."""
+        return delay_row
 
     def classify_infeasible(self, n_executed_stages: int) -> str:
         return SERVED
@@ -150,14 +173,109 @@ class FeasibilityGate(AdmissionPolicy):
         else:
             self._min_path_lat = 0.0  # no plans: let the planner say -1
 
-    def queue_reject(self, elapsed: float) -> bool:
-        cap = self.obj.lat_cap
+    def _cap(self, lat_cap: float | None) -> float | None:
+        cap = lat_cap if lat_cap is not None else self.obj.lat_cap
+        if cap is None or not np.isfinite(cap):
+            return None  # deadline-free request: nothing to gate on
+        return cap
+
+    def queue_reject(self, elapsed: float, lat_cap: float | None = None,
+                     wait_forecast: float = 0.0) -> bool:
+        cap = self._cap(lat_cap)
         if cap is None:
             return False
         return elapsed > cap - self._min_path_lat + self.margin
 
     def classify_infeasible(self, n_executed_stages: int) -> str:
         return SHED if n_executed_stages > 0 else REJECTED
+
+
+class PredictiveGate(FeasibilityGate):
+    """Feasibility gate that gates on *forecast* queue wait, not just
+    realized deadline burn.
+
+    `FeasibilityGate.queue_reject` only fires once a request's budget has
+    already provably died — by which point the request occupied the queue
+    (and, once admitted, an engine) while doomed.  Worse, on workloads
+    where always-admit's zombie congestion self-regulates the load-aware
+    planner (the NL2SQL-8 mid-load anomaly documented in
+    `benchmarks/admission.py`), shedding realized-dead work hands the
+    freed headroom back to the planner as *optimism*: delta_e(t) drops,
+    the planner picks slower paths, and the gate underperforms FIFO.
+
+    The predictive gate instead forecasts from the SoA calendar's
+    remaining-work columns, on two channels:
+
+    - **queue side**: `run_events` projects every in-service job's
+      completion time (per-engine backlog / effective service rate,
+      `FleetEngineSim.projected_completions`), hands the k-th queued
+      request the k-th projected completion as ``wait_forecast``, and the
+      gate rejects when
+
+          elapsed + discount * wait_forecast
+              > lat_cap - min_path_lat + margin
+
+      — i.e. when the request's budget is *expected* (not yet certain) to
+      be dead by the time a slot frees, so doomed work is turned away at
+      its arrival event instead of rotting in the queue until the
+      realized-burn bound fires;
+    - **planner side** (`forecast_delay_row`): each engine's delta_e is
+      floored at ``backlog_delay`` x its backlog-drain time, so the
+      planner keeps pricing the work actually outstanding instead of the
+      post-shed instantaneous occupancy.  This is the channel that fixes
+      the anomaly: queue-side rejection alone is outcome-neutral (queued
+      work holds no engine share), but an optimism-anchored planner stops
+      over-committing the headroom sheds free up.  Near the knee the
+      anchor costs a little goodput (it is deliberately pessimistic);
+      past ~4x the knee it wins it back several times over
+      (`benchmarks/admission.py --workflow nl2sql_8`).
+
+    ``discount`` de-rates the queue-side forecast (rates change as jobs
+    finish, so the frozen-rate projection is pessimistic under draining
+    load); 1.0 uses it as-is.  ``backlog_delay=0`` disables the planner
+    anchor, reducing the policy to queue-side gating only.
+    """
+
+    name = "predictive"
+    wants_forecast = True
+
+    def __init__(self, margin: float = 1e-4, discount: float = 1.0,
+                 backlog_delay: float = 0.5):
+        super().__init__(margin=margin)
+        if not discount >= 0:
+            raise ValueError("discount must be >= 0")
+        if not backlog_delay >= 0:
+            raise ValueError("backlog_delay must be >= 0")
+        self.discount = float(discount)
+        self.backlog_delay = float(backlog_delay)
+
+    def queue_reject(self, elapsed: float, lat_cap: float | None = None,
+                     wait_forecast: float = 0.0) -> bool:
+        cap = self._cap(lat_cap)
+        if cap is None:
+            return False
+        return (elapsed + self.discount * wait_forecast
+                > cap - self._min_path_lat + self.margin)
+
+    def forecast_delay_row(self, delay_row: np.ndarray, sim,
+                           t: float) -> np.ndarray:
+        """Fold the engine calendar's backlog-drain forecast into the
+        planner's delta_e row (load-aware serving only).
+
+        The occupancy-derived delta_e is *instantaneous*: the moment the
+        gate sheds a doomed request, occupancy (and delta_e) drops and
+        the planner plans new work against headroom that arrival pressure
+        is about to reclaim — the anomaly this policy exists to fix.
+        Charging each engine at least its backlog-drain time (remaining
+        work / effective service rate, `FleetEngineSim
+        .backlog_drain_times`) keeps the planner's delay perception
+        anchored to the work actually outstanding rather than to the
+        post-shed instant."""
+        if self.backlog_delay == 0.0:
+            return delay_row
+        drain = sim.backlog_drain_times(t)
+        return np.maximum(delay_row,
+                          self.backlog_delay * drain).astype(delay_row.dtype)
 
 
 class CostAwareShed(FeasibilityGate):
@@ -241,13 +359,15 @@ def cheapest_feasible_target(trie: Trie, ann: TrieAnnotations,
 _BY_NAME = {
     "always": AdmissionPolicy,
     "feasibility": FeasibilityGate,
+    "predictive": PredictiveGate,
     "cost_aware": CostAwareShed,
 }
 
 
 def get_policy(spec) -> AdmissionPolicy:
     """Resolve ``admission=`` the way `run_events` does: None or a name from
-    {"always", "feasibility", "cost_aware"}, or a policy instance."""
+    {"always", "feasibility", "predictive", "cost_aware"}, or a policy
+    instance."""
     if spec is None:
         return AdmissionPolicy()
     if isinstance(spec, AdmissionPolicy):

@@ -245,14 +245,25 @@ class ResidentPlanner:
     Slots not updated since their last replan may hold stale values — the
     event loop only reads lanes it just updated (exactly the lanes whose
     state changed), so staleness is never observable.
+
+    Per-slot deadlines (priority classes) ride on the existing lanes with
+    ZERO new compiled programs: ``lat_cap`` overrides the single traced
+    latency-cap scalar with the *largest* class deadline, and the caller
+    shifts each lane's elapsed latency by ``lat_cap - class_deadline``
+    (``-inf`` for deadline-free classes) so the kernel's ``d_lat <=
+    lat_cap - elapsed`` feasibility test evaluates every lane against its
+    own class deadline.  Scalars are traced operands, so changing the cap
+    value never re-traces.
     """
 
     def __init__(self, td: TrieDevice, obj: Objective, capacity: int,
-                 variant: str | None = None):
+                 variant: str | None = None, lat_cap: float | None = None):
         self.capacity = int(capacity)
         self.variant = _resolve_variant(variant)
         self._td = td
         self._kind = obj.kind
+        if lat_cap is not None:
+            obj = dataclasses.replace(obj, lat_cap=float(lat_cap))
         self._scalars = _objective_scalars(obj)
         self._u = jnp.zeros((self.capacity,), jnp.int32)
         self._el = jnp.zeros((self.capacity,), jnp.float32)
@@ -309,9 +320,14 @@ class ResidentPlanner:
 
 
 def make_resident_planner(td: TrieDevice, obj: Objective, capacity: int,
-                          variant: str | None = None) -> ResidentPlanner:
-    """Device-resident fleet replanner for the event-driven runtime."""
-    return ResidentPlanner(td, obj, capacity, variant)
+                          variant: str | None = None,
+                          lat_cap: float | None = None) -> ResidentPlanner:
+    """Device-resident fleet replanner for the event-driven runtime.
+
+    ``lat_cap`` overrides the objective's latency cap with the effective
+    (largest) per-class deadline so priority classes can express per-slot
+    deadlines through elapsed-latency shifts — see `ResidentPlanner`."""
+    return ResidentPlanner(td, obj, capacity, variant, lat_cap)
 
 
 def fleet_planner_cache_size() -> int:

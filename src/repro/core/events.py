@@ -39,20 +39,36 @@ each one's trie against the load its in-flight peers impose at that moment.
   selected via ``admission=``) is consulted at each arrival and each
   stage-completion event: it can reject requests whose remaining budget
   admits no feasible path (per the batched planner's own feasibility
-  output under the live delays), drop hopeless requests from the queue,
-  abort in-service stages at the deadline (`FleetEngineSim.cancel`
-  releases the engine share so survivors speed up), and under overload
-  downgrade or shed in-flight requests by a goodput-per-token score.  The
-  default (``admission=None`` == ``"always"``) keeps the pure FIFO
-  behavior.
+  output under the live delays), drop hopeless requests from the queue
+  (under ``"predictive"`` gating on *forecast* queue wait projected from
+  the engine calendar, not just realized deadline burn), abort in-service
+  stages at the deadline (`FleetEngineSim.cancel` releases the engine
+  share so survivors speed up), and under overload downgrade or shed
+  in-flight requests by a goodput-per-token score.  The default
+  (``admission=None`` == ``"always"``) keeps the pure FIFO behavior;
+- requests optionally carry a per-request **SLO class** (``class_specs=``
+  a table of `repro.core.workload.SLOClass`, ``classes=`` per-request
+  indices): the admission queue becomes a (class weight, arrival) priority
+  queue, contended engines serve jobs by **weighted processor sharing**,
+  each class's deadline replaces the objective's ``lat_cap`` for that
+  request (fed to the device planner through per-lane elapsed-latency
+  shifts against the single largest-cap scalar — zero new compiled
+  programs), and with ``preempt=True`` a queued higher-class request may
+  **preempt** the lowest-value in-flight stage: the victim is paused with
+  its remaining work intact, checkpointed at its realized trie node (the
+  realized prefix is kept, per the paper's re-rooting model), re-queued at
+  its class priority, and later resumes the same stage — no work is lost,
+  re-executed, or double-charged.  A single class with weight 1 and no
+  deadline override is bit-identical to running without classes.
 
 Event-loop contract (what an executor/policy author may rely on): events
 are processed in virtual-time order; at one timestamp the order is (1)
-stage completions, (2) deadline sheds, (3) arrivals joining the queue, (4)
-queue rejections, then an admit → batched-replan → dispatch cycle that
-repeats within the event while freed slots can absorb queued arrivals
-(overload shedding runs after each dispatch).  All times are seconds of
-virtual time; the only wall-clock measurement is the planner-call duration
+stage completions, (2) deadline sheds (in-service and paused), (3)
+arrivals joining the queue, (4) queue rejections, then a preempt → admit/
+resume → batched-replan → dispatch cycle that repeats within the event
+while freed or preemptable slots can absorb queued arrivals (overload
+shedding runs after each dispatch).  All times are seconds of virtual
+time; the only wall-clock measurement is the planner-call duration
 recorded in `EventStats.replan_s`.
 
 Degenerate case: with all arrivals at t=0, slot capacity >= cohort size and
@@ -68,8 +84,9 @@ implementation is `repro.serving.loadsim.FleetLoadModel`.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
-from collections import deque
+import warnings
 from typing import Callable
 
 import numpy as np
@@ -106,11 +123,18 @@ class EventStats:
     rejected: int = 0               # turned away before any stage executed
     shed: int = 0                   # aborted mid-flight (incl. deadline sheds)
     downgraded: int = 0             # re-routed to the cheapest feasible path
+    preemptions: int = 0            # in-flight stages paused for a higher class
+    resumed: int = 0                # paused stages restored into a slot
     replan_s: list = dataclasses.field(default_factory=list)
     planned_per_replan: list = dataclasses.field(default_factory=list)
     peak_occupancy: dict = dataclasses.field(default_factory=dict)
     # per-request outcome labels + timelines, aligned with ``requests``
     outcome: list = dataclasses.field(default_factory=list)
+    # per-request SLO-class indices (None when serving without classes)
+    class_of: np.ndarray | None = None
+    # per-request preemption counts (zeros when serving without classes)
+    preempt_count: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, dtype=np.int64))
     arrival_t: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0))
     admit_t: np.ndarray = dataclasses.field(
@@ -152,6 +176,9 @@ def run_events(
     capacity: int | None = None,
     policy: str = "dynamic",
     admission=None,
+    classes: np.ndarray | None = None,
+    class_specs=None,
+    preempt: bool = True,
     restrict_nodes: np.ndarray | None = None,
     load_probe: Callable[[float], dict[str, float]] | None = None,
     fleet_load=None,
@@ -168,14 +195,23 @@ def run_events(
     equivalence) and to ``min(len(requests), 64)`` for open arrivals.
     ``admission`` selects the admission-control / load-shedding policy:
     None or ``"always"`` (FIFO, admit everything — the default),
-    ``"feasibility"``, ``"cost_aware"``, or any
+    ``"feasibility"``, ``"predictive"``, ``"cost_aware"``, or any
     `repro.core.admission.AdmissionPolicy` instance; rejected and shed
     requests are reported with ``ExecutionResult.outcome`` set to
     ``"rejected"`` / ``"shed"`` and counted in `EventStats`.
+    ``class_specs`` + ``classes`` enable priority-class serving: a table
+    of `repro.core.workload.SLOClass` entries and per-request indices into
+    it (``classes=None`` puts everything in class 0).  Class weights drive
+    the admission priority queue and weighted processor sharing; class
+    deadlines replace ``obj.lat_cap`` per request; ``preempt`` (default
+    True) lets a queued higher-weight request pause the lowest-value
+    in-flight stage, which is checkpointed at its realized trie node and
+    resumed later with its remaining work intact.
     ``plan_variant`` picks the planner dispatch path
     (`controller_jax.PLAN_VARIANTS`; None = the session default).
     Results are returned in ``requests`` order; `total_lat` and the SLO
-    check are measured from each request's *arrival*, so admission-queue
+    check (against each request's own class deadline, when classes are
+    given) are measured from each request's *arrival*, so admission-queue
     wait counts against the deadline.
     """
     if policy not in ("dynamic", "dynamic_load_aware"):
@@ -200,22 +236,87 @@ def run_events(
     if B and C < 1:
         raise ValueError("capacity must be >= 1")
 
+    # ---- priority classes -------------------------------------------
+    priorities = class_specs is not None
+    if not priorities and classes is not None:
+        raise ValueError("classes requires class_specs (the SLOClass table "
+                         "the indices point into)")
+    base_cap = obj.lat_cap if obj.lat_cap is not None else np.inf
+    if priorities:
+        specs = tuple(class_specs)
+        if not specs:
+            raise ValueError("class_specs must be a non-empty sequence of "
+                             "SLO classes")
+        cls_idx = (np.zeros(B, dtype=np.int64) if classes is None
+                   else np.asarray(classes, dtype=np.int64))
+        if cls_idx.shape != (B,):
+            raise ValueError(f"classes shape {cls_idx.shape} != ({B},)")
+        if B and (cls_idx.min() < 0 or cls_idx.max() >= len(specs)):
+            raise ValueError(
+                f"classes must index the {len(specs)} class_specs entries")
+        cap_cls = np.array([c.deadline_s if c.deadline_s is not None
+                            else base_cap for c in specs], dtype=np.float64)
+        w_cls = np.array([c.weight for c in specs], dtype=np.float64)
+        cap_req = cap_cls[cls_idx]      # per-request deadline budget (inf ok)
+        weight_req = w_cls[cls_idx]     # per-request weighted-PS share
+    else:
+        cls_idx = None
+        cap_req = np.full(B, base_cap)
+        weight_req = np.ones(B)
+
     stats = EventStats(capacity=C,
                        policy=pol.name,
                        outcome=[SERVED] * B,
                        arrival_t=arrivals.copy(),
                        admit_t=np.zeros(B, dtype=np.float64),
-                       done_t=np.zeros(B, dtype=np.float64))
+                       done_t=np.zeros(B, dtype=np.float64),
+                       class_of=None if cls_idx is None else cls_idx.copy(),
+                       preempt_count=np.zeros(B, dtype=np.int64))
     if B == 0:
         return [], stats
 
     td = TrieDevice.build(trie, ann, restrict_nodes)
-    planner = make_resident_planner(td, obj, C, variant=plan_variant)
+    # per-class deadlines ride the existing planner lanes: the single
+    # traced lat-cap scalar becomes the LARGEST finite class cap and each
+    # lane's elapsed latency is shifted by (eff_cap - its own cap), so the
+    # kernel's `d_lat <= lat_cap - elapsed` test checks every lane against
+    # its own deadline — zero new compiled programs (see ResidentPlanner)
+    lat_shift = np.zeros(B)
+    if priorities:
+        finite = cap_req[np.isfinite(cap_req)]
+        eff_cap = float(finite.max()) if finite.size else None
+        if eff_cap is not None:
+            lat_shift = np.where(np.isfinite(cap_req),
+                                 eff_cap - cap_req, -np.inf)
+            # shifted elapsed values live near eff_cap in float32, whose
+            # resolution there bounds how finely the planner can see a
+            # tight class's burned budget — warn when deadline spread
+            # makes that quantization material vs the tightest deadline
+            step = float(np.spacing(np.float32(eff_cap)))
+            if step > 1e-3 * float(finite.min()):
+                warnings.warn(
+                    f"class deadline spread ({finite.min():.3g}s .. "
+                    f"{eff_cap:.3g}s) exceeds float32 elapsed-shift "
+                    f"resolution ({step:.3g}s at the largest cap): the "
+                    "planner's feasibility may lag the host deadline "
+                    "bookkeeping by up to that much for tight classes",
+                    stacklevel=2)
+        planner = make_resident_planner(td, obj, C, variant=plan_variant,
+                                        lat_cap=eff_cap)
+    else:
+        planner = make_resident_planner(td, obj, C, variant=plan_variant)
     engines = trie_engines(trie.template)
     E = len(engines)
     engine_of_model = np.asarray(td.engine_of_model, dtype=np.int64)
     max_depth = trie.template.max_depth
     load_aware = policy == "dynamic_load_aware"
+
+    def obj_for(i: int) -> Objective:
+        """The request's own objective: its class deadline as lat_cap."""
+        if not priorities or cap_req[i] == base_cap:
+            return obj
+        cap = float(cap_req[i]) if np.isfinite(cap_req[i]) else None
+        return dataclasses.replace(obj, lat_cap=cap)
 
     # effective terminal mask (restrict_nodes applied) — the policy's
     # feasibility bounds must see exactly what the device planner sees
@@ -225,7 +326,8 @@ def run_events(
         keep[restrict_nodes] = True
         term_mask &= keep
     pol.bind(trie, ann, obj, term_mask)
-    deadline_sheds = pol.shed_on_deadline and obj.lat_cap is not None
+    deadline_sheds = pol.shed_on_deadline and bool(
+        np.isfinite(cap_req).any())
 
     # vectorized processor-sharing calendar across all engines; numpy-only
     # module, but imported lazily so `repro.core` stays importable without
@@ -258,14 +360,26 @@ def run_events(
     overhead = np.zeros(B, dtype=np.float64)
     models: list[list[int]] = [[] for _ in range(B)]
 
-    # arrivals in time order (stable: ties keep ``requests`` order)
+    # arrivals in time order (stable: ties keep ``requests`` order); the
+    # admission queue is a (class weight desc, arrival order) priority
+    # heap — with one class (or none) the weights tie and the heap is
+    # exactly the old FIFO deque
     order = np.argsort(arrivals, kind="stable")
+    seq_of = np.empty(B, dtype=np.int64)
+    seq_of[order] = np.arange(B)
     arr_ptr = 0
-    pending: deque[int] = deque()
+    pending: list[tuple[float, int, int]] = []  # (-weight, arrival seq, i)
 
-    def finish(i: int, slot: int, t: float) -> None:
-        stats.done_t[i] = t
-        total_cost[i] = elapsed_cost[slot]
+    def push_pending(i: int) -> None:
+        heapq.heappush(pending, (-float(weight_req[i]), int(seq_of[i]), i))
+
+    # preempted requests checkpointed at their realized trie node:
+    # (prefix u, stage model, stage success, remaining unloaded work,
+    # elapsed cost, downgraded flag) — restored verbatim on resume
+    paused: dict[int, tuple[int, int, bool, float, float, bool]] = {}
+
+    def release_slot(slot: int) -> None:
+        """Reset a slot to the free state (every per-slot column)."""
         slot_owner[slot] = -1
         u[slot] = 0
         elapsed_lat[slot] = 0.0
@@ -275,6 +389,11 @@ def run_events(
         deadline[slot] = np.inf
         free_mask[slot] = True
 
+    def finish(i: int, slot: int, t: float) -> None:
+        stats.done_t[i] = t
+        total_cost[i] = elapsed_cost[slot]
+        release_slot(slot)
+
     def shed(i: int, slot: int, t: float) -> None:
         """Abort a request mid-flight; its engine share frees immediately."""
         if stage_model[slot] >= 0:
@@ -283,9 +402,68 @@ def run_events(
         stats.shed += 1
         finish(i, slot, t)
 
+    def shed_paused(i: int, t: float) -> None:
+        """Shed a preempted request straight from the queue (its deadline
+        died while paused); keeps the cost of its executed stages."""
+        rec = paused.pop(i)
+        stats.outcome[i] = SHED
+        stats.shed += 1
+        stats.done_t[i] = t
+        total_cost[i] = rec[4]
+
+    def suspend(i: int, slot: int, t: float) -> None:
+        """Preempt: pause the slot's in-service stage keeping its
+        remaining work, checkpoint the realized prefix, release the slot
+        and engine share, and re-queue at the request's class priority."""
+        remw = sim.preempt(slot, t)
+        paused[i] = (int(u[slot]), int(stage_model[slot]),
+                     bool(stage_success[slot]), float(remw),
+                     float(elapsed_cost[slot]), bool(downgraded[slot]))
+        stats.preemptions += 1
+        stats.preempt_count[i] += 1
+        release_slot(slot)
+        push_pending(i)
+
+    def resume(i: int, slot: int, t: float) -> None:
+        """Restore a preempted request into ``slot`` and resume its paused
+        stage with exactly the remaining work `preempt` captured — no
+        replan, no re-execution, no double-charged cost."""
+        pu, pm, psucc, remw, pec, pdg = paused.pop(i)
+        u[slot] = pu
+        elapsed_lat[slot] = t - arrivals[i]
+        elapsed_cost[slot] = pec
+        stage_model[slot] = pm
+        stage_success[slot] = psucc
+        downgraded[slot] = pdg
+        if deadline_sheds:
+            t_d = arrivals[i] + cap_req[i]
+            if np.isfinite(t_d) and t_d > t:
+                deadline[slot] = t_d
+        sim.start(slot, int(engine_of_model[pm]), remw, t,
+                  weight=float(weight_req[i]))
+        stats.resumed += 1
+        occ_now = sim.occupancies()
+        for j, e in enumerate(engines):
+            stats.peak_occupancy[e] = max(stats.peak_occupancy[e],
+                                          int(occ_now[j]))
+
+    def preemptable() -> bool:
+        """A queued request outranks some in-flight stage (strictly): the
+        preempt pass can still make progress with zero free slots."""
+        if not (priorities and preempt and pending):
+            return False
+        insvc = (slot_owner >= 0) & (stage_model >= 0)
+        lows = np.nonzero(insvc)[0]
+        return bool(lows.size and (weight_req[slot_owner[lows]]
+                                   < -pending[0][0]).any())
+
     while True:
         t_arr = arrivals[order[arr_ptr]] if arr_ptr < B else np.inf
         t = min(t_arr, sim.next_completion(), float(deadline.min()))
+        if deadline_sheds and paused:
+            # a preempted request's deadline must be a scheduled event too:
+            # paused work sits in the queue, not the deadline column
+            t = min(t, min(arrivals[i] + cap_req[i] for i in paused))
         if not np.isfinite(t):
             assert not pending and np.all(slot_owner < 0), \
                 "event loop stalled with work outstanding"
@@ -325,7 +503,7 @@ def run_events(
             if insvc.any():
                 rem = sim.remaining(t)
                 slots = np.nonzero(insvc)[0]
-                ddl = arrivals[slot_owner[slots]] + obj.lat_cap
+                ddl = arrivals[slot_owner[slots]] + cap_req[slot_owner[slots]]
                 doomed = (t >= ddl) | (t + rem[slots] > ddl + 1e-9)
                 for slot in slots[doomed]:
                     shed(int(slot_owner[slot]), int(slot), t)
@@ -333,50 +511,131 @@ def run_events(
                 need_mask[slot] = False
                 shed(int(slot_owner[slot]), int(slot), t)
 
-        # 2. arrivals at exactly t join the admission queue (FIFO)
+        # 2. arrivals at exactly t join the admission queue (priority
+        #    heap; pure FIFO when every weight ties)
         while arr_ptr < B and arrivals[order[arr_ptr]] <= t:
-            pending.append(int(order[arr_ptr]))
+            push_pending(int(order[arr_ptr]))
             arr_ptr += 1
 
         # 2b. queue rejections: requests whose burned budget provably rules
         #     out every path never take a slot (policy-dependent; the
-        #     default always-admit policy keeps everything)
+        #     default always-admit policy keeps everything).  Predictive
+        #     policies additionally see a forecast of each queued
+        #     request's remaining wait: the k-th kept request behind the
+        #     free slots is handed the k-th projected completion time from
+        #     the engine calendar.  Preempted (paused) requests carry
+        #     realized work, so the only way they die here is their
+        #     deadline — shed, not reject, mirroring the in-service
+        #     certainty bound on their remaining stage work.
         if pending:
-            kept: deque[int] = deque()
-            for i in pending:
-                if pol.queue_reject(t - arrivals[i]):
+            proj = (sim.projected_completions(t) if pol.wants_forecast
+                    else None)
+            n_free = int(free_mask.sum())
+            kept: list[tuple[float, int, int]] = []
+            pos = 0
+            # queue-priority order only matters when positions feed the
+            # wait forecast — reject/shed decisions here are position-
+            # independent — so skip the O(n log n) sort on the common path
+            scan = sorted(pending) if proj is not None else pending
+            for key in scan:
+                i = key[2]
+                if i in paused:
+                    ddl = arrivals[i] + cap_req[i]
+                    if deadline_sheds and np.isfinite(ddl) and (
+                            t >= ddl or t + paused[i][3] > ddl + 1e-9):
+                        shed_paused(i, t)
+                    else:
+                        kept.append(key)
+                        pos += 1
+                    continue
+                wf = 0.0
+                if proj is not None and proj.size:
+                    j = pos - n_free
+                    if j >= 0:
+                        # positions beyond the in-service backlog wait for
+                        # later service generations: extrapolate by whole
+                        # drain rounds instead of clamping to the last
+                        # projected completion
+                        g, rix = divmod(j, proj.size)
+                        wf = max(0.0, float(proj[rix]) - t
+                                 + g * (float(proj[-1]) - t))
+                if priorities or proj is not None:
+                    reject = pol.queue_reject(
+                        t - arrivals[i],
+                        lat_cap=float(cap_req[i]) if priorities else None,
+                        wait_forecast=wf)
+                else:
+                    # positional call: pre-ISSUE-5 AdmissionPolicy
+                    # subclasses with a one-argument queue_reject keep
+                    # working on class-free runs
+                    reject = pol.queue_reject(t - arrivals[i])
+                if reject:
                     stats.outcome[i] = REJECTED
                     stats.rejected += 1
                     stats.admit_t[i] = t
                     stats.done_t[i] = t
                 else:
-                    kept.append(i)
+                    kept.append(key)
+                    pos += 1
             pending = kept
+            heapq.heapify(pending)
 
-        # 3-5. admit / replan / dispatch — repeated within this event
-        # because a dispatch-time-infeasible request frees its slot
+        # 3-5. preempt / admit / replan / dispatch — repeated within this
+        # event because a dispatch-time-infeasible request frees its slot
         # immediately, and arrivals still queued at this instant must be
         # admitted into it rather than stranded (or, worse, left pending
         # with no future event to drain them)
         while True:
-            # 3. admissions: free slots (lowest index first) serve the queue
+            # 3a. preemption: with every slot busy, the highest-priority
+            #     queued request may pause the lowest-value in-flight
+            #     stage — strictly lower class weight only, ranked by
+            #     (weight, most remaining work, slot).  The victim is
+            #     checkpointed (suspend) and re-queued; each preemption
+            #     strictly shrinks the set of lower-weight in-service
+            #     stages, so this cannot livelock.
+            if priorities and preempt:
+                while pending and not free_mask.any():
+                    head_w = -pending[0][0]
+                    insvc = (slot_owner >= 0) & (stage_model >= 0)
+                    cand = np.nonzero(insvc)[0]
+                    cand = cand[weight_req[slot_owner[cand]] < head_w]
+                    if cand.size == 0:
+                        break
+                    rem = sim.remaining(t)
+                    victim = min(
+                        (int(s) for s in cand),
+                        key=lambda s: (weight_req[slot_owner[s]],
+                                       -rem[s], s))
+                    suspend(int(slot_owner[victim]), victim, t)
+
+            # 3b. admissions: free slots (lowest index first) serve the
+            #     queue in (class weight, arrival) order; preempted
+            #     requests resume their paused stage without a replan
             while free_mask.any() and pending:
                 slot = int(np.argmax(free_mask))
                 free_mask[slot] = False
-                i = pending.popleft()
+                i = heapq.heappop(pending)[2]
                 slot_owner[slot] = i
+                if i in paused:
+                    resume(i, slot, t)
+                    continue
                 u[slot] = 0
                 elapsed_cost[slot] = 0.0
                 stats.admit_t[i] = t
                 stats.admitted += 1
                 if deadline_sheds:
-                    t_d = arrivals[i] + obj.lat_cap
-                    if t_d > t:
+                    t_d = arrivals[i] + cap_req[i]
+                    if np.isfinite(t_d) and t_d > t:
                         deadline[slot] = t_d
                 need_mask[slot] = True
 
             need = np.nonzero(need_mask)[0]
             if need.size == 0:
+                # resumes set no replan lanes; if the queue still holds a
+                # request that outranks an in-flight stage, the preempt
+                # pass must run again within this same event
+                if preemptable():
+                    continue
                 break
 
             # 4. refresh deadline-elapsed (queue wait burns the budget) for
@@ -391,17 +650,39 @@ def run_events(
             delay_row = np.zeros(E, dtype=np.float32)
             delay_dict: dict[str, float] | None = None
             if load_aware:
-                occ = sim.occupancies()
+                if priorities:
+                    # weighted occupancy: a weight-4 job loads its engine
+                    # like four weight-1 jobs (equals the plain count when
+                    # every weight is 1)
+                    occ_l = sim.weighted_occupancies()
+                    occ_map = {e: float(occ_l[j])
+                               for j, e in enumerate(engines)}
+                else:
+                    occ_l = sim.occupancies()
+                    occ_map = {e: int(occ_l[j])
+                               for j, e in enumerate(engines)}
                 if fleet_load is not None:
-                    delay_dict = fleet_load.delays(
-                        {e: int(occ[j]) for j, e in enumerate(engines)})
+                    delay_dict = fleet_load.delays(occ_map)
                     delay_row[:] = [delay_dict.get(e, 0.0) for e in engines]
                 elif load_probe is not None:
                     delay_dict = load_probe(t_start + t)
                     delay_row[:] = [delay_dict.get(e, 0.0) for e in engines]
+                if pol.wants_forecast:
+                    # predictive policies anchor delta_e to the calendar's
+                    # outstanding backlog, so a shed's freed headroom is
+                    # not handed back to the planner as optimism
+                    delay_row = pol.forecast_delay_row(delay_row, sim, t)
+                    delay_dict = {e: float(delay_row[j])
+                                  for j, e in enumerate(engines)}
             t0 = time.perf_counter()
+            el_planner = elapsed_lat[need]
+            if priorities:
+                # per-class deadlines enter the planner's feasibility
+                # lanes as elapsed shifts against the largest-cap scalar
+                # (-inf shift = deadline-free lane); see ResidentPlanner
+                el_planner = el_planner + lat_shift[slot_owner[need]]
             planner.update(need, u[need],
-                           elapsed_lat[need].astype(np.float32),
+                           el_planner.astype(np.float32),
                            elapsed_cost[need].astype(np.float32))
             tgts, nxts = planner.replan(delay_row)
             replan_s = time.perf_counter() - t0
@@ -419,7 +700,8 @@ def run_events(
                     if not downgraded[slot]:
                         continue
                     tgt = cheapest_feasible_target(
-                        trie, ann, obj, int(u[slot]),
+                        trie, ann, obj_for(int(slot_owner[slot])),
+                        int(u[slot]),
                         float(elapsed_lat[slot]), delay_dict, term_mask)
                     tgts[slot] = tgt
                     nxts[slot] = (next_model_for(trie, int(u[slot]), tgt)
@@ -455,7 +737,11 @@ def run_events(
                 elapsed_cost[slot] += c
                 stage_model[slot] = m
                 stage_success[slot] = bool(s)
-                sim.start(int(slot), int(engine_of_model[m]), lat, t)
+                if priorities:
+                    sim.start(int(slot), int(engine_of_model[m]), lat, t,
+                              weight=float(weight_req[i]))
+                else:  # duck-typed sims need not accept weight=
+                    sim.start(int(slot), int(engine_of_model[m]), lat, t)
             occ = sim.occupancies()
             for j, e in enumerate(engines):
                 stats.peak_occupancy[e] = max(stats.peak_occupancy[e],
@@ -490,13 +776,18 @@ def run_events(
                         else:
                             shed(int(slot_owner[slot]), slot, t)
 
-            if not (free_mask.any() and pending):
-                break
+            if free_mask.any() and pending:
+                continue
+            # preemption can still make progress with zero free slots: a
+            # queued higher-class request vs a lower-weight in-flight stage
+            if preemptable():
+                continue
+            break
 
     results = []
     for i in range(B):
         lat = float(stats.done_t[i] - stats.arrival_t[i])
-        slo = obj.lat_cap is not None and lat > obj.lat_cap + 1e-9
+        slo = bool(np.isfinite(cap_req[i])) and lat > cap_req[i] + 1e-9
         results.append(ExecutionResult(
             success=bool(success[i]),
             total_cost=float(total_cost[i]),

@@ -127,16 +127,19 @@ def run_cohort(
                  lockstep with one batched device planner call per round.
       "events" — `repro.core.events.run_events`: open-arrival event-driven
                  serving on a virtual clock (``arrivals=``/``capacity=``);
-                 SLO latency is measured from each request's arrival, and
+                 SLO latency is measured from each request's arrival,
                  ``admission=`` selects an admission-control/load-shedding
-                 policy ("always", "feasibility", "cost_aware", or an
-                 `repro.core.admission.AdmissionPolicy` instance).
-      "auto"   — events whenever ``arrivals``/``capacity``/``admission``
-                 is given, else fleet for dynamic policies on cohorts of
-                 at least 8 requests (where the batched planner amortizes
-                 its call overhead), scalar otherwise.  The "static"
-                 policy plans once per request, so there is nothing to
-                 batch.
+                 policy ("always", "feasibility", "predictive",
+                 "cost_aware", or an `repro.core.admission.AdmissionPolicy`
+                 instance), and ``class_specs=``/``classes=``/``preempt=``
+                 enable priority-class serving (per-class deadlines and
+                 weights, weighted processor sharing, preemption).
+      "auto"   — events whenever ``arrivals``/``capacity``/``admission``/
+                 ``class_specs`` is given, else fleet for dynamic policies
+                 on cohorts of at least 8 requests (where the batched
+                 planner amortizes its call overhead), scalar otherwise.
+                 The "static" policy plans once per request, so there is
+                 nothing to batch.
     The scalar, fleet, and (closed-cohort, full-capacity) events paths
     produce identical per-request results for dynamic policies (asserted by
     tests/test_fleet.py and tests/test_events*.py); they differ only in how
@@ -146,8 +149,10 @@ def run_cohort(
         raise ValueError(f"unknown engine {engine!r}: "
                          "expected 'auto', 'fleet', 'scalar', or 'events'")
     policy = kw.get("policy", "dynamic")
+    _events_kw = ("arrivals", "capacity", "admission", "classes",
+                  "class_specs", "preempt")
     if engine == "auto":
-        if "arrivals" in kw or "capacity" in kw or "admission" in kw:
+        if any(k in kw for k in _events_kw):
             engine = "events"
         else:
             use_fleet = policy != "static" and (
@@ -158,7 +163,7 @@ def run_cohort(
 
         results, _ = run_events(trie, ann, obj, requests, executor, **kw)
         return results
-    for k in ("arrivals", "capacity", "admission"):
+    for k in _events_kw:
         if k in kw:
             raise ValueError(
                 f"{k!r} models open-arrival admission — it requires the "
@@ -203,3 +208,24 @@ def summarize(results: list[ExecutionResult]) -> dict:
         "reject_rate": sum(r.outcome == "rejected" for r in results) / n,
         "shed_rate": sum(r.outcome == "shed" for r in results) / n,
     }
+
+
+def summarize_by_class(results: list[ExecutionResult], classes,
+                       class_specs) -> dict:
+    """Per-SLO-class partition of `summarize` for priority serving runs.
+
+    ``classes`` is the per-request class-index array the run was served
+    with (`EventStats.class_of`), ``class_specs`` the matching SLOClass
+    table.  Returns {class name: summarize(subset) + "n"}; classes with no
+    requests report the all-zero empty summary."""
+    classes = np.asarray(classes)
+    if classes.shape != (len(results),):
+        raise ValueError(f"classes shape {classes.shape} != "
+                         f"({len(results)},)")
+    out = {}
+    for k, spec in enumerate(class_specs):
+        sub = [r for r, c in zip(results, classes) if c == k]
+        s = summarize(sub)
+        s["n"] = len(sub)
+        out[spec.name] = s
+    return out

@@ -45,6 +45,9 @@ class Workload:
     cost: np.ndarray
     lat: np.ndarray
     difficulty: np.ndarray  # (n_q,) latent difficulty (diagnostics only)
+    # per-request SLO-class indices (None unless generated with class_mix=);
+    # indices into whatever SLOClass table the serving layer is given
+    classes: np.ndarray | None = None
 
     @property
     def n_requests(self) -> int:
@@ -126,6 +129,70 @@ class Workload:
                 if r.any():
                     Q[i, m] = self.S[r, depth - 1, m].mean()
         return prefixes, Q
+
+
+# ----------------------------------------------------------------------
+# SLO / priority classes (open-arrival serving, `repro.core.events`)
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One per-request service class for priority-aware open-arrival serving.
+
+    ``deadline_s`` is the class's latency SLO measured from *arrival*
+    (None: fall back to the objective's ``lat_cap``; if that is also None
+    the class is deadline-free).  ``weight`` is the class's share in
+    weighted processor sharing on a contended engine AND its rank for
+    preemption: a queued request may preempt an in-flight request of a
+    strictly lower-weight class.  Powers of two keep the single-class
+    degenerate case bit-identical to unweighted sharing (the share factor
+    ``occupancy * w / sum(w)`` reduces to exactly 1.0).
+    """
+
+    name: str
+    deadline_s: float | None = None
+    weight: float = 1.0
+
+    def __post_init__(self):
+        if not self.weight > 0:
+            raise ValueError(f"class {self.name!r}: weight must be > 0")
+        if self.deadline_s is not None and not self.deadline_s > 0:
+            raise ValueError(f"class {self.name!r}: deadline_s must be > 0")
+
+
+def interactive_batch_classes(
+    interactive_deadline_s: float,
+    *,
+    batch_deadline_s: float | None = None,
+    interactive_weight: float = 4.0,
+) -> tuple[SLOClass, SLOClass]:
+    """The canonical two-class mix: a tight-deadline, high-weight
+    ``interactive`` class (index 0) and a deadline-relaxed, weight-1
+    ``batch`` class (index 1)."""
+    return (
+        SLOClass("interactive", deadline_s=interactive_deadline_s,
+                 weight=interactive_weight),
+        SLOClass("batch", deadline_s=batch_deadline_s, weight=1.0),
+    )
+
+
+def _validated_mix(mix) -> np.ndarray:
+    """Normalized class probabilities from a user-supplied mix."""
+    p = np.asarray(mix, dtype=np.float64)
+    if p.ndim != 1 or p.size == 0:
+        raise ValueError(f"mix must be a non-empty 1-d sequence, got {mix!r}")
+    if np.any(p < 0) or not p.sum() > 0:
+        raise ValueError("mix must be non-negative with a positive sum")
+    return p / p.sum()
+
+
+def sample_classes(n: int, mix, seed: int = 0) -> np.ndarray:
+    """(n,) iid class indices drawn from ``mix`` (per-class probabilities,
+    normalized; e.g. ``(0.25, 0.75)`` = 25% class 0).  Deterministic given
+    ``seed``."""
+    if n < 0:
+        raise ValueError("n must be >= 0")
+    p = _validated_mix(mix)
+    return np.random.default_rng(seed).choice(p.size, size=n, p=p)
 
 
 # ----------------------------------------------------------------------
@@ -225,12 +292,19 @@ def generate_workload(
     *,
     interaction: float = 0.06,
     depth_decay: float = 0.92,
+    class_mix=None,
 ) -> Workload:
     """Draw a ground-truth workload for ``template``.
 
     success prob:  pi(q, d, m) = clip(power_m * decay^d * (1 - z_q) + eps_qm)
     where eps_qm is a small request-model interaction (breaks exact rank-1).
     cost/latency:  lognormal output tokens -> price & token-latency models.
+
+    ``class_mix`` optionally attaches per-request SLO-class indices
+    (``Workload.classes``) drawn iid from the given probabilities — the
+    request-level counterpart of an `SLOClass` table handed to the
+    priority-aware open-arrival runtime.  Drawn *after* every other table,
+    so S/cost/lat are bit-identical with and without a mix.
     """
     rng = np.random.default_rng(seed)
     D, M = template.max_depth, template.n_models
@@ -262,10 +336,18 @@ def generate_workload(
         + tok_lat[None, None, :] * tokens
         + rng.gamma(2.0, 0.05, size=(n_requests, D, M))
     )
+    classes = None
+    if class_mix is not None:
+        try:
+            p = _validated_mix(class_mix)
+        except ValueError as e:
+            raise ValueError(f"class_mix: {e}") from None
+        classes = rng.choice(p.size, size=n_requests, p=p)
     return Workload(
         template=template,
         S=S,
         cost=cost,
         lat=lat.astype(np.float64),
         difficulty=z,
+        classes=classes,
     )

@@ -248,6 +248,19 @@ class FleetEngineSim:
       arithmetic);
     - completions are reported in (canonical engine order, admission
       order) — the order the per-engine dict loop produced.
+
+    **Weighted processor sharing + preemption** (priority-class serving):
+    `start` takes an optional per-job ``weight``; each engine's total
+    service rate is split among its jobs as a *work-conserving bounded
+    fair share* — proportional to weight, capped at unit rate per job
+    (so ``t + remaining(t)`` stays a certain completion lower bound; the
+    deadline-shed certainty test relies on it), with capped jobs' excess
+    redistributed to the rest (see `_job_rates`).  With every weight
+    equal the share factor is exactly 1.0 and the drain arithmetic is
+    bit-identical to the unweighted form.
+    `preempt` pauses a job mid-stage, returning its remaining *unloaded*
+    work so the caller can later resume it via ``start(slot, engine,
+    remaining, t)`` — work is conserved: nothing is lost or re-executed.
     """
 
     _DONE_TOL = 1e-9  # remaining-work tolerance (matches EngineSim)
@@ -264,6 +277,8 @@ class FleetEngineSim:
         self._remaining = np.full(c, np.inf)               # processor sharing
         self._t_start = np.zeros(c)
         self._t_last = 0.0
+        self._weight = np.ones(c)                          # weighted PS share
+        self._weighted = False  # any non-unit weight ever seen
 
     @property
     def n_engines(self) -> int:
@@ -273,6 +288,53 @@ class FleetEngineSim:
         """(E,) active-job counts per engine."""
         act = self.job_engine >= 0
         return np.bincount(self.job_engine[act], minlength=self.n_engines)
+
+    def weighted_occupancies(self) -> np.ndarray:
+        """(E,) sums of active-job weights per engine — the load-model
+        input under priority classes (a weight-4 interactive job presses
+        on the engine like four weight-1 jobs).  Equals `occupancies` as
+        float when every job has unit weight."""
+        act = self.job_engine >= 0
+        return np.bincount(self.job_engine[act], weights=self._weight[act],
+                           minlength=self.n_engines)
+
+    def _job_rates(self, act: np.ndarray, rates: np.ndarray) -> np.ndarray:
+        """Per-job drain rates for the active mask.
+
+        Weighted PS is a *work-conserving bounded fair share*: each
+        engine's total service rate (``occupancy x shared rate``) is
+        split by weight, every job's rate is capped at 1.0 (a job never
+        drains faster than an unloaded engine would serve it, preserving
+        the ``t + remaining`` completion lower bound), and a capped job's
+        excess is redistributed among the uncapped jobs (water-filling) —
+        a heavy job sharing an under-loaded engine must not throttle the
+        light jobs below capacity the engine still has."""
+        base = rates[self.job_engine[act]]
+        if not self._weighted:
+            return base
+        je = self.job_engine[act]
+        w = self._weight[act]
+        E = self.n_engines
+        occ = np.bincount(je, minlength=E).astype(np.float64)
+        remaining = occ * rates          # per-engine rate left to hand out
+        r = np.zeros(w.shape)
+        fixed = np.zeros(w.shape, dtype=bool)
+        while True:                      # each pass caps >= 1 job or ends
+            free = ~fixed
+            if not free.any():
+                break
+            sumw = np.bincount(je[free], weights=w[free], minlength=E)
+            share = np.zeros(w.shape)
+            share[free] = (remaining[je[free]] * w[free]
+                           / sumw[je[free]])
+            newly = free & (share >= 1.0)
+            if not newly.any():
+                r[free] = share[free]
+                break
+            r[newly] = 1.0
+            fixed |= newly
+            remaining = remaining - np.bincount(je[newly], minlength=E)
+        return r
 
     def _rates(self, occ: np.ndarray) -> np.ndarray:
         """(E,) shared service rate per engine at the given occupancies."""
@@ -288,12 +350,16 @@ class FleetEngineSim:
         act = self.job_engine >= 0
         if dt > 0.0 and self._slowdown is not None and act.any():
             rates = self._rates(self.occupancies())
-            self._remaining[act] -= dt * rates[self.job_engine[act]]
+            self._remaining[act] -= dt * self._job_rates(act, rates)
         self._t_last = max(self._t_last, t)
 
     def start(self, slot: int, engine_idx: int, work: float,
-              t: float) -> None:
-        """Admit ``slot`` with ``work`` seconds of unloaded service at t."""
+              t: float, weight: float = 1.0) -> None:
+        """Admit ``slot`` with ``work`` seconds of unloaded service at t.
+
+        ``weight`` is the job's weighted-PS share (priority classes);
+        resuming a preempted stage is the same call with ``work`` set to
+        the remainder `preempt` returned."""
         if self._slowdown is None:
             self._t_complete[slot] = t + work
             self._work[slot] = work
@@ -302,6 +368,9 @@ class FleetEngineSim:
             self._remaining[slot] = work
             self._t_start[slot] = t
         self.job_engine[slot] = engine_idx
+        self._weight[slot] = weight
+        if weight != 1.0:
+            self._weighted = True
         self._seq[slot] = self._next_seq
         self._next_seq += 1
 
@@ -314,6 +383,10 @@ class FleetEngineSim:
             return float(self._t_complete[act].min())
         occ = self.occupancies()
         rates = self._rates(occ)
+        if self._weighted:
+            jr = self._job_rates(act, rates)
+            rem = np.maximum(self._remaining[act], 0.0)
+            return float(self._t_last + (rem / jr).min())
         out = float("inf")
         for e in range(self.n_engines):
             m = act & (self.job_engine == e)
@@ -350,6 +423,69 @@ class FleetEngineSim:
         self._clear(slot)
         return True
 
+    def preempt(self, slot: int, t: float) -> float | None:
+        """Pause ``slot``'s in-service stage at ``t`` and release its
+        engine share (survivors first drain at the pre-preemption rates).
+
+        Returns the stage's remaining *unloaded* work — the caller resumes
+        the checkpointed stage later with ``start(slot', engine,
+        remaining, t')``, so preempted work is conserved exactly: the sum
+        of drained and remaining work always equals the work injected.
+        None when the slot is idle (nothing to preempt)."""
+        if self.job_engine[slot] < 0:
+            return None
+        if self._slowdown is None:
+            rem = max(float(self._t_complete[slot]) - t, 0.0)
+        else:
+            self._advance(t)
+            rem = max(float(self._remaining[slot]), 0.0)
+        self._clear(slot)
+        return rem
+
+    def backlog_drain_times(self, t: float) -> np.ndarray:
+        """(E,) expected seconds for each engine to drain its current
+        backlog: remaining unloaded work summed per engine over the
+        engine's total effective service rate (sum of its jobs' drain
+        rates).  Zero for idle engines.  The predictive admission policy
+        folds this into the planner's delta_e row so freed headroom after
+        a shed is not handed back to the planner as optimism."""
+        out = np.zeros(self.n_engines)
+        act = self.job_engine >= 0
+        if not act.any():
+            return out
+        if self._slowdown is None:
+            rem = np.maximum(self._t_complete - t, 0.0)[act]
+            jr = np.ones(rem.shape)
+        else:
+            self._advance(t)
+            rem = np.maximum(self._remaining, 0.0)[act]
+            jr = self._job_rates(act, self._rates(self.occupancies()))
+        je = self.job_engine[act]
+        backlog = np.bincount(je, weights=rem, minlength=self.n_engines)
+        rate = np.bincount(je, weights=jr, minlength=self.n_engines)
+        busy = rate > 0
+        out[busy] = backlog[busy] / rate[busy]
+        return out
+
+    def projected_completions(self, t: float) -> np.ndarray:
+        """Ascending projected completion times of every in-service job,
+        assuming per-engine occupancies and rates stay frozen at their
+        current values: the remaining-work column over the effective
+        per-job service rate (per-engine backlog / service rate, job by
+        job).  This is the *forecast* input of predictive admission —
+        unlike `next_completion` it projects every job, and unlike the
+        certainty bound it is an expectation, not a lower bound."""
+        act = self.job_engine >= 0
+        if not act.any():
+            return np.zeros(0)
+        if self._slowdown is None:
+            return np.sort(self._t_complete[act])
+        self._advance(t)
+        rates = self._rates(self.occupancies())
+        jr = self._job_rates(act, rates)
+        tc = self._t_last + np.maximum(self._remaining[act], 0.0) / jr
+        return np.sort(tc)
+
     def remaining(self, t: float) -> np.ndarray:
         """(C,) seconds of *unloaded* service each slot still needs at
         ``t`` (+inf for idle slots).  The processor-sharing rate never
@@ -367,6 +503,7 @@ class FleetEngineSim:
         self._t_complete[slot] = np.inf
         self._work[slot] = 0.0
         self._remaining[slot] = np.inf
+        self._weight[slot] = 1.0
 
 
 @dataclasses.dataclass

@@ -1,0 +1,491 @@
+"""Differential oracle for the event-driven runtime (ISSUE 5).
+
+A deliberately *simple*, per-request, pure-Python reference simulator of
+the open-arrival serving contract documented in `repro.core.events` —
+priority queue, weighted processor sharing, preemption/resume, deadline
+sheds, predictive gating — written independently of the vectorized
+SoA/batched-planner machinery it checks.  `random_scenario(seed)` draws a
+small serving scenario, `run_subject` replays it through the real
+`run_events` engine, `run_oracle` through this reference, and the
+differential suites (`test_oracle_differential.py` deterministic tier-1
+sweep, `test_oracle_property.py` hypothesis fuzz in CI) assert the two
+agree on per-request outcomes, completion times/order, stage counts,
+costs, SLO flags, and preemption counts.
+
+Scenarios are *chain* workflows (one admissible model per depth) so the
+planner's choice is forced up to feasibility, which keeps the oracle's
+"planner" a three-line deepest-feasible-depth rule.  Two regimes keep
+float comparisons exact:
+
+- ``unit`` engines (no load model): every timestamp stays on the 1/8
+  binary grid, so the float32 device-planner feasibility tests and the
+  float64 host bookkeeping agree bit-for-bit and deadlines/predictive
+  gating can be exercised;
+- ``ps`` (processor sharing): drain arithmetic produces off-grid floats,
+  so these scenarios carry no deadlines (nothing compares against the
+  float32 planner) and exercise weighted sharing + preemption; the oracle
+  replays the same IEEE drain operations at the same event timestamps.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.controller import Objective
+from repro.core.events import run_events
+from repro.core.trie import Trie, TrieAnnotations
+from repro.core.workflow import DecisionPoint, ModelSpec, WorkflowTemplate
+from repro.core.workload import SLOClass
+from repro.serving.loadsim import EngineLoadModel, FleetLoadModel
+
+MARGIN = 1e-4        # FeasibilityGate default queue-reject margin
+PLAN_SLACK = 1e-6    # device planner's latency-feasibility slack
+CERT_SLACK = 1e-9    # certainty-bound slack in events.py
+DONE_TOL = 1e-9      # FleetEngineSim remaining-work completion tolerance
+CLASS_WEIGHTS = (4.0, 1.0)  # interactive, batch (powers of two: exact)
+
+
+@dataclasses.dataclass
+class Scenario:
+    """One abstract serving scenario (all times in virtual seconds)."""
+
+    n_requests: int
+    depth: int
+    n_engines: int
+    engine_of_depth: np.ndarray   # (depth,) engine index per stage
+    capacity: int
+    arrivals: np.ndarray          # (n,) sorted, 1/8 grid
+    work: np.ndarray              # (n, depth) stage service time, 1/8 grid
+    succ: np.ndarray              # (n, depth) bool: stage succeeds
+    cost: np.ndarray              # (n, depth) stage cost, 1/8 grid
+    ann_step: np.ndarray          # (depth,) planner's per-stage latency
+    lat_cap: float | None         # objective latency cap (1/16 grid)
+    admission: str                # "always" | "feasibility" | "predictive"
+    concurrency: int | None      # None = unit-rate engines; else PS
+    classes: np.ndarray | None    # (n,) in {0: interactive, 1: batch}
+    class_caps: tuple             # per-class deadline (None = obj fallback)
+    preempt: bool = True
+
+
+def random_scenario(seed: int) -> Scenario:
+    """Draw a small random scenario on the binary grid (see module doc)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 7))
+    depth = int(rng.integers(1, 4))
+    n_engines = int(rng.integers(1, 3))
+    engine_of_depth = rng.integers(0, n_engines, size=depth)
+    capacity = int(rng.integers(1, 4))
+    arrivals = np.cumsum(rng.integers(0, 9, size=n)) / 8.0
+    work = rng.integers(1, 17, size=(n, depth)) / 8.0
+    succ = rng.random((n, depth)) < 0.45
+    cost = rng.integers(0, 5, size=(n, depth)) / 8.0
+    ann_step = rng.integers(2, 17, size=depth) / 8.0
+    use_classes = rng.random() < 0.7
+    classes = rng.integers(0, 2, size=n) if use_classes else None
+    preempt = bool(rng.random() < 0.7)
+    if rng.random() < 0.5:
+        # processor sharing: off-grid timestamps -> no deadlines anywhere
+        return Scenario(n, depth, n_engines, engine_of_depth, capacity,
+                        arrivals, work, succ, cost, ann_step,
+                        lat_cap=None, admission="always",
+                        concurrency=int(rng.integers(1, 3)),
+                        classes=classes, class_caps=(None, None),
+                        preempt=preempt)
+    admission = str(rng.choice(["always", "feasibility", "predictive"]))
+    lat_cap = float(rng.integers(8, 96)) / 16.0 if rng.random() < 0.8 \
+        else None
+    caps = [None, None]
+    if classes is not None:
+        if rng.random() < 0.8:
+            caps[0] = float(rng.integers(8, 64)) / 16.0  # interactive SLO
+        if rng.random() < 0.3:
+            caps[1] = float(rng.integers(32, 128)) / 16.0
+    return Scenario(n, depth, n_engines, engine_of_depth, capacity,
+                    arrivals, work, succ, cost, ann_step,
+                    lat_cap=lat_cap, admission=admission, concurrency=None,
+                    classes=classes, class_caps=tuple(caps), preempt=preempt)
+
+
+def _chain_setup(sc: Scenario):
+    """Chain workflow + trie + grid annotations for a scenario."""
+    models = tuple(
+        ModelSpec(f"m{e}", price=0.001, base_latency=1.0,
+                  per_token_latency=0.0, power=0.5, engine=f"e{e}")
+        for e in range(sc.n_engines)
+    )
+    decisions = tuple(
+        DecisionPoint(f"s{d}", d, (int(sc.engine_of_depth[d]),))
+        for d in range(sc.depth)
+    )
+    tpl = WorkflowTemplate(f"chain{sc.depth}", models, decisions,
+                           min_depth=1)
+    trie = Trie.build(tpl)
+    assert trie.n_nodes == sc.depth + 1  # a chain: node index == depth
+    cum = np.concatenate([[0.0], np.cumsum(sc.ann_step)])
+    ann = TrieAnnotations(
+        acc=trie.depth.astype(np.float64) * 0.125,  # deeper = better, exact
+        cost=np.zeros(trie.n_nodes),
+        lat=cum[trie.depth.astype(np.int64)],
+    )
+    return tpl, trie, ann, cum
+
+
+def class_specs_of(sc: Scenario):
+    if sc.classes is None:
+        return None
+    return (SLOClass("interactive", deadline_s=sc.class_caps[0],
+                     weight=CLASS_WEIGHTS[0]),
+            SLOClass("batch", deadline_s=sc.class_caps[1],
+                     weight=CLASS_WEIGHTS[1]))
+
+
+def run_subject(sc: Scenario):
+    """Replay the scenario through the real `run_events` engine; returns
+    (results, stats)."""
+    _, trie, ann, _ = _chain_setup(sc)
+
+    def executor(q, d, m, t):
+        return bool(sc.succ[q, d]), float(sc.cost[q, d]), float(sc.work[q, d])
+
+    obj = Objective("max_acc", lat_cap=sc.lat_cap)
+    kw = {}
+    if sc.concurrency is not None:
+        engines = {f"e{e}": EngineLoadModel(f"e{e}",
+                                            concurrency=sc.concurrency,
+                                            jitter=0.0)
+                   for e in range(sc.n_engines)}
+        kw = dict(policy="dynamic_load_aware",
+                  fleet_load=FleetLoadModel(
+                      engines=engines,
+                      mean_service_s={e: 1.0 for e in engines}))
+    return run_events(
+        trie, ann, obj, np.arange(sc.n_requests), executor,
+        arrivals=sc.arrivals, capacity=sc.capacity,
+        admission=sc.admission, classes=sc.classes,
+        class_specs=class_specs_of(sc), preempt=sc.preempt, **kw)
+
+
+# ----------------------------------------------------------------------
+# the reference simulator
+# ----------------------------------------------------------------------
+def run_oracle(sc: Scenario) -> list[dict]:
+    """Replay the scenario per-request in plain Python.  Returns one dict
+    per request: outcome, success, stages, cost, done_t, slo, preempts."""
+    n, D, C = sc.n_requests, sc.depth, sc.capacity
+    cum = np.concatenate([[0.0], np.cumsum(sc.ann_step)])
+    min_path = float(cum[1])
+    base_cap = sc.lat_cap if sc.lat_cap is not None else np.inf
+    if sc.classes is not None:
+        caps = np.array([sc.class_caps[k] if sc.class_caps[k] is not None
+                         else base_cap for k in range(2)])
+        cap_req = caps[sc.classes]
+        w_req = np.array(CLASS_WEIGHTS)[sc.classes]
+    else:
+        cap_req = np.full(n, base_cap)
+        w_req = np.ones(n)
+    shedding = sc.admission in ("feasibility", "predictive")
+    deadline_sheds = shedding and bool(np.isfinite(cap_req).any())
+    ps = sc.concurrency is not None
+    weighted = sc.classes is not None
+
+    order = np.argsort(sc.arrivals, kind="stable")
+    seq_of = np.empty(n, dtype=np.int64)
+    seq_of[order] = np.arange(n)
+    st = [dict(d=0, stages=0, cost=0.0, success=False, outcome="served",
+               done=None, slot=None, stage=None, paused=None, preempts=0)
+          for _ in range(n)]
+    free = list(range(C))
+    queue: list[int] = []          # kept sorted by (-weight, arrival seq)
+    qkey = (lambda i: (-w_req[i], seq_of[i]))
+    ptr = 0
+    seq = 0                        # global stage-start counter
+    t_last = 0.0                   # PS drain clock
+
+    def running():
+        return [i for i in range(n) if st[i]["stage"] is not None]
+
+    def job_rates(jobs):
+        """Per-job drain rates: plain PS, or (weighted) the same
+        work-conserving bounded fair share as `FleetEngineSim._job_rates`
+        — each engine's total rate split by weight, capped at unit rate,
+        capped jobs' excess redistributed (water-filling)."""
+        occ = np.zeros(sc.n_engines)
+        for i in jobs:
+            occ[st[i]["stage"]["engine"]] += 1
+        out = {}
+        for e in range(sc.n_engines):
+            mine = [i for i in jobs if st[i]["stage"]["engine"] == e]
+            if not mine:
+                continue
+            base = 1.0 / max(1.0, occ[e] / sc.concurrency)
+            if not weighted:
+                for i in mine:
+                    out[i] = base
+                continue
+            remaining = occ[e] * base
+            free = list(mine)
+            while free:
+                sumw = sum(w_req[i] for i in free)
+                share = {i: remaining * w_req[i] / sumw for i in free}
+                capped = [i for i in free if share[i] >= 1.0]
+                if not capped:
+                    for i in free:
+                        out[i] = share[i]
+                    break
+                for i in capped:
+                    out[i] = 1.0
+                    free.remove(i)
+                remaining -= float(len(capped))
+        return out
+
+    def advance(t):
+        nonlocal t_last
+        jobs = running()
+        dt = t - t_last
+        if ps and dt > 0.0 and jobs:
+            jr = job_rates(jobs)
+            for i in jobs:
+                st[i]["stage"]["rem"] -= dt * jr[i]
+        t_last = max(t_last, t)
+
+    def remaining(i, t):
+        s = st[i]["stage"]
+        return max(s["tc"] - t, 0.0) if not ps else max(s["rem"], 0.0)
+
+    def next_completion():
+        jobs = running()
+        if not jobs:
+            return np.inf
+        if not ps:
+            return min(st[i]["stage"]["tc"] for i in jobs)
+        jr = job_rates(jobs)
+        return t_last + min(max(st[i]["stage"]["rem"], 0.0) / jr[i]
+                            for i in jobs)
+
+    def finish(i, t, outcome=None):
+        if outcome is not None:
+            st[i]["outcome"] = outcome
+        st[i]["done"] = t
+        st[i]["stage"] = None
+        if st[i]["slot"] is not None:
+            free.append(st[i]["slot"])
+            st[i]["slot"] = None
+
+    def plan_target(i, t):
+        """Deepest feasible terminal depth from the realized prefix, or
+        None when no terminal fits the remaining budget (the chain-trie
+        image of the planner's max-acc deepest-feasible rule)."""
+        d, cap = st[i]["d"], cap_req[i]
+        lo = max(d, 1)
+        feas = [v for v in range(lo, D + 1)
+                if not np.isfinite(cap)
+                or cum[v] - cum[d] <= cap - (t - sc.arrivals[i]) + PLAN_SLACK]
+        return max(feas) if feas else None
+
+    while True:
+        t_arr = sc.arrivals[order[ptr]] if ptr < n else np.inf
+        t = min(t_arr, next_completion())
+        if deadline_sheds:
+            for i in running():
+                if np.isfinite(cap_req[i]):
+                    t = min(t, sc.arrivals[i] + cap_req[i])
+            for i in queue:
+                if st[i]["paused"] is not None and np.isfinite(cap_req[i]):
+                    t = min(t, sc.arrivals[i] + cap_req[i])
+        if not np.isfinite(t):
+            assert not queue and all(s["slot"] is None for s in st)
+            break
+        advance(t)
+        need: list[int] = []
+
+        # 1. completions, in (engine, start order)
+        done = [i for i in running()
+                if (st[i]["stage"]["tc"] <= t if not ps
+                    else st[i]["stage"]["rem"] <= DONE_TOL)]
+        for i in sorted(done, key=lambda i: (st[i]["stage"]["engine"],
+                                             st[i]["stage"]["seq"])):
+            ok = st[i]["stage"]["ok"]
+            st[i]["stage"] = None
+            st[i]["d"] += 1
+            st[i]["stages"] += 1
+            if ok:
+                st[i]["success"] = True
+                finish(i, t)
+            elif st[i]["d"] >= D:
+                finish(i, t)
+            else:
+                need.append(i)
+
+        # 1b. deadline sheds: certainty bound + scheduled deadline, for
+        #     in-service stages and just-completed (mid-replan) requests
+        if deadline_sheds:
+            for i in list(running()):
+                ddl = sc.arrivals[i] + cap_req[i]
+                if np.isfinite(ddl) and (
+                        t >= ddl or t + remaining(i, t) > ddl + CERT_SLACK):
+                    finish(i, t, outcome="shed")
+            for i in list(need):
+                ddl = sc.arrivals[i] + cap_req[i]
+                if np.isfinite(ddl) and t >= ddl:
+                    need.remove(i)
+                    finish(i, t, outcome="shed")
+
+        # 2. arrivals join the priority queue
+        while ptr < n and sc.arrivals[order[ptr]] <= t:
+            queue.append(int(order[ptr]))
+            ptr += 1
+        queue.sort(key=qkey)
+
+        # 2b. queue rejections / paused-deadline sheds, with the
+        #     predictive wait forecast handed to the k-th kept request
+        if queue:
+            proj = None
+            if sc.admission == "predictive":
+                jobs = running()
+                if not ps:
+                    proj = sorted(st[i]["stage"]["tc"] for i in jobs)
+                else:
+                    jr = job_rates(jobs)
+                    proj = sorted(t_last + max(st[i]["stage"]["rem"], 0.0)
+                                  / jr[i] for i in jobs)
+            kept, pos, n_free = [], 0, len(free)
+            for i in queue:
+                if st[i]["paused"] is not None:
+                    ddl = sc.arrivals[i] + cap_req[i]
+                    if deadline_sheds and np.isfinite(ddl) and (
+                            t >= ddl
+                            or t + st[i]["paused"]["rem"] > ddl + CERT_SLACK):
+                        st[i]["outcome"] = "shed"
+                        st[i]["done"] = t
+                        st[i]["paused"] = None
+                    else:
+                        kept.append(i)
+                        pos += 1
+                    continue
+                wf = 0.0
+                if proj:
+                    j = pos - n_free
+                    if j >= 0:
+                        g, rix = divmod(j, len(proj))
+                        wf = max(0.0, proj[rix] - t + g * (proj[-1] - t))
+                cap = cap_req[i]
+                elapsed = t - sc.arrivals[i]
+                if shedding and np.isfinite(cap) and \
+                        elapsed + wf > cap - min_path + MARGIN:
+                    st[i]["outcome"] = "rejected"
+                    st[i]["done"] = t
+                else:
+                    kept.append(i)
+                    pos += 1
+            queue = kept
+
+        # 3. preempt / admit+resume / plan+dispatch loop
+        def preemptable():
+            return (weighted and sc.preempt and queue
+                    and any(w_req[i] < w_req[queue[0]] for i in running()))
+
+        while True:
+            if weighted and sc.preempt:
+                while queue and not free:
+                    head_w = w_req[queue[0]]
+                    cand = [i for i in running() if w_req[i] < head_w]
+                    if not cand:
+                        break
+                    victim = min(cand, key=lambda i: (w_req[i],
+                                                      -remaining(i, t),
+                                                      st[i]["slot"]))
+                    if ps:
+                        advance(t)
+                    st[victim]["paused"] = dict(
+                        rem=remaining(victim, t),
+                        engine=st[victim]["stage"]["engine"],
+                        ok=st[victim]["stage"]["ok"])
+                    st[victim]["preempts"] += 1
+                    st[victim]["stage"] = None
+                    free.append(st[victim]["slot"])
+                    st[victim]["slot"] = None
+                    queue.append(victim)
+                    queue.sort(key=qkey)
+            while free and queue:
+                slot = min(free)
+                free.remove(slot)
+                i = queue.pop(0)
+                st[i]["slot"] = slot
+                if st[i]["paused"] is not None:  # resume the paused stage
+                    p = st[i]["paused"]
+                    st[i]["paused"] = None
+                    if ps:
+                        advance(t)
+                    st[i]["stage"] = dict(engine=p["engine"], ok=p["ok"],
+                                          seq=seq, tc=t + p["rem"],
+                                          rem=p["rem"])
+                    seq += 1
+                else:
+                    need.append(i)
+            if not need:
+                if preemptable():  # resume-only pass; preempt again
+                    continue
+                break
+            for i in sorted(need, key=lambda i: st[i]["slot"]):
+                v = plan_target(i, t)
+                if v is None:
+                    if shedding:
+                        st[i]["outcome"] = ("shed" if st[i]["stages"] > 0
+                                            else "rejected")
+                    finish(i, t)
+                elif v == st[i]["d"]:
+                    finish(i, t)  # "stop here": the prefix is the plan
+                else:
+                    d = st[i]["d"]
+                    if ps:
+                        advance(t)
+                    st[i]["stage"] = dict(engine=int(sc.engine_of_depth[d]),
+                                          ok=bool(sc.succ[i, d]), seq=seq,
+                                          tc=t + sc.work[i, d],
+                                          rem=float(sc.work[i, d]))
+                    seq += 1
+                    st[i]["cost"] += float(sc.cost[i, d])
+            need = []
+            if free and queue:
+                continue
+            if preemptable():
+                continue
+            break
+
+    out = []
+    for i in range(n):
+        lat = st[i]["done"] - sc.arrivals[i]
+        out.append(dict(
+            outcome=st[i]["outcome"],
+            success=st[i]["success"],
+            stages=st[i]["stages"],
+            cost=st[i]["cost"],
+            done_t=st[i]["done"],
+            slo=bool(np.isfinite(cap_req[i])) and lat > cap_req[i] + 1e-9,
+            preempts=st[i]["preempts"],
+        ))
+    return out
+
+
+def assert_scenario_matches(sc: Scenario) -> None:
+    """Run subject and oracle on ``sc`` and assert they agree."""
+    res, stats = run_subject(sc)
+    ref = run_oracle(sc)
+    comp_subject = sorted(range(sc.n_requests),
+                          key=lambda i: (round(stats.done_t[i], 6), i))
+    comp_oracle = sorted(range(sc.n_requests),
+                         key=lambda i: (round(ref[i]["done_t"], 6), i))
+    assert comp_subject == comp_oracle, "completion order diverged"
+    for i, (r, o) in enumerate(zip(res, ref)):
+        ctx = f"request {i} of scenario"
+        assert r.outcome == o["outcome"], (ctx, r.outcome, o["outcome"])
+        assert r.success == o["success"], ctx
+        assert r.n_stages == o["stages"], (ctx, r.n_stages, o["stages"])
+        assert abs(r.total_cost - o["cost"]) < 1e-12, ctx
+        assert abs(stats.done_t[i] - o["done_t"]) < 1e-9, \
+            (ctx, stats.done_t[i], o["done_t"])
+        assert r.slo_violated == o["slo"], ctx
+        assert stats.preempt_count[i] == o["preempts"], \
+            (ctx, stats.preempt_count[i], o["preempts"])
+    assert stats.preemptions == sum(o["preempts"] for o in ref)

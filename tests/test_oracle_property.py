@@ -1,0 +1,196 @@
+"""Hypothesis fuzz for the differential oracle + conservation properties
+(ISSUE 5 acceptance: >=200 generated scenarios in CI).
+
+Thin wrappers: scenario generation and the subject/oracle comparison live
+in `tests/oracle_sim.py` (also exercised by the deterministic tier-1
+sweep in `test_oracle_differential.py`); hypothesis only drives the seed
+space and the preemption toggle.  The conservation suite asserts the
+bookkeeping invariants preemption must not break:
+
+- every request ends in exactly ONE outcome, with consistent counters;
+- preempted work is never lost or double-counted in `FleetEngineSim`'s
+  remaining-work columns (drained + remaining + returned == injected);
+- a single weight-1 class degrades bit-identically to serving without
+  classes (the PR-4 behavior).
+
+This module needs hypothesis; the bare-interpreter tier-1 run skips it at
+collection (tests/conftest.py) and CI installs the pinned environment.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from oracle_sim import Scenario, assert_scenario_matches, random_scenario
+
+from repro.core.controller import Objective
+from repro.core.events import run_events
+from repro.core.runtime import make_workload_executor
+from repro.core.workload import SLOClass, poisson_arrivals, sample_classes
+from repro.serving.loadsim import FleetEngineSim
+
+# the two fuzz entry points together must clear >=200 generated scenarios
+_FUZZ_EXAMPLES = 110
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(max_examples=_FUZZ_EXAMPLES, deadline=None)
+def test_fuzz_scenarios_match_oracle(seed):
+    """Random scenario (classes, deadlines, PS, preemption all drawn):
+    the vectorized events engine must match the pure-Python oracle."""
+    assert_scenario_matches(random_scenario(seed))
+
+
+@given(seed=st.integers(0, 10**6), pre=st.booleans())
+@settings(max_examples=_FUZZ_EXAMPLES, deadline=None)
+def test_fuzz_scenarios_match_oracle_forced_preempt(seed, pre):
+    """Same fuzz with the preemption switch forced both ways."""
+    sc = random_scenario(seed)
+    assert_scenario_matches(Scenario(**{**sc.__dict__, "preempt": pre}))
+
+
+# ----------------------------------------------------------------------
+# conservation properties
+# ----------------------------------------------------------------------
+def _fleetlib_setup(seed):
+    from fleetlib import random_setup
+
+    return random_setup(seed)
+
+
+@given(seed=st.integers(0, 10**6), rate=st.floats(0.5, 16.0),
+       capacity=st.integers(1, 6), pre=st.booleans())
+@settings(max_examples=20, deadline=None)
+def test_every_request_has_exactly_one_outcome(seed, rate, capacity, pre):
+    """Under priority classes + preemption + a shedding gate, every
+    request ends in exactly one of served/rejected/shed, the counters
+    match the outcome labels, and nothing is lost or double-counted."""
+    rng, trie, wl, ann = _fleetlib_setup(seed)
+    execu = make_workload_executor(wl)
+    lat_q = float(np.quantile(ann.lat[trie.terminal],
+                              rng.uniform(0.3, 0.9)))
+    obj = Objective("max_acc", lat_cap=lat_q)
+    n = int(rng.integers(4, 14))
+    reqs = rng.choice(wl.n_requests, n, replace=False)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    specs = (SLOClass("hi", deadline_s=lat_q * 0.75, weight=4.0),
+             SLOClass("lo", deadline_s=None, weight=1.0))
+    cls = sample_classes(n, (0.4, 0.6), seed=seed % 1000)
+    res, stats = run_events(trie, ann, obj, reqs, execu,
+                            arrivals=arrivals, capacity=capacity,
+                            admission="feasibility", classes=cls,
+                            class_specs=specs, preempt=pre)
+    assert len(res) == n
+    outcomes = [r.outcome for r in res]
+    assert all(o in ("served", "rejected", "shed") for o in outcomes)
+    assert outcomes == stats.outcome
+    assert stats.rejected == outcomes.count("rejected")
+    assert stats.shed == outcomes.count("shed")
+    # admitted = took a slot at least once = everything not rejected
+    assert stats.admitted == n - stats.rejected
+    # every request got a completion timestamp at/after its arrival
+    assert np.all(stats.done_t >= stats.arrival_t - 1e-12)
+    # preempted stages that resumed are counted on both sides
+    assert stats.resumed <= stats.preemptions
+    assert stats.preempt_count.sum() == stats.preemptions
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(max_examples=40, deadline=None)
+def test_preempted_work_conserved_in_fleet_engine_sim(seed):
+    """Random start/advance/preempt/resume walks on `FleetEngineSim`:
+    at every point, work injected == work drained + remaining + paused,
+    and a resumed job completes after exactly its remaining work's worth
+    of (rate-adjusted) service — nothing lost, nothing re-run."""
+    rng = np.random.default_rng(seed)
+    E, C = int(rng.integers(1, 3)), 6
+    conc = int(rng.integers(1, 3))
+    sim = FleetEngineSim(
+        [f"e{j}" for j in range(E)], C,
+        slowdown=lambda e, n: max(1.0, (n + 1.0) / conc))
+    injected = np.zeros(C)
+    paused: dict[int, float] = {}
+    t = 0.0
+    for _ in range(30):
+        t += float(rng.integers(0, 5)) / 8.0
+        done = sim.pop_completed(t)
+        for slot, _ in done:
+            injected[slot] = 0.0
+        free = [s for s in range(C)
+                if sim.job_engine[s] < 0 and s not in paused]
+        act = [s for s in range(C) if sim.job_engine[s] >= 0]
+        move = rng.random()
+        if move < 0.5 and free:
+            slot = int(rng.choice(free))
+            w = float(rng.integers(1, 17)) / 8.0
+            wt = float(rng.choice([1.0, 2.0, 4.0]))
+            sim.start(slot, int(rng.integers(0, E)), w, t, weight=wt)
+            injected[slot] = w
+        elif move < 0.75 and act:
+            slot = int(rng.choice(act))
+            rem = sim.preempt(slot, t)
+            assert rem is not None and -1e-9 <= rem <= injected[slot] + 1e-9
+            paused[slot] = rem
+        elif paused:
+            slot, rem = paused.popitem()
+            sim.start(slot, int(rng.integers(0, E)), rem, t,
+                      weight=float(rng.choice([1.0, 4.0])))
+        # invariant: remaining work never exceeds what was injected, and
+        # the remaining-work column + paused stash never exceeds the
+        # outstanding injections (drain is monotone, preempt is lossless)
+        rem_col = sim.remaining(t)
+        for s in range(C):
+            if sim.job_engine[s] >= 0:
+                assert rem_col[s] <= injected[s] + 1e-9
+            if s in paused:
+                assert paused[s] <= injected[s] + 1e-9
+    # drain everything: every surviving job completes, nothing stuck
+    for _ in range(C + 1):
+        nc = sim.next_completion()
+        if not np.isfinite(nc):
+            break
+        sim.pop_completed(nc)
+    assert not np.isfinite(sim.next_completion())
+
+
+@given(seed=st.integers(0, 10**6), rate=st.floats(0.5, 16.0),
+       capacity=st.integers(1, 6))
+@settings(max_examples=20, deadline=None)
+def test_single_class_weighted_ps_bit_identical_to_pr4(seed, rate,
+                                                       capacity):
+    """One weight-1 class with no deadline override: results and
+    timestamps must be BIT-identical to running without classes (the
+    PR-4 path) — weighted PS with unit weights reduces to the exact same
+    drain arithmetic AND the same weighted-occupancy delay feedback.
+    (A uniform non-unit weight keeps the drain identical but legitimately
+    scales the delay model's weighted-occupancy input, so bit-identity is
+    a weight-1 guarantee.)"""
+    weight = 1.0
+    from fleetlib import assert_results_identical, random_objective
+
+    rng, trie, wl, ann = _fleetlib_setup(seed)
+    from repro.serving.loadsim import EngineLoadModel, FleetLoadModel
+
+    engines = sorted({m.engine for m in trie.template.models})
+    load = FleetLoadModel(
+        engines={e: EngineLoadModel(e, concurrency=2, jitter=0.0)
+                 for e in engines},
+        mean_service_s={e: 1.0 for e in engines})
+    execu = make_workload_executor(wl)
+    obj = random_objective(rng, trie, ann)
+    n = int(rng.integers(3, 12))
+    reqs = rng.choice(wl.n_requests, n, replace=False)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    kw = dict(arrivals=arrivals, capacity=capacity,
+              policy="dynamic_load_aware", fleet_load=load)
+    base, bstats = run_events(trie, ann, obj, reqs, execu, **kw)
+    one, ostats = run_events(trie, ann, obj, reqs, execu,
+                             class_specs=(SLOClass("only", None, weight),),
+                             **kw)
+    assert_results_identical(base, one)
+    for a, b in zip(base, one):
+        assert a.total_lat == b.total_lat  # bitwise, not approx
+        assert a.total_cost == b.total_cost
+    assert bstats.done_t.tolist() == ostats.done_t.tolist()
+    assert bstats.admit_t.tolist() == ostats.admit_t.tolist()
+    assert (bstats.events, bstats.replans) == (ostats.events, ostats.replans)
+    assert ostats.preemptions == 0 and ostats.resumed == 0

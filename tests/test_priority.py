@@ -1,0 +1,441 @@
+"""Priority-class preemptive serving: unit + scenario tests (tier-1).
+
+Covers the SLO-class layer end to end with hand-computed scenarios:
+weighted processor sharing math, preemption/resume work conservation at
+the `FleetEngineSim` level, priority-queue admission, per-class deadlines
+(including the planner elapsed-shift trick), the predictive admission
+gate, the no-retrace invariant with priorities enabled, and the
+`run_cohort`/`summarize_by_class` plumbing.  Plain numpy only — part of
+the bare-interpreter tier-1 set; the hypothesis fuzz and the differential
+oracle live in test_oracle_*.py.
+"""
+import numpy as np
+import pytest
+from fleetlib import random_setup
+
+from repro.core.admission import PredictiveGate, get_policy
+from repro.core.controller import Objective
+from repro.core.controller_jax import fleet_planner_cache_size
+from repro.core.events import run_events
+from repro.core.runtime import (
+    make_workload_executor,
+    run_cohort,
+    summarize_by_class,
+)
+from repro.core.trie import Trie, TrieAnnotations
+from repro.core.workflow import DecisionPoint, ModelSpec, WorkflowTemplate
+from repro.core.workload import (
+    SLOClass,
+    interactive_batch_classes,
+    sample_classes,
+)
+from repro.serving.loadsim import EngineLoadModel, FleetEngineSim, FleetLoadModel
+
+
+# ----------------------------------------------------------------------
+# SLO-class table
+# ----------------------------------------------------------------------
+def test_slo_class_validation():
+    with pytest.raises(ValueError, match="weight"):
+        SLOClass("x", weight=0.0)
+    with pytest.raises(ValueError, match="deadline"):
+        SLOClass("x", deadline_s=-1.0)
+    hi, lo = interactive_batch_classes(2.0, batch_deadline_s=10.0)
+    assert hi.name == "interactive" and hi.deadline_s == 2.0
+    assert hi.weight == 4.0 and lo.weight == 1.0
+    assert lo.deadline_s == 10.0
+
+
+# ----------------------------------------------------------------------
+# weighted processor sharing + preemption in FleetEngineSim
+# ----------------------------------------------------------------------
+def test_weighted_ps_rates_hand_computed():
+    """Two jobs, weights 3:1, concurrency-1 engine (rate 1/k with k jobs):
+    shares are 2*3/4 and 2*1/4 of the 1/2 base rate -> 0.75 and 0.25."""
+    sim = FleetEngineSim(["e0"], 4, slowdown=lambda e, n: float(n + 1))
+    sim.start(0, 0, 1.0, 0.0, weight=3.0)
+    sim.start(1, 0, 1.0, 0.0, weight=1.0)
+    assert sim.weighted_occupancies().tolist() == [4.0]
+    assert sim.next_completion() == pytest.approx(4.0 / 3.0)  # job 0
+    done = sim.pop_completed(4.0 / 3.0)
+    assert [s for s, _ in done] == [0]
+    # job 1 drained 0.25 * 4/3 = 1/3; alone it runs at rate 1
+    assert sim.remaining(4.0 / 3.0)[1] == pytest.approx(2.0 / 3.0)
+    assert sim.next_completion() == pytest.approx(2.0)
+
+
+def test_weighted_ps_share_capped_at_unit_rate_and_work_conserving():
+    """A heavy job among light ones cannot drain faster than an unloaded
+    engine (rate capped at 1, preserving the t+remaining bound), and the
+    capped job's excess share is REDISTRIBUTED: on an engine with spare
+    capacity the light job also runs at full rate instead of being
+    throttled below what the engine could serve."""
+    sim = FleetEngineSim(["e0"], 4, slowdown=lambda e, n: max(1.0, (n + 1) / 2.0))
+    sim.start(0, 0, 1.0, 0.0, weight=10.0)
+    sim.start(1, 0, 1.0, 0.0, weight=1.0)
+    # uncapped job 0 share would be 2*10/11 = 1.82 of base 1.0 -> capped
+    # at 1.0; the 0.82 excess flows to job 1, which is then capped at 1.0
+    # too — the concurrency-2 engine serves both at unit rate
+    assert sim.next_completion() == pytest.approx(1.0)
+    done = sim.pop_completed(1.0)
+    assert sorted(s for s, _ in done) == [0, 1]
+    # under contention (concurrency 1) the weighted split is binding:
+    # total rate 0.5, split 10:1 -> 0.455/0.045, neither capped
+    sim2 = FleetEngineSim(["e0"], 4, slowdown=lambda e, n: float(n + 1))
+    sim2.start(0, 0, 1.0, 0.0, weight=10.0)
+    sim2.start(1, 0, 1.0, 0.0, weight=1.0)
+    assert sim2.next_completion() == pytest.approx(1.0 / (10.0 / 11.0))
+
+
+def test_preempt_unit_rate_conserves_work():
+    sim = FleetEngineSim(["e0"], 2)
+    sim.start(0, 0, 2.0, t=0.0)
+    rem = sim.preempt(0, 0.5)
+    assert rem == pytest.approx(1.5)
+    assert sim.preempt(0, 0.5) is None  # already idle
+    sim.start(0, 0, rem, t=3.0)  # resume later
+    assert sim.next_completion() == pytest.approx(4.5)
+    assert sim.pop_completed(4.5) == [(0, rem)]
+
+
+def test_preempt_processor_sharing_releases_share():
+    sim = FleetEngineSim(["e0"], 2, slowdown=lambda e, n: float(n + 1))
+    sim.start(0, 0, 1.0, 0.0)
+    sim.start(1, 0, 1.0, 0.0)
+    rem = sim.preempt(0, 1.0)            # each drained 0.5 by t=1
+    assert rem == pytest.approx(0.5)
+    assert sim.next_completion() == pytest.approx(1.5)  # survivor speeds up
+    done = sim.pop_completed(1.5)
+    assert [s for s, _ in done] == [1]
+
+
+def test_projected_completions_forecast():
+    sim = FleetEngineSim(["e0", "e1"], 4)
+    assert sim.projected_completions(0.0).size == 0
+    sim.start(0, 0, 2.0, 0.0)
+    sim.start(1, 1, 0.5, 0.0)
+    assert sim.projected_completions(0.0).tolist() == [0.5, 2.0]
+
+
+# ----------------------------------------------------------------------
+# events-level priority scheduling
+# ----------------------------------------------------------------------
+def _unit_chain(L=1.0):
+    spec = ModelSpec("m0", price=0.001, base_latency=L,
+                     per_token_latency=0.0, power=0.9, engine="e0")
+    tpl = WorkflowTemplate("unit", (spec,),
+                           (DecisionPoint("gen", 0, (0,)),), min_depth=1)
+    trie = Trie.build(tpl)
+    ann = TrieAnnotations(acc=np.array([0.0, 0.9]),
+                          cost=np.array([0.0, 0.001]),
+                          lat=np.array([0.0, L]))
+    return trie, ann
+
+
+def test_preemption_rescues_interactive_deadline():
+    """Two slots full of 4s batch work; a 1s interactive request with a
+    2s deadline arrives at t=0.5.  With preemption it runs immediately
+    (done 1.5, SLO met); without, it waits for a slot until t=4 (SLO
+    blown).  Batch work is conserved either way."""
+    trie, ann = _unit_chain()
+    specs = interactive_batch_classes(2.0)
+    work = {0: 4.0, 1: 4.0, 2: 1.0}
+
+    def execu(q, d, m, t):
+        return True, 0.001, work[q]
+
+    cls = np.array([1, 1, 0])
+    arr = np.array([0.0, 0.0, 0.5])
+    kw = dict(arrivals=arr, capacity=2, classes=cls, class_specs=specs)
+    res, stats = run_events(trie, ann, Objective("max_acc"),
+                            np.arange(3), execu, preempt=True, **kw)
+    assert stats.preemptions == 1 and stats.resumed == 1
+    assert stats.preempt_count.tolist() == [1, 0, 0]  # slot-0 victim
+    assert stats.done_t[2] == pytest.approx(1.5)
+    assert not res[2].slo_violated
+    # the preempted batch request resumes at 1.5 with 3.5s left
+    assert stats.done_t[0] == pytest.approx(5.0)
+    assert all(r.success for r in res)
+    # without preemption: the priority queue alone can't free a slot,
+    # the interactive deadline expires while queued, and the planner
+    # (seeing the per-class budget via the elapsed shift) cuts it at
+    # admission — the request is lost entirely
+    res2, st2 = run_events(trie, ann, Objective("max_acc"),
+                           np.arange(3), execu, preempt=False, **kw)
+    assert st2.preemptions == 0
+    assert st2.done_t.tolist() == pytest.approx([4.0, 4.0, 4.0])
+    assert res2[2].models == [] and not res2[2].success
+    assert res2[2].slo_violated
+
+
+def test_priority_queue_orders_admissions_by_class():
+    """One slot, three queued requests: the interactive one admitted
+    last-in jumps ahead of earlier batch arrivals (FIFO within class)."""
+    trie, ann = _unit_chain()
+    specs = interactive_batch_classes(None if False else 100.0)
+
+    def execu(q, d, m, t):
+        return True, 0.001, 1.0
+
+    # r0 occupies the slot; r1 (batch), r2 (batch), r3 (interactive)
+    # queue behind it — r3 must be served before r1/r2
+    cls = np.array([1, 1, 1, 0])
+    arr = np.array([0.0, 0.1, 0.2, 0.3])
+    res, stats = run_events(trie, ann, Objective("max_acc"), np.arange(4),
+                            execu, arrivals=arr, capacity=1, classes=cls,
+                            class_specs=specs, preempt=False)
+    assert stats.done_t.tolist() == pytest.approx([1.0, 3.0, 4.0, 2.0])
+
+
+def test_per_class_deadline_sheds_only_tight_class():
+    """Feasibility gate + per-class deadlines: the tight interactive
+    deadline sheds its request, the deadline-free batch one survives
+    unscathed (obj has no lat_cap at all)."""
+    trie, ann = _unit_chain(L=2.0)
+    specs = (SLOClass("hi", deadline_s=1.0, weight=4.0),
+             SLOClass("lo", deadline_s=None, weight=1.0))
+
+    def execu(q, d, m, t):
+        return True, 0.001, 2.0
+
+    res, stats = run_events(trie, ann, Objective("max_acc"), np.arange(2),
+                            execu, arrivals=np.zeros(2), capacity=2,
+                            classes=np.array([0, 1]), class_specs=specs,
+                            admission="feasibility")
+    # interactive: 2s of work can never meet a 1s deadline -> rejected at
+    # the gate (planner sees elapsed shifted against its own cap)
+    assert res[0].outcome == "rejected" and res[0].models == []
+    assert res[1].outcome == "served" and res[1].success
+    assert not res[1].slo_violated
+
+
+def test_paused_request_shed_at_its_deadline():
+    """A preempted batch request whose own deadline passes while it waits
+    in the queue is shed AT the deadline (scheduled event), not when a
+    slot happens to free."""
+    trie, ann = _unit_chain()
+    specs = (SLOClass("hi", deadline_s=None, weight=4.0),
+             SLOClass("lo", deadline_s=3.0, weight=1.0))
+    work = {0: 2.0, 1: 8.0}
+
+    def execu(q, d, m, t):
+        return True, 0.001, work[q]
+
+    # batch r0 (deadline 3.0) starts at t=0; interactive r1 (8s of work)
+    # preempts it at t=1.  r0 has 1s of remaining work and a t=3 deadline;
+    # while paused, certainty (t + 1 > 3) first holds at t=2 — but no
+    # event fires then, so the scheduled deadline event at t=3 sheds it.
+    res, stats = run_events(trie, ann, Objective("max_acc"), np.arange(2),
+                            execu, arrivals=np.array([0.0, 1.0]),
+                            capacity=1, classes=np.array([1, 0]),
+                            class_specs=specs, admission="feasibility",
+                            preempt=True)
+    assert stats.preemptions == 1 and stats.resumed == 0
+    assert res[0].outcome == "shed"
+    assert stats.done_t[0] == pytest.approx(3.0)
+    assert res[1].outcome == "served" and stats.done_t[1] == pytest.approx(9.0)
+    # the shed keeps the cost of the executed (preempted) stage
+    assert res[0].total_cost == pytest.approx(0.001)
+
+
+def test_resume_does_not_reinvoke_executor():
+    """Preemption checkpoints the in-flight stage: the executor runs once
+    per (request, stage) no matter how often the stage is paused."""
+    trie, ann = _unit_chain()
+    specs = interactive_batch_classes(100.0)
+    calls = []
+
+    def execu(q, d, m, t):
+        calls.append((q, d))
+        return True, 0.001, 4.0 if q == 0 else 1.0
+
+    res, stats = run_events(trie, ann, Objective("max_acc"), np.arange(2),
+                            execu, arrivals=np.array([0.0, 0.5]),
+                            capacity=1, classes=np.array([1, 0]),
+                            class_specs=specs, preempt=True)
+    assert stats.preemptions == 1 and stats.resumed == 1
+    assert calls == [(0, 0), (1, 0)]  # one invocation each
+    assert res[0].total_cost == pytest.approx(0.001)  # charged once
+    assert res[0].n_stages == 1
+
+
+def test_weighted_ps_speeds_interactive_under_contention():
+    """Same arrival pattern, same engine: the weight-4 class finishes
+    sooner than it would under plain (unweighted) sharing."""
+    trie, ann = _unit_chain()
+    load = FleetLoadModel(
+        engines={"e0": EngineLoadModel("e0", concurrency=1, jitter=0.0)},
+        mean_service_s={"e0": 1.0})
+
+    def execu(q, d, m, t):
+        return True, 0.001, 1.0
+
+    kw = dict(arrivals=np.zeros(3), capacity=3,
+              policy="dynamic_load_aware", fleet_load=load)
+    base, _ = run_events(trie, ann, Objective("max_acc"), np.arange(3),
+                         execu, **kw)
+    specs = interactive_batch_classes(100.0)
+    wres, wstats = run_events(trie, ann, Objective("max_acc"), np.arange(3),
+                              execu, classes=np.array([0, 1, 1]),
+                              class_specs=specs, preempt=False, **kw)
+    # unweighted: all three share rate 1/3 -> first completion at 3.0
+    # weighted 4:1:1 -> interactive share = 3*4/6 = 2 of base 1/3 = 2/3
+    assert base[0].total_lat == pytest.approx(3.0)
+    assert wres[0].total_lat == pytest.approx(1.5)
+    assert wres[0].total_lat < base[0].total_lat
+    assert wstats.preemptions == 0
+
+
+def test_priority_runs_add_no_compiled_programs():
+    """Priorities ride the existing planner lanes: a full sweep across
+    classes / preemption / policies must not grow the jitted program set
+    beyond the plain warm run."""
+    _, trie, wl, ann = random_setup(53)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc",
+                    lat_cap=float(np.quantile(ann.lat[trie.terminal], 0.7)))
+    reqs = np.arange(12)
+    arr = np.linspace(0.0, 2.0, 12)
+    run_events(trie, ann, obj, reqs, execu, arrivals=arr, capacity=4)  # warm
+    c0 = fleet_planner_cache_size()
+    if c0 < 0:
+        pytest.skip("JAX runtime does not expose the jit cache counter")
+    specs = interactive_batch_classes(obj.lat_cap * 0.6)
+    cls = sample_classes(12, (0.5, 0.5), seed=1)
+    for adm in (None, "feasibility", "predictive"):
+        for pre in (False, True):
+            run_events(trie, ann, obj, reqs, execu, arrivals=arr,
+                       capacity=4, admission=adm, classes=cls,
+                       class_specs=specs, preempt=pre)
+    assert fleet_planner_cache_size() == c0
+
+
+# ----------------------------------------------------------------------
+# predictive admission gate
+# ----------------------------------------------------------------------
+def test_predictive_gate_unit_behavior():
+    assert get_policy("predictive").name == "predictive"
+    assert PredictiveGate.wants_forecast
+    with pytest.raises(ValueError, match="discount"):
+        PredictiveGate(discount=-1.0)
+    _, trie, wl, ann = random_setup(2)
+    pol = PredictiveGate()
+    pol.bind(trie, ann, Objective("max_acc", lat_cap=5.0), trie.terminal)
+    mp = pol._min_path_lat
+    # no forecast: identical bound to the feasibility gate
+    assert not pol.queue_reject(5.0 - mp)
+    assert pol.queue_reject(5.0 - mp + 1.0)
+    # the forecast wait is charged against the budget up front
+    assert pol.queue_reject(5.0 - mp - 1.0, wait_forecast=2.0)
+    assert not pol.queue_reject(5.0 - mp - 1.0, wait_forecast=0.5)
+    # per-request (class) caps override the objective's
+    assert pol.queue_reject(0.5, lat_cap=0.25)
+    assert not pol.queue_reject(0.5, lat_cap=np.inf)
+    # discount de-rates the forecast
+    soft = PredictiveGate(discount=0.0)
+    soft.bind(trie, ann, Objective("max_acc", lat_cap=5.0), trie.terminal)
+    assert not soft.queue_reject(5.0 - mp - 1.0, wait_forecast=100.0)
+
+
+def test_predictive_rejects_queued_work_feasibility_admits():
+    """Deterministic backlog: 2.75s of healthy in-service work on one
+    slot, then a request with a 3s budget needing 1s of service queues at
+    t=0.5.  Its forecast start is t=2.75 -> expected completion 3.75,
+    past its deadline: predictive rejects it AT ARRIVAL (wait forecast
+    2.25 > remaining slack 2.0), while the realized-burn feasibility gate
+    keeps it queued until its budget provably dies at the t=2.75
+    completion event."""
+    trie, ann = _unit_chain()
+    work = {0: 2.75, 1: 1.0}
+
+    def execu(q, d, m, t):
+        return True, 0.001, work[q]
+
+    obj = Objective("max_acc", lat_cap=3.0)
+    kw = dict(arrivals=np.array([0.0, 0.5]), capacity=1)
+    feas, fstats = run_events(trie, ann, obj, np.arange(2), execu,
+                              admission="feasibility", **kw)
+    pred, pstats = run_events(trie, ann, obj, np.arange(2), execu,
+                              admission="predictive", **kw)
+    # the blocker itself is healthy either way (completes at 2.75 < 3.0)
+    assert feas[0].outcome == "served" and pred[0].outcome == "served"
+    assert feas[1].outcome == "rejected" and pred[1].outcome == "rejected"
+    assert pstats.done_t[1] == pytest.approx(0.5)   # at arrival
+    assert fstats.done_t[1] == pytest.approx(2.75)  # once provably dead
+
+
+# ----------------------------------------------------------------------
+# plumbing: run_cohort routing, summarize_by_class, validation
+# ----------------------------------------------------------------------
+def test_run_cohort_routes_class_specs_to_events():
+    _, trie, wl, ann = random_setup(41)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc")
+    reqs = np.arange(10)
+    specs = (SLOClass("only", None, 1.0),)
+    auto = run_cohort(trie, ann, obj, reqs, execu, class_specs=specs)
+    evt = run_cohort(trie, ann, obj, reqs, execu, engine="events",
+                     class_specs=specs)
+    assert [r.models for r in auto] == [r.models for r in evt]
+    with pytest.raises(ValueError, match="events engine"):
+        run_cohort(trie, ann, obj, reqs, execu, engine="fleet",
+                   class_specs=specs)
+    with pytest.raises(ValueError, match="events engine"):
+        run_cohort(trie, ann, obj, reqs, execu, engine="scalar",
+                   preempt=False)
+
+
+def test_summarize_by_class_partitions():
+    trie, ann = _unit_chain()
+    specs = interactive_batch_classes(100.0)
+
+    def execu(q, d, m, t):
+        return True, 0.001, 1.0
+
+    cls = np.array([0, 1, 1, 0])
+    res, stats = run_events(trie, ann, Objective("max_acc"), np.arange(4),
+                            execu, classes=cls, class_specs=specs,
+                            capacity=4)
+    assert stats.class_of.tolist() == cls.tolist()
+    by = summarize_by_class(res, stats.class_of, specs)
+    assert by["interactive"]["n"] == 2 and by["batch"]["n"] == 2
+    assert by["interactive"]["accuracy"] == 1.0
+    with pytest.raises(ValueError, match="classes shape"):
+        summarize_by_class(res, cls[:2], specs)
+
+
+def test_extreme_deadline_spread_warns_about_f32_resolution():
+    """A batch deadline ~5 orders of magnitude above the interactive one
+    pushes the elapsed-shift trick past float32 resolution — the runtime
+    must say so instead of silently quantizing tight budgets."""
+    trie, ann = _unit_chain()
+
+    def execu(q, d, m, t):
+        return True, 0.001, 1.0
+
+    specs = (SLOClass("hi", deadline_s=2.0, weight=4.0),
+             SLOClass("lo", deadline_s=500_000.0, weight=1.0))
+    with pytest.warns(UserWarning, match="float32 elapsed-shift"):
+        run_events(trie, ann, Objective("max_acc"), np.arange(2), execu,
+                   classes=np.array([0, 1]), class_specs=specs, capacity=2)
+
+
+def test_priority_argument_validation():
+    trie, ann = _unit_chain()
+
+    def execu(q, d, m, t):
+        return True, 0.001, 1.0
+
+    obj = Objective("max_acc")
+    with pytest.raises(ValueError, match="classes requires class_specs"):
+        run_events(trie, ann, obj, np.arange(2), execu,
+                   classes=np.zeros(2, dtype=int))
+    with pytest.raises(ValueError, match="non-empty"):
+        run_events(trie, ann, obj, np.arange(2), execu, class_specs=())
+    specs = interactive_batch_classes(1.0)
+    with pytest.raises(ValueError, match="classes shape"):
+        run_events(trie, ann, obj, np.arange(2), execu, class_specs=specs,
+                   classes=np.zeros(3, dtype=int))
+    with pytest.raises(ValueError, match="must index"):
+        run_events(trie, ann, obj, np.arange(2), execu, class_specs=specs,
+                   classes=np.array([0, 5]))

@@ -1,0 +1,152 @@
+"""Workload-generator + arrival/class-sampler edge cases (tier-1).
+
+The samplers back every open-arrival benchmark and the priority-class
+serving layer; their edge cases (short traces, zero-amplitude sinusoid,
+clamp-and-warn, degenerate mixes) must fail loudly or degrade exactly as
+documented.  Plain numpy only.
+"""
+import numpy as np
+import pytest
+
+from repro.core import presets
+from repro.core.trie import Trie
+from repro.core.workload import (
+    SLOClass,
+    generate_workload,
+    interactive_batch_classes,
+    poisson_arrivals,
+    sample_classes,
+    sinusoidal_arrivals,
+    trace_arrivals,
+)
+
+
+# ----------------------------------------------------------------------
+# arrival samplers
+# ----------------------------------------------------------------------
+def test_poisson_arrivals_edge_cases():
+    assert poisson_arrivals(0, rate=2.0).shape == (0,)
+    a = poisson_arrivals(1, rate=2.0, seed=3)
+    assert a.shape == (1,) and a[0] > 0
+    with pytest.raises(ValueError, match="rate"):
+        poisson_arrivals(5, rate=-1.0)
+    with pytest.raises(ValueError, match="n must be"):
+        poisson_arrivals(-3, rate=1.0)
+
+
+def test_sinusoidal_zero_amplitude_is_homogeneous_poisson():
+    """amplitude=0: the thinning accepts every candidate, so the sampler
+    degenerates to a homogeneous Poisson process at exactly mean_rate —
+    same distribution family, still strictly increasing, deterministic."""
+    a = sinusoidal_arrivals(600, 5.0, amplitude=0.0, period_s=30.0, seed=9)
+    b = sinusoidal_arrivals(600, 5.0, amplitude=0.0, period_s=30.0, seed=9)
+    assert np.array_equal(a, b)
+    assert np.all(np.diff(a) > 0)
+    assert 600 / a[-1] == pytest.approx(5.0, rel=0.2)
+    # windowed rates show no diurnal swing beyond sampling noise: compare
+    # against an amplitude=0.8 run of the same size/seed
+    bursty = sinusoidal_arrivals(600, 5.0, amplitude=0.8, period_s=30.0,
+                                 seed=9)
+    flat_bins = np.histogram(a, bins=np.arange(0, a[-1], 15.0))[0]
+    burst_bins = np.histogram(bursty, bins=np.arange(0, bursty[-1], 15.0))[0]
+    assert burst_bins.std() > flat_bins.std()
+
+
+def test_sinusoidal_single_and_zero_requests():
+    assert sinusoidal_arrivals(0, 2.0).shape == (0,)
+    one = sinusoidal_arrivals(1, 2.0, seed=0)
+    assert one.shape == (1,) and one[0] > 0
+
+
+def test_trace_arrivals_short_trace_clamps_and_warns():
+    with pytest.warns(UserWarning, match="clamping the cohort"):
+        t = trace_arrivals([0.5, 0.0], n=7)
+    assert t.tolist() == [0.0, 0.5]
+    # n == len(trace): exact, no warning
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        t = trace_arrivals([0.5, 0.0], n=2)
+    assert t.tolist() == [0.0, 0.5]
+    # empty trace with n=0 is a valid empty cohort
+    assert trace_arrivals([], n=0).shape == (0,)
+    # but asking for arrivals from an empty trace clamps to nothing
+    with pytest.warns(UserWarning):
+        assert trace_arrivals([], n=3).shape == (0,)
+
+
+def test_trace_arrivals_rate_scale_and_validation():
+    t = trace_arrivals([0.0, 1.0, 3.0], rate_scale=4.0)
+    assert t.tolist() == [0.0, 0.25, 0.75]
+    with pytest.raises(ValueError, match="1-d"):
+        trace_arrivals(np.zeros((2, 2)))
+    with pytest.raises(ValueError, match="finite and non-negative"):
+        trace_arrivals([0.0, np.nan])
+    with pytest.raises(ValueError, match="rate_scale"):
+        trace_arrivals([0.0], rate_scale=-1.0)
+
+
+# ----------------------------------------------------------------------
+# SLO-class sampling
+# ----------------------------------------------------------------------
+def test_sample_classes_deterministic_and_distributed():
+    a = sample_classes(4000, (0.25, 0.75), seed=5)
+    b = sample_classes(4000, (0.25, 0.75), seed=5)
+    assert np.array_equal(a, b)
+    assert set(np.unique(a)) == {0, 1}
+    assert np.mean(a == 0) == pytest.approx(0.25, abs=0.03)
+    # unnormalized mixes are normalized
+    c = sample_classes(4000, (1.0, 3.0), seed=5)
+    assert np.array_equal(a, c)
+    assert sample_classes(0, (0.5, 0.5)).shape == (0,)
+
+
+def test_sample_classes_validation():
+    with pytest.raises(ValueError, match="n must be"):
+        sample_classes(-1, (0.5, 0.5))
+    with pytest.raises(ValueError, match="non-empty"):
+        sample_classes(5, ())
+    with pytest.raises(ValueError, match="non-negative"):
+        sample_classes(5, (0.5, -0.5))
+    with pytest.raises(ValueError, match="positive sum"):
+        sample_classes(5, (0.0, 0.0))
+
+
+def test_generate_workload_class_mix():
+    tpl = presets.nl2sql_2()
+    plain = generate_workload(tpl, 50, seed=4)
+    mixed = generate_workload(tpl, 50, seed=4, class_mix=(0.3, 0.7))
+    assert plain.classes is None
+    assert mixed.classes is not None and mixed.classes.shape == (50,)
+    assert set(np.unique(mixed.classes)) <= {0, 1}
+    # the class draw happens after every other table: S/cost/lat are
+    # bit-identical with and without a mix
+    assert np.array_equal(plain.S, mixed.S)
+    assert np.array_equal(plain.cost, mixed.cost)
+    assert np.array_equal(plain.lat, mixed.lat)
+    with pytest.raises(ValueError, match="class_mix"):
+        generate_workload(tpl, 10, seed=0, class_mix=(0.0, 0.0))
+
+
+# ----------------------------------------------------------------------
+# generator invariants the serving layer relies on
+# ----------------------------------------------------------------------
+def test_workload_success_is_prefix_closed():
+    """A(q, p) = 1 iff any stage on p succeeds — success can only be
+    gained along a path, never lost (the paper's path semantics)."""
+    tpl = presets.nl2sql_2()
+    wl = generate_workload(tpl, 60, seed=1)
+    trie = Trie.build(tpl)
+    A, C, reached = wl.node_tables(trie)
+    for u in range(1, trie.n_nodes):
+        p = int(trie.parent[u])
+        assert np.all(A[:, u] >= A[:, p])          # prefix-closed
+        assert np.all(C[:, u] >= C[:, p] - 1e-12)  # cost accumulates
+
+
+def test_interactive_batch_classes_defaults():
+    hi, lo = interactive_batch_classes(1.5)
+    assert (hi.deadline_s, lo.deadline_s) == (1.5, None)
+    assert hi.weight > lo.weight == 1.0
+    assert isinstance(hi, SLOClass)
