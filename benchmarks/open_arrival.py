@@ -15,6 +15,12 @@ asserts zero growth afterwards via
 `controller_jax.fleet_planner_cache_size` and fails loudly on re-tracing
 (that is the regression it exists to catch).
 
+Every rate also replays through the jitted epoch-batched engine
+(`run_events(compiled=True)`, see docs/EVENT_ENGINE.md) with an
+outcome-level consistency check, recording per-rate host-vs-compiled
+event throughput; `benchmarks/trace_replay.py` carries the hard >=10x
+floor at trace scale.
+
     PYTHONPATH=src python -m benchmarks.open_arrival [--tiny]
 """
 from __future__ import annotations
@@ -66,19 +72,41 @@ def run(wf: str = "nl2sql_8", rates=FULL_RATES, n_requests: int = 192,
                                            replace=True)
     cache0 = None
     rows = []
+    # warm the compiled engine once (same cohort shape for every rate ->
+    # one XLA program) so per-rate compiled timings are steady-state
+    run_events(trie, ann, obj, reqs, execu,
+               arrivals=poisson_arrivals(n_requests, rates[0], seed=1),
+               capacity=capacity, policy="dynamic_load_aware",
+               fleet_load=load, compiled=True)
     t_total = time.perf_counter()
     for rate in rates:
         arr = poisson_arrivals(n_requests, rate, seed=1)
+        t0 = time.perf_counter()
         res, stats = run_events(
             trie, ann, obj, reqs, execu,
             arrivals=arr, capacity=capacity,
             policy="dynamic_load_aware", fleet_load=load,
         )
+        host_wall = time.perf_counter() - t0
         if cache0 is None:
             # the first rate compiles the device-resident program set once
             # (fixed-width slot scatter + capacity-shaped replan); nothing
             # later in the sweep may add to it
             cache0 = fleet_planner_cache_size()
+        # compiled lane: same rate through the epoch-batched engine, with
+        # an outcome-level consistency check against the host loop
+        t0 = time.perf_counter()
+        cres, cstats = run_events(
+            trie, ann, obj, reqs, execu,
+            arrivals=arr, capacity=capacity,
+            policy="dynamic_load_aware", fleet_load=load, compiled=True,
+        )
+        comp_wall = time.perf_counter() - t0
+        if any(a.outcome != b.outcome or a.models != b.models
+               for a, b in zip(res, cres)):
+            raise RuntimeError(
+                f"compiled engine disagrees with the host loop at "
+                f"rate={rate}/s — run the differential oracle suite")
         s = summarize(res)
         rows.append({
             "workflow": wf,
@@ -94,6 +122,10 @@ def run(wf: str = "nl2sql_8", rates=FULL_RATES, n_requests: int = 192,
             "replans": stats.replans,
             "replan_us_per_planned_request": round(
                 stats.replan_s_per_planned_request * 1e6, 1),
+            "host_events_per_s": round(stats.events / host_wall, 1),
+            "compiled_events_per_s": round(cstats.events / comp_wall, 1),
+            "compiled_speedup": round(
+                (cstats.events / comp_wall) / (stats.events / host_wall), 2),
         })
     cache1 = fleet_planner_cache_size()
     retraces = (cache1 - cache0) if cache0 >= 0 and cache1 >= 0 else -1
@@ -109,7 +141,8 @@ def run(wf: str = "nl2sql_8", rates=FULL_RATES, n_requests: int = 192,
         "us_per_call": elapsed * 1e6 / max(len(rows), 1),
         "derived": (f"planner_compiles={retraces} "
                     f"goodput@{rates[0]}rps={rows[0]['goodput']:.2f} "
-                    f"goodput@{rates[-1]}rps={rows[-1]['goodput']:.2f}"),
+                    f"goodput@{rates[-1]}rps={rows[-1]['goodput']:.2f} "
+                    f"compiled_speedup={max(r['compiled_speedup'] for r in rows):.1f}x"),
         "rows": rows,
     }
 
@@ -132,7 +165,8 @@ def main():
               f"wait={r['mean_queue_wait_s']:7.2f}s "
               f"peak_occ={r['peak_occupancy']:3d} "
               f"events={r['events']:4d} replans={r['replans']:4d} "
-              f"({r['replan_us_per_planned_request']:.0f}us/req)")
+              f"({r['replan_us_per_planned_request']:.0f}us/req) "
+              f"compiled={r['compiled_speedup']:.1f}x")
 
 
 if __name__ == "__main__":

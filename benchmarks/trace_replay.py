@@ -1,0 +1,177 @@
+"""Trace replay at 1M requests: compiled event engine vs the host loop.
+
+Replays a recorded-arrival trace (bootstrap-extended to the target cohort
+size by `repro.core.workload.trace_arrivals`) through BOTH open-arrival
+lanes at the MathQA preset:
+
+- the PR 5 host event loop (`repro.core.events.run_events`), timed on a
+  prefix of the trace — the per-event Python dispatch makes the full 1M
+  cohort impractical, which is exactly the point of this benchmark;
+- the jitted epoch-batched engine (`repro.core.events_compiled`) in
+  ``stream=True`` mode on the full trace, where per-request columns stay
+  on device and the host only drains O(1) scalars + a fixed-size
+  quantile histogram per run.
+
+Before timing, the two lanes are differentially checked on the host
+prefix (bit-identical outcomes/completion times — the same bar as the
+oracle sweep in `tests/test_oracle_differential.py`).  The headline
+metric is event throughput (events/s); the run FAILS unless the compiled
+engine clears ``MIN_SPEEDUP``x the host loop, and unless the streaming
+stats are constant-memory (no O(n) host-side lists).  Results land in
+``reports/bench/BENCH_replay.json``.
+
+    PYTHONPATH=src python -m benchmarks.trace_replay [--tiny]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import exact_ann, save_report, workload
+from benchmarks.open_arrival import make_fleet_load
+from repro.core.controller import Objective
+from repro.core.events import run_events
+from repro.core.events_compiled import run_events_compiled
+from repro.core.runtime import make_workload_executor
+from repro.core.workload import poisson_arrivals, trace_arrivals
+
+MIN_SPEEDUP = 10.0      # ISSUE 6 acceptance: compiled >= 10x host events/s
+TRACE_SEED_LEN = 512    # length of the "recorded" arrival trace stub
+
+
+def _check_constant_memory(summary: dict, stats) -> None:
+    """The streaming contract: nothing O(n_requests) on the host."""
+    if stats.outcome != [] or stats.preempt_count.size != 0:
+        raise RuntimeError(
+            "stream=True replay materialized per-request host lists — the "
+            "constant-memory streaming contract is broken")
+    for key in ("latency", "cost"):
+        if set(summary[key]) != {"count", "mean", "var", "std"}:
+            raise RuntimeError(f"summary[{key!r}] is not a finalized "
+                               "Welford moment dict")
+
+
+def replay(wf: str = "mathqa_4", n: int = 1_000_000, host_n: int = 20_000,
+           rate: float = 8.0, capacity: int = 32, epoch: int | None = None,
+           warm: bool = False):
+    """Run both lanes, differential-check the prefix, return the report.
+
+    ``warm=True`` (the --tiny CI mode) times a SECOND run of each lane so
+    XLA/planner compiles are excluded; the full 1M run amortizes its
+    one-off compile into the measured wall instead of doubling the cost.
+    """
+    trie, wl = workload(wf)
+    ann = exact_ann(wf)
+    execu = make_workload_executor(wl)
+    obj = Objective("max_acc",
+                    lat_cap=float(np.quantile(ann.lat[trie.terminal], 0.8)))
+    load = make_fleet_load(trie, wl)
+
+    # bootstrap-extend a short recorded trace to the cohort size (the
+    # PR 6 trace_arrivals fix: gaps resampled from the empirical gaps)
+    base = poisson_arrivals(min(n, TRACE_SEED_LEN), rate, seed=1)
+    arr = trace_arrivals(base, n=n, seed=2)
+    reqs = np.random.default_rng(0).choice(wl.n_requests, n, replace=True)
+    kw = dict(capacity=capacity, policy="dynamic_load_aware",
+              fleet_load=load, admission="feasibility")
+    ckw = {} if epoch is None else {"epoch": epoch}
+    host_n = min(host_n, n)
+
+    # --- differential check + host timing on the prefix ----------------
+    hp = (reqs[:host_n], arr[:host_n])
+    if warm:
+        run_events(trie, ann, obj, hp[0], execu, arrivals=hp[1], **kw)
+    t0 = time.perf_counter()
+    hres, hstats = run_events(trie, ann, obj, hp[0], execu,
+                              arrivals=hp[1], **kw)
+    host_wall = time.perf_counter() - t0
+    if warm:
+        run_events(trie, ann, obj, hp[0], execu, arrivals=hp[1],
+                   compiled=True, **kw, **ckw)
+    cres, cstats = run_events(trie, ann, obj, hp[0], execu, arrivals=hp[1],
+                              compiled=True, **kw, **ckw)
+    # same equivalence bar as the differential oracle sweep: discrete
+    # fields exact, timestamps within 1e-9 (XLA FMA contraction shifts
+    # completion times by a few ulps on messy float workloads), costs
+    # within 1e-12
+    mismatch = sum(a.outcome != b.outcome or a.n_stages != b.n_stages
+                   or a.models != b.models
+                   or abs(a.total_cost - b.total_cost) > 1e-12
+                   for a, b in zip(hres, cres))
+    if mismatch or np.abs(hstats.done_t - cstats.done_t).max() > 1e-9:
+        raise RuntimeError(
+            f"compiled engine diverged from the host loop on the replay "
+            f"prefix ({mismatch} of {host_n} requests differ)")
+
+    # --- compiled streaming replay of the full trace --------------------
+    if warm:
+        run_events_compiled(trie, ann, obj, reqs, execu, arrivals=arr,
+                            stream=True, **kw, **ckw)
+    t0 = time.perf_counter()
+    summary, sstats = run_events_compiled(trie, ann, obj, reqs, execu,
+                                          arrivals=arr, stream=True,
+                                          **kw, **ckw)
+    comp_wall = time.perf_counter() - t0
+    _check_constant_memory(summary, sstats)
+
+    host_eps = hstats.events / host_wall
+    comp_eps = summary["events"] / comp_wall
+    speedup = comp_eps / host_eps
+    report = {
+        "schema": "bench_replay/v1",
+        "workflow": wf,
+        "n_requests": n,
+        "rate_rps": rate,
+        "capacity": capacity,
+        "epoch": epoch,
+        "prefix_differential": {"n": host_n, "mismatches": 0},
+        "host": {"n_requests": host_n, "events": hstats.events,
+                 "wall_s": round(host_wall, 3),
+                 "events_per_s": round(host_eps, 1)},
+        "compiled": {"n_requests": n, "events": summary["events"],
+                     "wall_s": round(comp_wall, 3),
+                     "events_per_s": round(comp_eps, 1),
+                     "served": summary["served"],
+                     "goodput": round(summary["succeeded"]
+                                      / max(summary["n_requests"], 1), 4),
+                     "shed": summary["shed"],
+                     "rejected": summary["rejected"],
+                     "mean_lat_s": round(summary["latency"]["mean"], 4),
+                     "p99_lat_s": round(summary["latency_p99"], 4)},
+        "speedup": round(speedup, 2),
+        "min_speedup": MIN_SPEEDUP,
+    }
+    save_report("BENCH_replay", report)
+    if speedup < MIN_SPEEDUP:
+        raise RuntimeError(
+            f"compiled event throughput is only {speedup:.1f}x the host "
+            f"loop ({comp_eps:.0f} vs {host_eps:.0f} events/s) — the "
+            f"acceptance floor is {MIN_SPEEDUP:.0f}x")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: 10k-request replay, warmed timing")
+    ap.add_argument("--n", type=int, default=None,
+                    help="replay size (default 1M, or 10k with --tiny)")
+    ap.add_argument("--epoch", type=int, default=None,
+                    help="epoch width override (default: engine default)")
+    args = ap.parse_args()
+    n = args.n or (10_000 if args.tiny else 1_000_000)
+    rep = replay(n=n, host_n=2_000 if args.tiny else 20_000,
+                 epoch=args.epoch, warm=args.tiny)
+    h, c = rep["host"], rep["compiled"]
+    print(f"host     {h['events']:>9d} events in {h['wall_s']:8.2f}s  "
+          f"({h['events_per_s']:>10.0f} ev/s, {h['n_requests']} reqs)")
+    print(f"compiled {c['events']:>9d} events in {c['wall_s']:8.2f}s  "
+          f"({c['events_per_s']:>10.0f} ev/s, {c['n_requests']} reqs)")
+    print(f"speedup  {rep['speedup']:.1f}x (floor {MIN_SPEEDUP:.0f}x)  "
+          f"goodput={c['goodput']:.3f} p99={c['p99_lat_s']:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

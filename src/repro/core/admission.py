@@ -44,6 +44,8 @@ result-identical to passing nothing), ``"feasibility"``
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.core.controller import Objective, select_path
@@ -121,6 +123,13 @@ class AdmissionPolicy:
 
     def queue_reject(self, elapsed: float, lat_cap: float | None = None,
                      wait_forecast: float = 0.0) -> bool:
+        """Whether to reject a queued request before it claims a slot.
+
+        ``elapsed`` is the budget already burned waiting (seconds since
+        arrival), ``lat_cap`` the request's own deadline (None = the
+        objective's), ``wait_forecast`` the projected further wait
+        (nonzero only for `wants_forecast` policies).  Always-admit
+        never rejects."""
         return False
 
     def forecast_delay_row(self, delay_row: np.ndarray, sim,
@@ -131,12 +140,20 @@ class AdmissionPolicy:
         return delay_row
 
     def classify_infeasible(self, n_executed_stages: int) -> str:
+        """Outcome label for a request the planner finds infeasible at
+        dispatch (no path fits the remaining budget).  The base policy
+        serves the realized prefix as-is; gates reclassify it as shed
+        (work already spent) or rejected (nothing executed yet)."""
         return SERVED
 
     def overload_actions(self, engine: str,
                          jobs: list[tuple[int, int, float, float]],
                          downgraded: np.ndarray
                          ) -> list[tuple[int, str]]:
+        """Triage decisions after a dispatch pushes ``engine`` past
+        ``max_occupancy`` — see the class docstring for the ``jobs``
+        tuple layout.  Returns [(slot, "shed"|"downgrade")]; the base
+        policy (no occupancy cap) never intervenes."""
         return []
 
 
@@ -166,6 +183,8 @@ class FeasibilityGate(AdmissionPolicy):
         self.margin = float(margin)
 
     def bind(self, trie, ann, obj, terminal_mask):
+        """Cache the unloaded minimum remaining path latency the
+        queue-reject bound subtracts from the deadline."""
         super().bind(trie, ann, obj, terminal_mask)
         if terminal_mask.any():
             self._min_path_lat = float(
@@ -181,12 +200,16 @@ class FeasibilityGate(AdmissionPolicy):
 
     def queue_reject(self, elapsed: float, lat_cap: float | None = None,
                      wait_forecast: float = 0.0) -> bool:
+        """Certainty bound: reject once the burned wait provably rules
+        out even the fastest unloaded path (see class docstring)."""
         cap = self._cap(lat_cap)
         if cap is None:
             return False
         return elapsed > cap - self._min_path_lat + self.margin
 
     def classify_infeasible(self, n_executed_stages: int) -> str:
+        """Planner infeasibility is a shed after >=1 executed stage
+        (work was wasted) and a rejection before any work started."""
         return SHED if n_executed_stages > 0 else REJECTED
 
 
@@ -251,6 +274,9 @@ class PredictiveGate(FeasibilityGate):
 
     def queue_reject(self, elapsed: float, lat_cap: float | None = None,
                      wait_forecast: float = 0.0) -> bool:
+        """Forecast-gated rejection: the feasibility bound applied to
+        burned wait *plus* the discounted projected further wait (see
+        class docstring for the forecast's derivation)."""
         cap = self._cap(lat_cap)
         if cap is None:
             return False
@@ -306,6 +332,8 @@ class CostAwareShed(FeasibilityGate):
         self.downgrade = bool(downgrade)
 
     def bind(self, trie, ann, obj, terminal_mask):
+        """Precompute per-node best-attainable accuracy and cheapest
+        remaining plan cost — the two subtree reductions `score` reads."""
         super().bind(trie, ann, obj, terminal_mask)
         self._best_acc, self._min_cost = _subtree_reductions(
             trie, ann, terminal_mask)
@@ -319,6 +347,9 @@ class CostAwareShed(FeasibilityGate):
         return float(max(acc, 0.0) / (elapsed_cost + remaining + 1e-9))
 
     def overload_actions(self, engine, jobs, downgraded):
+        """Rank ``engine``'s in-service jobs by goodput-per-token and
+        downgrade (first offense) or shed the lowest-scoring excess
+        beyond ``max_occupancy``; ties break on slot index."""
         excess = len(jobs) - self.max_occupancy
         if excess <= 0:
             return []
@@ -354,6 +385,74 @@ def cheapest_feasible_target(trie: Trie, ann: TrieAnnotations,
                            engine_delays=engine_delays)
     finally:
         trie.terminal = saved
+
+
+@dataclasses.dataclass(frozen=True)
+class TracedAdmission:
+    """Trace-safe image of a bound admission policy: static scalars only.
+
+    The compiled event engine (`repro.core.events_compiled`) specializes
+    its jitted step on this object — it is hashable, so it doubles as part
+    of the compilation-cache key, and every field is a python scalar the
+    traced code can close over.  The four stock policies all reduce to
+    this shape; the behavioural hooks map as:
+
+    - ``gates``: queue-side rejection is active (everything but
+      "always"); the traced predicate is
+      ``elapsed + discount * wait_forecast > cap - min_path_lat + margin``
+      with ``discount`` fixed at 0 for non-predictive gates (whose
+      `queue_reject` ignores the forecast).
+    - ``shed_on_deadline`` / ``wants_forecast`` / ``max_occupancy`` /
+      ``downgrade``: same meaning as on `AdmissionPolicy`.
+    - ``min_path_lat``: the bound `FeasibilityGate._min_path_lat`
+      (unloaded minimum remaining path latency), baked at setup.
+
+    `classify_infeasible` stays host-side semantics: gating policies turn
+    a planner-infeasible request into SHED after >=1 executed stage and
+    REJECTED otherwise; "always" records SERVED.  The traced dispatch
+    encodes exactly that rule from ``gates``.
+    """
+
+    name: str
+    gates: bool
+    shed_on_deadline: bool
+    wants_forecast: bool
+    margin: float
+    discount: float
+    backlog_delay: float
+    min_path_lat: float
+    max_occupancy: int | None
+    downgrade: bool
+
+
+def traced_admission(pol: AdmissionPolicy) -> TracedAdmission:
+    """Distill a *bound* stock policy into its `TracedAdmission` image.
+
+    Only the four stock policy classes are supported: a custom
+    `AdmissionPolicy` subclass carries arbitrary python in its hooks,
+    which cannot be traced — the compiled engine raises
+    ``NotImplementedError`` for those (run the host loop instead)."""
+    if type(pol) not in (AdmissionPolicy, FeasibilityGate, PredictiveGate,
+                         CostAwareShed):
+        raise NotImplementedError(
+            f"compiled event engine supports only the stock admission "
+            f"policies, not {type(pol).__name__}; use the host loop "
+            f"(compiled=False) for custom policies")
+    gates = isinstance(pol, FeasibilityGate)
+    return TracedAdmission(
+        name=pol.name,
+        gates=gates,
+        shed_on_deadline=bool(pol.shed_on_deadline),
+        wants_forecast=bool(pol.wants_forecast),
+        margin=float(getattr(pol, "margin", 0.0)),
+        discount=float(getattr(pol, "discount", 0.0))
+        if pol.wants_forecast else 0.0,
+        backlog_delay=float(getattr(pol, "backlog_delay", 0.0))
+        if pol.wants_forecast else 0.0,
+        min_path_lat=float(getattr(pol, "_min_path_lat", 0.0)),
+        max_occupancy=pol.max_occupancy,
+        downgrade=bool(getattr(pol, "downgrade", False)),
+    )
 
 
 _BY_NAME = {

@@ -184,6 +184,11 @@ def select_path_dfs(
 # ----------------------------------------------------------------------
 @dataclasses.dataclass
 class PlanStep:
+    """One receding-horizon replan decision: the terminal node the
+    controller currently aims for, the model to invoke next on the way
+    there (-1 = stop at the realized prefix), and the wall time the
+    replanning step itself cost."""
+
     node: int            # planned terminating node (this replan's target)
     next_model: int      # model to invoke next; -1 => stop now
     replan_time_s: float # wall time of this replanning step
@@ -247,6 +252,12 @@ class OnlineController:
         elapsed_cost: float = 0.0,
         engine_delays: dict[str, float] | None = None,
     ) -> PlanStep:
+        """One receding-horizon step from the realized ``prefix_node``:
+        re-root the trie, re-select under the remaining budget (elapsed
+        latency/cost already burned, live ``engine_delays`` added per
+        stage), and return the target node + next model as a `PlanStep`
+        (``next_model=-1`` = stop here; under the static policy the
+        t=0 plan is replayed without re-selection)."""
         import time
 
         t0 = time.perf_counter()

@@ -111,6 +111,8 @@ class TrieDevice:
     n_engines: int = 0            # static aux (no device sync on access)
 
     def tree_flatten(self):
+        """Pytree protocol: device arrays are leaves, ``n_engines`` is
+        static aux data (it shapes compiled programs)."""
         return (
             (self.terminal, self.depth, self.acc, self.cost, self.lat,
              self.subtree_size, self.path_models, self.path_counts,
@@ -120,11 +122,15 @@ class TrieDevice:
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Pytree protocol inverse of `tree_flatten`."""
         return cls(*children, n_engines=aux)
 
     @staticmethod
     def build(trie: Trie, ann: TrieAnnotations,
               restrict_nodes: np.ndarray | None = None) -> "TrieDevice":
+        """Stage the trie + annotations into device-resident columns
+        (float32), optionally restricting the terminal set to
+        ``restrict_nodes`` — one upload reused by every jitted plan."""
         terminal = trie.terminal.copy()
         if restrict_nodes is not None:
             keep = np.zeros(trie.n_nodes, dtype=bool)
@@ -317,6 +323,37 @@ class ResidentPlanner:
             np.asarray(delay_row, dtype=np.float32),
             *self._scalars, kind=self._kind, variant=self.variant)
         return np.asarray(tgt), np.asarray(nxt)
+
+
+def traced_fleet_plan(td: TrieDevice, prefixes, elapsed_lat, elapsed_cost,
+                      delay_row, scalars, *, kind: str, variant: str):
+    """Planner call for use INSIDE an already-traced computation.
+
+    The compiled event engine (`repro.core.events_compiled`) invokes the
+    replan from within its jitted epoch step, so it needs the planner's
+    math without `_resident_plan`'s own jit wrapper (nested jit would be a
+    no-op but obscures the single-program property the engine asserts on).
+    This is exactly `_resident_plan`'s body: one shared (E,) float32 delay
+    row broadcast across the capacity lanes, then the variant-dispatched
+    kernel.  All operands must already carry the kernel's dtypes (int32
+    prefixes, float32 elapsed/cost/delays) — inside an
+    ``jax.experimental.enable_x64`` scope the kernel arithmetic stays
+    float32 end-to-end, bit-matching the host planner's programs.
+
+    Returns ``(targets, next_models)`` as traced int32 lanes.
+    """
+    delays = jnp.broadcast_to(
+        delay_row[None, :], (prefixes.shape[0], delay_row.shape[0]))
+    return _dispatch_plan(td, prefixes, elapsed_lat, elapsed_cost, delays,
+                          *scalars, kind=kind, variant=variant)
+
+
+def objective_scalars(obj: Objective):
+    """Public alias of the planner's traced objective scalars
+    ``(acc_floor, cost_cap, lat_cap)`` (float32; None caps become the
+    planner's BIG sentinel) — the operand bundle `traced_fleet_plan` and
+    the resident planner share."""
+    return _objective_scalars(obj)
 
 
 def make_resident_planner(td: TrieDevice, obj: Objective, capacity: int,

@@ -73,6 +73,8 @@ def _monotone_floor(trie: Trie, mu: np.ndarray) -> np.ndarray:
 # 1-2: averaging estimators
 # ----------------------------------------------------------------------
 def direct_average(trie: Trie, profile: ProfileResult) -> np.ndarray:
+    """Estimator 1: per-node mean over *observed* outcomes only, with
+    depth/model fallback for unobserved nodes and a monotone floor."""
     mean, cnt = _col_stats(profile.obs)
     mu = _fallback_by_depth_model(trie, mean, cnt > 0)
     mu[0] = 0.0
@@ -80,6 +82,9 @@ def direct_average(trie: Trie, profile: ProfileResult) -> np.ndarray:
 
 
 def prefix_avg(trie: Trie, profile: ProfileResult) -> np.ndarray:
+    """Estimator 2: per-node mean over prefix-filled outcomes (a success
+    observed at a node implies success at every ancestor), same fallback
+    and monotone floor as `direct_average`."""
     mean, cnt = _col_stats(profile.observed_filled())
     mu = _fallback_by_depth_model(trie, mean, cnt > 0)
     mu[0] = 0.0
@@ -248,6 +253,9 @@ def _column_features(trie: Trie, profile: ProfileResult) -> np.ndarray:
 
 
 def prefix_gbt(trie: Trie, profile: ProfileResult, *, rounds: int = 200) -> np.ndarray:
+    """Estimator 4: gradient-boosted stumps over per-node features,
+    trained on the least-biased target columns available (calibration
+    rows when provided, else near-fully-observed columns)."""
     F = _column_features(trie, profile)
     filled = profile.observed_filled()
     fmean, fcnt = _col_stats(filled)
@@ -292,6 +300,9 @@ def _compose(trie: Trie, q_hat: np.ndarray) -> np.ndarray:
 
 
 def vinelm_lite(trie: Trie, profile: ProfileResult) -> np.ndarray:
+    """Estimator 5: cascade decomposition — estimate per-node conditional
+    accuracies (unbiased under MNAR prefix observation) and compose them
+    down the trie (paper eq. (3), (7)-(9))."""
     q_mean, q_cnt = _conditional_means(trie, profile)
     q_hat = _fallback_by_depth_model(trie, q_mean, q_cnt > 0)
     q_hat = np.clip(q_hat, 0.0, 1.0)
@@ -365,6 +376,7 @@ ESTIMATORS = {
 
 
 def estimate_accuracy(name: str, trie: Trie, profile: ProfileResult, **kw) -> np.ndarray:
+    """Dispatch to a named estimator in `ESTIMATORS` (paper §5 table)."""
     return ESTIMATORS[name](trie, profile, **kw)
 
 

@@ -144,6 +144,7 @@ class EventStats:
 
     @property
     def total_replan_s(self) -> float:
+        """Total wall time spent in batched replans over the run."""
         return float(sum(self.replan_s))
 
     @property
@@ -153,6 +154,7 @@ class EventStats:
 
     @property
     def mean_queue_wait_s(self) -> float:
+        """Mean admission-queue wait across all requests (seconds)."""
         w = self.queue_wait_s
         return float(np.mean(w)) if w.size else 0.0
 
@@ -184,6 +186,8 @@ def run_events(
     fleet_load=None,
     t_start: float = 0.0,
     plan_variant: str | None = None,
+    compiled: bool = False,
+    **compiled_kwargs,
 ) -> tuple[list[ExecutionResult], EventStats]:
     """Serve an open-arrival stream of ``requests`` event-by-event.
 
@@ -213,11 +217,32 @@ def run_events(
     check (against each request's own class deadline, when classes are
     given) are measured from each request's *arrival*, so admission-queue
     wait counts against the deadline.
+
+    ``compiled=True`` delegates to the jitted epoch-batched engine in
+    `repro.core.events_compiled.run_events_compiled` (bit-compatible on
+    the supported configuration surface; extra ``epoch=``/``stream=``
+    knobs pass through via ``**compiled_kwargs``).  The compiled engine
+    raises ``NotImplementedError`` for host-only features (custom
+    admission-policy subclasses, ``load_probe``, duck-typed fleet load
+    models); see `docs/EVENT_ENGINE.md` for the support matrix.
     """
     if policy not in ("dynamic", "dynamic_load_aware"):
         raise ValueError(f"unsupported events policy {policy!r}: the static "
                          "baseline plans once per request — use run_cohort's "
                          "scalar path")
+    if compiled:
+        from repro.core.events_compiled import run_events_compiled
+        return run_events_compiled(
+            trie, ann, obj, requests, executor, arrivals=arrivals,
+            capacity=capacity, policy=policy, admission=admission,
+            classes=classes, class_specs=class_specs, preempt=preempt,
+            restrict_nodes=restrict_nodes, load_probe=load_probe,
+            fleet_load=fleet_load, t_start=t_start,
+            plan_variant=plan_variant, **compiled_kwargs)
+    if compiled_kwargs:
+        raise TypeError(f"unexpected keyword arguments for the host event "
+                        f"loop: {sorted(compiled_kwargs)} (compiled=True "
+                        "accepts epoch=/stream=)")
     pol = get_policy(admission)
     requests = np.asarray(requests)
     B = int(requests.shape[0])

@@ -1,0 +1,1390 @@
+"""Jitted epoch-batched event engine: the compiled virtual clock.
+
+`repro.core.events.run_events` drives its virtual clock from Python: every
+arrival/completion/deadline event pays a host round-trip even though the
+replan (PR 4) and the planner's slot state already live on the device.
+This module compiles the clock itself: **all events inside a time epoch
+run in one jitted step** — a `lax.while_loop` whose body replicates the
+host loop's per-timestamp contract exactly (completions, deadline sheds,
+arrivals, queue rejections, then the preempt/admit/replan/dispatch cycle)
+over fixed-capacity device arrays.  The host merely feeds epoch
+boundaries and drains O(1) scalars per epoch, so a million-request trace
+replays in constant host memory (`repro.core.streaming` accumulators are
+folded inside the traced step).
+
+Architecture (see docs/EVENT_ENGINE.md for the full design):
+
+- **epoch segmentation**: arrivals are sorted once; the host advances a
+  cursor ``chunk`` arrivals at a time and calls the jitted ``step(state,
+  consts, t_hi)`` with ``t_hi`` = the last arrival time of the chunk (the
+  final epoch uses +inf).  ``t_hi`` is a *traced* operand, so varying
+  epoch widths never retrace — one compilation per static configuration,
+  cached module-wide in `_ENGINE_CACHE`.
+- **traced state**: every mutable quantity of the host loop is a device
+  array in one state pytree — slot columns, the `FleetEngineSim` calendar
+  columns (drained via `repro.serving.loadsim.traced_advance`), per-class
+  FIFO rings over a precomputed arrival-order table, a fixed-capacity
+  paused buffer for preempted work, per-request outputs, and the
+  streaming accumulators.  The admission queue is not a heap: within a
+  class, priority order IS arrival order, so a (head, tail) ring per
+  class plus an unrolled K-way merge by (class weight, arrival seq)
+  reproduces the host heap's pop order exactly.
+- **bit-compatibility**: the engine runs under a scoped
+  ``jax.experimental.enable_x64`` so all clock/work arithmetic is float64
+  with the same op order as the host's numpy (the planner kernel stays
+  explicitly float32 on both paths).  The differential oracle
+  (`tests/test_oracle_differential.py`, ``engine="compiled"`` lane) pins
+  outcome/cost/completion-time equality over the deterministic sweep.
+
+Restrictions vs the host loop (all raise `NotImplementedError`): stage
+executors must be *pure functions of (request value, depth, model)* — the
+engine tabulates them once up front — and only the stock admission
+policies, `FleetLoadModel` load coupling, and ``load_probe=None`` are
+supported.  Custom duck-typed policies/sims/probes keep using the host
+loop.  ``replan_overhead_s`` and `EventStats.replan_s` are host-loop
+wall-clock concepts and are reported as zero/empty here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Callable
+
+import numpy as np
+
+from repro.core.admission import (
+    REJECTED,
+    SERVED,
+    SHED,
+    TracedAdmission,
+    _subtree_reductions,
+    get_policy,
+    traced_admission,
+)
+from repro.core.controller import Objective
+from repro.core.controller_jax import (
+    TrieDevice,
+    _resolve_variant,
+    objective_scalars,
+    traced_fleet_plan,
+    trie_engines,
+)
+from repro.core.events import _DEFAULT_CAPACITY, EventStats
+from repro.core.runtime import ExecutionResult, StageExecutor
+from repro.core.streaming import QuantileSketch, welford_merge
+from repro.core.trie import Trie, TrieAnnotations
+
+# outcome codes inside the traced state (host strings on the way out)
+_OC_SERVED, _OC_REJECTED, _OC_SHED = 0, 1, 2
+_OUTCOMES = {_OC_SERVED: SERVED, _OC_REJECTED: REJECTED, _OC_SHED: SHED}
+_CERT_SLACK = 1e-9   # deadline-shed certainty slack (events.py step 1b/2b)
+_DONE_TOL = 1e-9     # FleetEngineSim._DONE_TOL
+_SLO_TOL = 1e-9      # run_events' final SLO check tolerance
+
+DEFAULT_EPOCH = 1024  # arrivals per jitted step (throughput knob, not math)
+
+
+@dataclasses.dataclass(frozen=True)
+class _EngineConfig:
+    """Static specialization key of one compiled engine program.
+
+    Everything here changes the traced program structure; everything that
+    merely changes *values* (arrival times, work tables, deadlines,
+    objective scalars) is a traced operand instead, so replaying a new
+    trace through the same configuration hits the cache."""
+
+    capacity: int
+    n_classes: int
+    n_engines: int
+    n_models: int
+    max_depth: int
+    priorities: bool
+    preempt: bool
+    ps: bool               # processor-sharing calendar (vs unit-rate)
+    load_aware: bool
+    deadline_sheds: bool
+    pol: TracedAdmission
+    kind: str
+    kind_dg: str           # downgrade-lane objective kind (cost_aware)
+    variant: str
+    n_bins: int            # streaming histogram bins (incl. under/overflow)
+
+
+_ENGINE_CACHE: dict[_EngineConfig, Callable] = {}
+
+
+def compiled_engine_cache_size() -> int:
+    """Total compiled specializations across every engine program this
+    process traced, or -1 when the JAX runtime doesn't expose the counter
+    — the zero-retrace guard the tests pin: epoch width, trace content,
+    deadlines, and objective scalars are all traced operands, so replaying
+    new traces through a known configuration must not grow this."""
+    total = 0
+    for fn in _ENGINE_CACHE.values():
+        try:
+            total += fn._cache_size()
+        except Exception:
+            return -1
+    return total
+
+
+def _build_step(cfg: _EngineConfig):
+    """Trace-and-cache the jitted epoch step for one static config."""
+    if cfg in _ENGINE_CACHE:
+        return _ENGINE_CACHE[cfg]
+
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    from repro.serving.loadsim import traced_advance, traced_engine_rates, \
+        traced_job_rates
+
+    C, K, E, M = cfg.capacity, cfg.n_classes, cfg.n_engines, cfg.n_models
+    P = C  # simultaneously-paused per class is bounded by the slot count
+    pol = cfg.pol
+    i32 = jnp.int32
+
+    def scat_set(dst, idx, val, mask):
+        """Masked scatter into a (B,)-indexed array (drop when ~mask)."""
+        B = dst.shape[0]
+        return dst.at[jnp.where(mask, idx, B)].set(val, mode="drop")
+
+    def scat_add(dst, idx, val, mask):
+        B = dst.shape[0]
+        return dst.at[jnp.where(mask, idx, B)].add(val, mode="drop")
+
+    def wmerge(wt, cnt, mean, m2):
+        """Fold a batch (count, mean, M2) into running Welford state —
+        Chan's parallel merge, trace-safe (no data-dependent branches)."""
+        c0, m0, s0 = wt
+        tot = c0 + cnt
+        tot_s = jnp.where(tot > 0, tot, 1.0)
+        d = mean - m0
+        m = m0 + d * cnt / tot_s
+        s = s0 + m2 + d * d * c0 * cnt / tot_s
+        keep = cnt > 0
+        return (jnp.where(keep, tot, c0), jnp.where(keep, m, m0),
+                jnp.where(keep, s, s0))
+
+    def batch_stats(x, mask):
+        cnt = jnp.sum(jnp.where(mask, 1.0, 0.0))
+        mean = jnp.sum(jnp.where(mask, x, 0.0)) / jnp.where(cnt > 0, cnt, 1.0)
+        m2 = jnp.sum(jnp.where(mask, (x - mean) ** 2, 0.0))
+        return cnt, mean, m2
+
+    def record_terminal(st, cn, req, valid, t, outcome, cost):
+        """Every terminal disposition funnels through here: outputs,
+        done-counter, and the streaming accumulators (latency/cost moments
+        and the quantile histogram over SERVED requests, SLO-violation
+        count over all terminal requests)."""
+        B = st["roc"].shape[0]
+        reqc = jnp.clip(req, 0, B - 1)
+        st = dict(st)
+        st["roc"] = scat_set(st["roc"], req, outcome, valid)
+        st["rdn"] = scat_set(st["rdn"], req, t, valid)
+        st["rct"] = scat_set(st["rct"], req, cost, valid)
+        st["don"] = st["don"] + jnp.sum(jnp.where(valid, 1, 0))
+        lat = t - cn["arr"][reqc]
+        served = valid & (outcome == _OC_SERVED)
+        st["lw"] = wmerge(st["lw"], *batch_stats(lat, served))
+        st["cw"] = wmerge(st["cw"], *batch_stats(cost, served))
+        bins = jnp.searchsorted(cn["edges"], lat, side="right")
+        st["hist"] = st["hist"].at[jnp.where(
+            served, bins, cfg.n_bins)].add(1, mode="drop")
+        cap = cn["cap"][reqc]
+        st["slo"] = st["slo"] + jnp.sum(jnp.where(
+            valid & jnp.isfinite(cap) & (lat > cap + _SLO_TOL), 1, 0))
+        return st
+
+    def release(st, mask):
+        """Host `release_slot` over a (C,) mask: every per-slot column."""
+        return {**st,
+                "so": jnp.where(mask, -1, st["so"]),
+                "su": jnp.where(mask, 0, st["su"]),
+                "sec": jnp.where(mask, 0.0, st["sec"]),
+                "sm": jnp.where(mask, -1, st["sm"]),
+                "sdg": jnp.where(mask, False, st["sdg"]),
+                "sddl": jnp.where(mask, jnp.inf, st["sddl"]),
+                "sfree": st["sfree"] | mask}
+
+    def sim_clear(st, mask):
+        """`FleetEngineSim._clear` over a (C,) mask."""
+        return {**st,
+                "je": jnp.where(mask, -1, st["je"]),
+                "jtc": jnp.where(mask, jnp.inf, st["jtc"]),
+                "jwk": jnp.where(mask, 0.0, st["jwk"]),
+                "jrm": jnp.where(mask, jnp.inf, st["jrm"]),
+                "jw": jnp.where(mask, 1.0, st["jw"])}
+
+    def remaining_col(st, t):
+        """`FleetEngineSim.remaining(t)`: (C,) unloaded seconds, inf idle.
+        The calendar was already advanced to t at the event's start."""
+        act = st["je"] >= 0
+        rem = jnp.maximum(st["jrm"], 0.0) if cfg.ps \
+            else jnp.maximum(st["jtc"] - t, 0.0)
+        return jnp.where(act, rem, jnp.inf)
+
+    def job_rates(st, cn):
+        act = st["je"] >= 0
+        occ = jnp.zeros(E + 1, st["jrm"].dtype).at[
+            jnp.where(act, jnp.clip(st["je"], 0, E - 1), E)].add(
+            jnp.where(act, 1.0, 0.0))[:E]
+        rates = traced_engine_rates(occ, cn["conc"])
+        return traced_job_rates(st["je"], st["jw"], act, rates, st["wtd"])
+
+    def next_completion(st, cn):
+        """`FleetEngineSim.next_completion` — the per-job quotient form,
+        value-equal to the host's per-engine min (division by the shared
+        positive rate commutes with min exactly in IEEE)."""
+        act = st["je"] >= 0
+        if not cfg.ps:
+            return jnp.min(jnp.where(act, st["jtc"], jnp.inf))
+        jr = job_rates(st, cn)
+        q = jnp.where(act, jnp.maximum(st["jrm"], 0.0)
+                      / jnp.where(act, jr, 1.0), jnp.inf)
+        return jnp.where(act.any(), st["tl"] + jnp.min(q), jnp.inf)
+
+    def peak_update(st, cn):
+        act = st["je"] >= 0
+        occ = jnp.zeros(E + 1, jnp.int64).at[
+            jnp.where(act, jnp.clip(st["je"], 0, E - 1), E)].add(
+            jnp.where(act, 1, 0))[:E]
+        return {**st, "po": jnp.maximum(st["po"], occ)}
+
+    # ------------------------------------------------------------------
+    # admission queue: per-class FIFO rings + paused buffer
+    # ------------------------------------------------------------------
+    def class_head(st, cn, k):
+        """(valid, request, is_paused) head of class ``k`` (python int).
+
+        Invariant: every paused seq in a class precedes every never-
+        admitted seq (admission consumed the ring in seq order), so the
+        class head is the paused buffer's front when non-empty, else the
+        fresh ring's front.  Under predictive admission the fresh front
+        is kept non-rejected by the skip-dead fixups."""
+        fh = st["qh"][k]
+        fresh_valid = fh < st["qt"][k]
+        fresh_req = cn["members"][k, jnp.clip(fh, 0, cn["arr"].shape[0] - 1)]
+        if cfg.priorities:
+            has_p = st["pn"][k] > 0
+            return (has_p | fresh_valid,
+                    jnp.where(has_p, st["pb"][k, 0], fresh_req), has_p)
+        return fresh_valid, fresh_req, jnp.asarray(False)
+
+    def merged_head(st, cn):
+        """Queue head across classes: max class weight, then min arrival
+        seq — exactly the host heap's (-weight, seq) pop order.  Returns
+        (valid, class index, request, head weight)."""
+        big = jnp.iinfo(jnp.int64).max
+        best_k = jnp.asarray(-1, i32)
+        best_w = jnp.asarray(-jnp.inf, st["sec"].dtype)
+        best_s = jnp.asarray(big, jnp.int64)
+        best_r = jnp.asarray(0, i32)
+        for k in range(K):
+            valid, req, _ = class_head(st, cn, k)
+            s = jnp.where(valid, cn["seq"][req], big)
+            w = jnp.where(valid, cn["wcls"][k], -jnp.inf)
+            better = valid & ((w > best_w) | ((w == best_w) & (s < best_s)))
+            best_k = jnp.where(better, k, best_k)
+            best_w = jnp.where(better, w, best_w)
+            best_s = jnp.where(better, s, best_s)
+            best_r = jnp.where(better, req, best_r)
+        return best_k >= 0, best_k, best_r, best_w
+
+    def skip_dead(st, cn):
+        """Advance each class's fresh head past predictive-rejected
+        entries so `class_head` always exposes a live request."""
+        if not pol.wants_forecast:
+            return st
+        B = cn["arr"].shape[0]
+        for k in range(K):
+            def cond(s, k=k):
+                h = s["qh"][k]
+                hr = cn["members"][k, jnp.clip(h, 0, B - 1)]
+                return (h < s["qt"][k]) & s["dead"][hr]
+
+            def body(s, k=k):
+                return {**s, "qh": s["qh"].at[k].add(1)}
+
+            st = lax.while_loop(cond, body, st)
+        return st
+
+    def pop_head(st, cn, k_idx):
+        """Remove the merged head (class ``k_idx``, traced): paused front
+        when present, else the fresh ring front."""
+        onehot = jnp.arange(K) == k_idx
+        if cfg.priorities:
+            from_p = onehot & (st["pn"] > 0)
+            shifted = jnp.concatenate(
+                [st["pb"][:, 1:], jnp.full((K, 1), -1, i32)], axis=1)
+            st = {**st,
+                  "pb": jnp.where(from_p[:, None], shifted, st["pb"]),
+                  "pn": st["pn"] - from_p.astype(st["pn"].dtype),
+                  "qh": st["qh"] + (onehot & ~from_p).astype(st["qh"].dtype)}
+        else:
+            st = {**st, "qh": st["qh"] + onehot.astype(st["qh"].dtype)}
+        return skip_dead(st, cn)
+
+    def paused_insert(st, cn, i, k_idx):
+        """Insert request ``i`` into class ``k_idx``'s paused buffer in
+        arrival-seq order (the host re-pushes it onto the heap; within a
+        class the heap orders by seq)."""
+        B = cn["arr"].shape[0]
+        row = st["pb"][k_idx]
+        iota = jnp.arange(P)
+        seqs = jnp.where(iota < st["pn"][k_idx],
+                         cn["seq"][jnp.clip(row, 0, B - 1)],
+                         jnp.iinfo(jnp.int64).max)
+        pos = jnp.sum(jnp.where(seqs < cn["seq"][i], 1, 0))
+        new_row = jnp.where(iota < pos, row,
+                            jnp.where(iota == pos, i, jnp.roll(row, 1)))
+        return {**st,
+                "pb": st["pb"].at[k_idx].set(new_row),
+                "pn": st["pn"].at[k_idx].add(1),
+                "rpp": st["rpp"].at[i].set(True)}
+
+    def shed_paused_rows(st, cn, t, doom_fn):
+        """Shed doomed entries out of every paused row (stable compaction),
+        mirroring the host's queue-side paused-deadline sheds."""
+        B = cn["arr"].shape[0]
+        for k in range(K):
+            row = st["pb"][k]
+            iota = jnp.arange(P)
+            activep = iota < st["pn"][k]
+            req = jnp.clip(row, 0, B - 1)
+            doomed = activep & doom_fn(req)
+            st = record_terminal(st, cn, req, doomed, t,
+                                 jnp.full(P, _OC_SHED, i32), st["rpec"][req])
+            st["shd"] = st["shd"] + jnp.sum(jnp.where(doomed, 1, 0))
+            st["rpp"] = scat_set(st["rpp"], req, False, doomed)
+            keep = activep & ~doomed
+            tgt = jnp.where(keep, jnp.cumsum(keep) - 1, P)
+            new_row = jnp.full((P,), -1, i32).at[tgt].set(row, mode="drop")
+            st["pb"] = st["pb"].at[k].set(new_row)
+            st["pn"] = st["pn"].at[k].set(
+                jnp.sum(keep).astype(st["pn"].dtype))
+        return st
+
+    def paused_doom(st, cn, t):
+        def doom(req):
+            ddl = cn["arr"][req] + cn["cap"][req]
+            return jnp.isfinite(ddl) & (
+                (t >= ddl) | (t + st["rprm"][req] > ddl + _CERT_SLACK))
+        return doom
+
+    # ------------------------------------------------------------------
+    # event phases (the numbers mirror events.py's comments)
+    # ------------------------------------------------------------------
+    def phase_completions(st, cn, t):
+        act = st["je"] >= 0
+        done = act & ((st["jrm"] <= _DONE_TOL) if cfg.ps
+                      else (st["jtc"] <= t))
+        own = st["so"]
+        newu = cn["child"][st["su"], jnp.clip(st["sm"], 0, M - 1)]
+        st = dict(st)
+        st["su"] = jnp.where(done, newu, st["su"])
+        st["ru"] = scat_set(st["ru"], own, newu, done)
+        st["sm"] = jnp.where(done, -1, st["sm"])
+        fin = done & st["sok"]
+        deep = done & ~st["sok"] & (cn["depth"][newu] >= cfg.max_depth)
+        term = fin | deep
+        st["rsc"] = scat_set(st["rsc"], own, True, fin)
+        st = record_terminal(st, cn, own, term, t,
+                             jnp.full(C, _OC_SERVED, i32), st["sec"])
+        st["snd"] = st["snd"] | (done & ~term)
+        st = release(st, term)
+        return sim_clear(st, done)
+
+    def phase_deadline_sheds(st, cn, t):
+        if not cfg.deadline_sheds:
+            return st
+        B = cn["arr"].shape[0]
+        # (i) certainty bound on in-service work: PS rate <= 1, so
+        # t + remaining lower-bounds completion
+        insvc = (st["so"] >= 0) & (st["sm"] >= 0)
+        rem = remaining_col(st, t)
+        ownc = jnp.clip(st["so"], 0, B - 1)
+        ddl = cn["arr"][ownc] + cn["cap"][ownc]
+        doomed = insvc & ((t >= ddl) | (t + rem > ddl + _CERT_SLACK))
+        st = record_terminal(st, cn, st["so"], doomed, t,
+                             jnp.full(C, _OC_SHED, i32), st["sec"])
+        st = dict(st)
+        st["shd"] = st["shd"] + jnp.sum(jnp.where(doomed, 1, 0))
+        st = sim_clear(st, doomed)
+        st = release(st, doomed)
+        # (ii) backstop: the deadline column is a scheduled event
+        mask2 = st["sddl"] <= t
+        st["snd"] = st["snd"] & ~mask2
+        st = record_terminal(st, cn, st["so"], mask2, t,
+                             jnp.full(C, _OC_SHED, i32), st["sec"])
+        st["shd"] = st["shd"] + jnp.sum(jnp.where(mask2, 1, 0))
+        st = sim_clear(st, mask2 & (st["sm"] >= 0))
+        return release(st, mask2)
+
+    def phase_arrivals(st, cn, t):
+        B = cn["arr"].shape[0]
+
+        def cond(s):
+            return (s["ap"] < B) & (
+                cn["arrs"][jnp.clip(s["ap"], 0, B - 1)] <= t)
+
+        def body(s):
+            k = cn["clsord"][jnp.clip(s["ap"], 0, B - 1)]
+            return {**s, "ap": s["ap"] + 1,
+                    "qt": s["qt"].at[k].add(1)}
+
+        return lax.while_loop(cond, body, st)
+
+    def phase_queue_rejections(st, cn, t):
+        if not (pol.gates or cfg.deadline_sheds):
+            return st
+        if not pol.wants_forecast:
+            # paused entries die only by deadline (shed, not reject)
+            if cfg.priorities and cfg.deadline_sheds:
+                st = shed_paused_rows(st, cn, t, paused_doom(st, cn, t))
+            if not pol.gates:
+                return st
+            # rejection is a prefix of each class ring: elapsed decreases
+            # along the ring while the class cap is constant
+            B = cn["arr"].shape[0]
+            for k in range(K):
+                def cond(s, k=k):
+                    h = s["qh"][k]
+                    i = cn["members"][k, jnp.clip(h, 0, B - 1)]
+                    cap = cn["cap"][i]
+                    return (h < s["qt"][k]) & jnp.isfinite(cap) & (
+                        t - cn["arr"][i]
+                        > cap - pol.min_path_lat + pol.margin)
+
+                def body(s, k=k):
+                    i = cn["members"][k, jnp.clip(s["qh"][k], 0, B - 1)]
+                    one = jnp.full(1, i, i32)
+                    tt = jnp.full(1, True)
+                    s = record_terminal(s, cn, one, tt, t,
+                                        jnp.full(1, _OC_REJECTED, i32),
+                                        jnp.zeros(1, s["sec"].dtype))
+                    s["rad"] = s["rad"].at[i].set(t)
+                    s["rej"] = s["rej"] + 1
+                    return {**s, "qh": s["qh"].at[k].add(1)}
+
+                st = lax.while_loop(cond, body, st)
+            return st
+        return predictive_scan(st, cn, t)
+
+    def predictive_scan(st, cn, t):
+        """Host 2b under predictive admission: one pass over the merged
+        (class weight, arrival seq) queue order, handing the k-th *kept*
+        entry behind the free slots the k-th projected completion —
+        positions matter, so rejection is no longer a ring prefix and
+        rejected entries are tombstoned in the ``dead`` mask instead."""
+        B = cn["arr"].shape[0]
+        n_free = jnp.sum(jnp.where(st["sfree"], 1, 0))
+        act = st["je"] >= 0
+        if cfg.ps:
+            jr = job_rates(st, cn)
+            tc = st["tl"] + jnp.maximum(st["jrm"], 0.0) \
+                / jnp.where(act, jr, 1.0)
+        else:
+            tc = st["jtc"]
+        proj = jnp.sort(jnp.where(act, tc, jnp.inf))
+        nproj = jnp.sum(jnp.where(act, 1, 0))
+        proj_last = proj[jnp.clip(nproj - 1, 0, C - 1)]
+
+        big = jnp.iinfo(jnp.int64).max
+
+        def heads(s):
+            """Scan-local heads: paused cursor first (lower seqs), then
+            the fresh cursor (skipping prior tombstones)."""
+            out = []
+            for k in range(K):
+                if cfg.priorities:
+                    on_p = s["ppi"][k] < s["pn"][k]
+                    p_req = s["pb"][k, jnp.clip(s["ppi"][k], 0, P - 1)]
+                else:
+                    on_p = jnp.asarray(False)
+                    p_req = jnp.asarray(0, i32)
+                fh = s["pfh"][k]
+                f_ok = fh < s["qt"][k]
+                f_req = cn["members"][k, jnp.clip(fh, 0, B - 1)]
+                valid = on_p | f_ok
+                req = jnp.where(on_p, p_req, f_req)
+                out.append((valid, req, on_p))
+            return out
+
+        def cond(s):
+            any_v = jnp.asarray(False)
+            for valid, _, _ in heads(s):
+                any_v = any_v | valid
+            return any_v
+
+        def body(s):
+            hs = heads(s)
+            best_k = jnp.asarray(-1, i32)
+            best_w = jnp.asarray(-jnp.inf, st["sec"].dtype)
+            best_s = jnp.asarray(big, jnp.int64)
+            best_r = jnp.asarray(0, i32)
+            best_p = jnp.asarray(False)
+            for k, (valid, req, on_p) in enumerate(hs):
+                sq = jnp.where(valid, cn["seq"][req], big)
+                w = jnp.where(valid, cn["wcls"][k], -jnp.inf)
+                better = valid & ((w > best_w)
+                                  | ((w == best_w) & (sq < best_s)))
+                best_k = jnp.where(better, k, best_k)
+                best_w = jnp.where(better, w, best_w)
+                best_s = jnp.where(better, sq, best_s)
+                best_r = jnp.where(better, req, best_r)
+                best_p = jnp.where(better, on_p, best_p)
+            i = best_r
+            onehot = jnp.arange(K) == best_k
+            # paused head: deadline-certainty shed or keep
+            if cfg.priorities and cfg.deadline_sheds:
+                doom_p = best_p & paused_doom(s, cn, t)(i)
+            else:
+                doom_p = jnp.asarray(False)
+            # fresh head: forecast-gated rejection
+            j = s["pos"] - n_free
+            use_wf = (j >= 0) & (nproj > 0)
+            nproj_s = jnp.where(nproj > 0, nproj, 1)
+            g = (j // nproj_s).astype(st["sec"].dtype)
+            rix = jnp.clip(j % nproj_s, 0, C - 1)
+            wf = jnp.where(use_wf, jnp.maximum(
+                0.0, proj[rix] - t + g * (proj_last - t)), 0.0)
+            cap = cn["cap"][i]
+            rej = ~best_p & jnp.isfinite(cap) & (
+                t - cn["arr"][i] + pol.discount * wf
+                > cap - pol.min_path_lat + pol.margin)
+            kept = ~doom_p & ~rej
+            one = jnp.full(1, i, i32)
+            ec_term = jnp.where(doom_p, s["rpec"][i], 0.0) \
+                if cfg.priorities else jnp.asarray(0.0, st["sec"].dtype)
+            s = record_terminal(
+                s, cn, one, jnp.full(1, doom_p | rej), t,
+                jnp.full(1, jnp.where(doom_p, _OC_SHED, _OC_REJECTED), i32),
+                jnp.full(1, ec_term))
+            s["shd"] = s["shd"] + jnp.where(doom_p, 1, 0)
+            s["rej"] = s["rej"] + jnp.where(rej, 1, 0)
+            s["rad"] = scat_set(s["rad"], one, t, jnp.full(1, rej))
+            if cfg.priorities:
+                s["rpp"] = scat_set(s["rpp"], one, False,
+                                    jnp.full(1, doom_p))
+            s["dead"] = scat_set(s["dead"], one, True, jnp.full(1, rej))
+            s["pos"] = s["pos"] + jnp.where(kept, 1, 0)
+            # shed paused entries compact out of the buffer; the cursor
+            # stays (the next entry slid into its position)
+            if cfg.priorities:
+                row = s["pb"][best_k]
+                iota = jnp.arange(P)
+                drop = best_p & doom_p
+                comp = jnp.where((iota >= s["ppi"][best_k]) & drop,
+                                 jnp.roll(row, -1), row)
+                comp = comp.at[P - 1].set(
+                    jnp.where(drop, -1, comp[P - 1]))
+                s["pb"] = s["pb"].at[best_k].set(comp)
+                s["pn"] = s["pn"] - (onehot & drop).astype(s["pn"].dtype)
+                s["ppi"] = s["ppi"] + (onehot & best_p & ~doom_p).astype(
+                    s["ppi"].dtype)
+            s["pfh"] = s["pfh"] + (onehot & ~best_p).astype(s["pfh"].dtype)
+            # fresh cursor skips tombstones from earlier events
+            for k in range(K):
+                def scond(ss, k=k):
+                    h = ss["pfh"][k]
+                    hr = cn["members"][k, jnp.clip(h, 0, B - 1)]
+                    return (h < ss["qt"][k]) & ss["dead"][hr]
+
+                def sbody(ss, k=k):
+                    return {**ss, "pfh": ss["pfh"].at[k].add(1)}
+
+                s = lax.while_loop(scond, sbody, s)
+            return s
+
+        st = dict(st)
+        st["pos"] = jnp.asarray(0, jnp.int64)
+        st["pfh"] = st["qh"]
+        if cfg.priorities:
+            st["ppi"] = jnp.zeros(K, i32)
+        st = lax.while_loop(cond, body, st)
+        st.pop("pos")
+        st.pop("pfh")
+        st.pop("ppi", None)
+        return skip_dead(st, cn)
+
+    def any_preemptable(st, cn):
+        if not (cfg.priorities and cfg.preempt):
+            return jnp.asarray(False)
+        B = cn["arr"].shape[0]
+        valid, _, _, head_w = merged_head(st, cn)
+        insvc = (st["so"] >= 0) & (st["sm"] >= 0)
+        lower = insvc & (cn["wreq"][jnp.clip(st["so"], 0, B - 1)] < head_w)
+        return valid & lower.any()
+
+    def phase_preempt(st, cn, t):
+        if not (cfg.priorities and cfg.preempt):
+            return st
+        B = cn["arr"].shape[0]
+
+        def cond(s):
+            return ~s["sfree"].any() & any_preemptable(s, cn)
+
+        def body(s):
+            _, _, _, head_w = merged_head(s, cn)
+            insvc = (s["so"] >= 0) & (s["sm"] >= 0)
+            ownc = jnp.clip(s["so"], 0, B - 1)
+            cand = insvc & (cn["wreq"][ownc] < head_w)
+            rem = remaining_col(s, t)
+            # victim: lexicographic min of (weight, -remaining, slot)
+            k1 = jnp.where(cand, cn["wreq"][ownc], jnp.inf)
+            c2 = cand & (k1 == jnp.min(k1))
+            k2 = jnp.where(c2, -rem, jnp.inf)
+            c3 = c2 & (k2 == jnp.min(k2))
+            victim = jnp.argmax(c3)
+            i = s["so"][victim]
+            onehot_c = jnp.arange(C) == victim
+            remw = rem[victim]
+            s = dict(s)
+            s["rpu"] = s["rpu"].at[i].set(s["su"][victim])
+            s["rpm"] = s["rpm"].at[i].set(s["sm"][victim])
+            s["rpok"] = s["rpok"].at[i].set(s["sok"][victim])
+            s["rprm"] = s["rprm"].at[i].set(remw)
+            s["rpec"] = s["rpec"].at[i].set(s["sec"][victim])
+            s["rpdg"] = s["rpdg"].at[i].set(s["sdg"][victim])
+            s["pre"] = s["pre"] + 1
+            s["rpc"] = s["rpc"].at[i].add(1)
+            s = sim_clear(s, onehot_c)
+            s = release(s, onehot_c)
+            return paused_insert(s, cn, i, cn["cls"][i])
+
+        return lax.while_loop(cond, body, st)
+
+    def phase_admit(st, cn, t):
+        B = cn["arr"].shape[0]
+
+        def cond(s):
+            valid, _, _, _ = merged_head(s, cn)
+            return s["sfree"].any() & valid
+
+        def body(s):
+            _, k_idx, i, _ = merged_head(s, cn)
+            slot = jnp.argmax(s["sfree"])
+            onehot_c = jnp.arange(C) == slot
+            s = pop_head(s, cn, k_idx)
+            s = dict(s)
+            s["so"] = jnp.where(onehot_c, i, s["so"])
+            s["sfree"] = s["sfree"] & ~onehot_c
+            # fresh admission and paused resume, composed with masks
+            # (each writes the union of the host branches' columns; the
+            # non-taken branch writes the value the host left in place)
+            if cfg.priorities:
+                isp = s["rpp"][i]
+                s["su"] = jnp.where(onehot_c,
+                                    jnp.where(isp, s["rpu"][i], 0), s["su"])
+                s["sec"] = jnp.where(onehot_c,
+                                     jnp.where(isp, s["rpec"][i], 0.0),
+                                     s["sec"])
+                s["sm"] = jnp.where(onehot_c & isp, s["rpm"][i], s["sm"])
+                s["sok"] = jnp.where(onehot_c & isp, s["rpok"][i], s["sok"])
+                s["sdg"] = jnp.where(onehot_c,
+                                     isp & s["rpdg"][i], s["sdg"])
+            else:
+                isp = jnp.asarray(False)
+                s["su"] = jnp.where(onehot_c, 0, s["su"])
+                s["sec"] = jnp.where(onehot_c, 0.0, s["sec"])
+                s["sdg"] = jnp.where(onehot_c, False, s["sdg"])
+            if cfg.deadline_sheds:
+                t_d = cn["arr"][i] + cn["cap"][i]
+                s["sddl"] = jnp.where(
+                    onehot_c & jnp.isfinite(t_d) & (t_d > t),
+                    t_d, s["sddl"])
+            if cfg.priorities:
+                s["rpp"] = s["rpp"].at[i].set(False)
+                # resume: restart the paused stage on the calendar with
+                # the checkpointed remaining work (no replan)
+                w = cn["wreq"][i]
+                eng = cn["eom"][jnp.clip(s["rpm"][i], 0, M - 1)]
+                s["je"] = jnp.where(onehot_c & isp, eng, s["je"])
+                if cfg.ps:
+                    s["jrm"] = jnp.where(onehot_c & isp,
+                                         s["rprm"][i], s["jrm"])
+                else:
+                    s["jtc"] = jnp.where(onehot_c & isp,
+                                         t + s["rprm"][i], s["jtc"])
+                    s["jwk"] = jnp.where(onehot_c & isp,
+                                         s["rprm"][i], s["jwk"])
+                s["jw"] = jnp.where(onehot_c & isp, w, s["jw"])
+                s["wtd"] = s["wtd"] | (isp & (w != 1.0))
+                s["jsq"] = jnp.where(onehot_c & isp, s["ns"], s["jsq"])
+                s["ns"] = s["ns"] + jnp.where(isp, 1, 0)
+                s["res"] = s["res"] + jnp.where(isp, 1, 0)
+                s = lax.cond(isp, lambda ss: peak_update(ss, cn),
+                             lambda ss: ss, s)
+            s["rad"] = jnp.where(isp, s["rad"],
+                                 s["rad"].at[i].set(t))
+            s["adm"] = s["adm"] + jnp.where(isp, 0, 1)
+            s["snd"] = s["snd"] | (onehot_c & ~isp)
+            return s
+
+        return lax.while_loop(cond, body, st)
+
+    def phase_replan_dispatch(st, cn, t):
+        """Host steps 4-5b: ONE planner call over all capacity lanes,
+        downgrade-lane override, vectorized dispatch, overload trim."""
+        B = cn["arr"].shape[0]
+        st = dict(st)
+        st["rp"] = st["rp"] + 1
+        ownc = jnp.clip(st["so"], 0, B - 1)
+        el = t - cn["arr"][ownc]
+        if cfg.priorities:
+            el = el + cn["shift"][ownc]
+        el32 = el.astype(jnp.float32)
+        ec32 = st["sec"].astype(jnp.float32)
+        delay_row = jnp.zeros(E, jnp.float32)
+        if cfg.load_aware:
+            act = st["je"] >= 0
+            park = jnp.where(act, jnp.clip(st["je"], 0, E - 1), E)
+            if cfg.ps:
+                # FleetLoadModel.delays over the live (weighted) occupancy
+                occw = jnp.zeros(E + 1, st["sec"].dtype).at[park].add(
+                    jnp.where(act,
+                              st["jw"] if cfg.priorities else 1.0, 0.0))[:E]
+                dr64 = (jnp.maximum(1.0, (occw + 1.0) / cn["conc"]) - 1.0) \
+                    * cn["ms"]
+                # the host casts the dict values into a float32 row first
+                delay_row = jnp.where(cn["hasm"], dr64,
+                                      0.0).astype(jnp.float32)
+            if pol.wants_forecast and pol.backlog_delay > 0.0:
+                # backlog-drain anchor (PredictiveGate.forecast_delay_row):
+                # max against the float32 row in float64, like the host
+                if cfg.ps:
+                    rem = jnp.where(act, jnp.maximum(st["jrm"], 0.0), 0.0)
+                    jr = jnp.where(act, job_rates(st, cn), 0.0)
+                else:
+                    rem = jnp.where(act,
+                                    jnp.maximum(st["jtc"] - t, 0.0), 0.0)
+                    jr = jnp.where(act, 1.0, 0.0)
+                backlog = jnp.zeros(E + 1, rem.dtype).at[park].add(rem)[:E]
+                rate = jnp.zeros(E + 1, rem.dtype).at[park].add(jr)[:E]
+                drain = jnp.where(rate > 0, backlog / rate, 0.0)
+                delay_row = jnp.maximum(
+                    delay_row.astype(st["sec"].dtype),
+                    pol.backlog_delay * drain).astype(jnp.float32)
+        need = st["snd"]
+
+        # Plan ONLY the lanes that need dispatch, one width-1 kernel sweep
+        # per lane: the planner's math is lane-independent (per-request
+        # running minima over node tiles, identical tiling at any batch
+        # width), so the single-lane call is bit-identical to that lane of
+        # a capacity-wide call — but a steady-state event has 1-2 needy
+        # lanes, so this trades C full-trie sweeps for n_needed and is
+        # what makes the engine trie-size-robust (the batched form was
+        # ~C x slower per event on the 5461-node MathQA trie).  Downgraded
+        # lanes pick the min-cost scalar bundle per lane instead of a
+        # second capacity-wide sweep (the host uses a float64 search;
+        # divergence is possible at float32 resolution and documented in
+        # EVENT_ENGINE.md).
+        def plan_lane(c):
+            tgt, nxt, done = c
+            i = jnp.argmax(need & ~done)
+            pre1 = lax.dynamic_slice_in_dim(st["su"], i, 1)
+            el1 = lax.dynamic_slice_in_dim(el32, i, 1)
+            ec1 = lax.dynamic_slice_in_dim(ec32, i, 1)
+            t1, n1 = traced_fleet_plan(cn["td"], pre1, el1, ec1,
+                                       delay_row, cn["sc"],
+                                       kind=cfg.kind, variant=cfg.variant)
+            if pol.max_occupancy is not None and pol.downgrade:
+                dg1 = lax.dynamic_slice_in_dim(st["sdg"], i, 1)[0]
+                t1, n1 = lax.cond(
+                    dg1,
+                    lambda a: traced_fleet_plan(cn["td"], *a, cn["scdg"],
+                                                kind=cfg.kind_dg,
+                                                variant=cfg.variant),
+                    lambda a: (t1, n1), (pre1, el1, ec1, delay_row))
+            tgt = lax.dynamic_update_slice_in_dim(tgt, t1, i, 0)
+            nxt = lax.dynamic_update_slice_in_dim(nxt, n1, i, 0)
+            return tgt, nxt, done.at[i].set(True)
+
+        tgt, nxt, _ = lax.while_loop(
+            lambda c: (need & ~c[2]).any(), plan_lane,
+            (jnp.full(C, -1, i32), jnp.full(C, -1, i32),
+             jnp.zeros(C, bool)))
+        stop = need & (nxt < 0)
+        infeas = stop & (tgt < 0)
+        oc = jnp.full(C, _OC_SERVED, i32)
+        if pol.gates:
+            started = cn["depth"][st["su"]] > 0
+            shed_m = infeas & started
+            rej_m = infeas & ~started
+            oc = jnp.where(shed_m, _OC_SHED, oc)
+            oc = jnp.where(rej_m, _OC_REJECTED, oc)
+            st["shd"] = st["shd"] + jnp.sum(jnp.where(shed_m, 1, 0))
+            n_rej = jnp.sum(jnp.where(rej_m, 1, 0))
+            st["rej"] = st["rej"] + n_rej
+            st["adm"] = st["adm"] - n_rej
+        st = record_terminal(st, cn, st["so"], stop, t, oc, st["sec"])
+        start_m = need & (nxt >= 0)
+        d = cn["depth"][st["su"]]
+        row = cn["row"][ownc]
+        nxtc = jnp.clip(nxt, 0, M - 1)
+        sres = cn["tabs"][row, d, nxtc]
+        c = cn["tabc"][row, d, nxtc]
+        lat = cn["tabl"][row, d, nxtc]
+        st["sec"] = jnp.where(start_m, st["sec"] + c, st["sec"])
+        st["sm"] = jnp.where(start_m, nxt, st["sm"])
+        st["sok"] = jnp.where(start_m, sres, st["sok"])
+        # calendar starts, seq assigned in ascending slot order
+        rank = jnp.cumsum(jnp.where(start_m, 1, 0)) - 1
+        st["jsq"] = jnp.where(start_m, st["ns"] + rank, st["jsq"])
+        st["ns"] = st["ns"] + jnp.sum(jnp.where(start_m, 1, 0))
+        st["je"] = jnp.where(start_m, cn["eom"][nxtc], st["je"])
+        if cfg.ps:
+            st["jrm"] = jnp.where(start_m, lat, st["jrm"])
+        else:
+            st["jtc"] = jnp.where(start_m, t + lat, st["jtc"])
+            st["jwk"] = jnp.where(start_m, lat, st["jwk"])
+        if cfg.priorities:
+            w = cn["wreq"][ownc]
+            st["jw"] = jnp.where(start_m, w, st["jw"])
+            st["wtd"] = st["wtd"] | (start_m & (w != 1.0)).any()
+        st = release(st, stop)
+        st = peak_update(st, cn)
+        st["snd"] = jnp.zeros(C, bool)
+        if pol.max_occupancy is not None:
+            st = phase_overload(st, cn, t)
+        return st
+
+    def phase_overload(st, cn, t):
+        """Host 5b: per engine over its occupancy target, iteratively trim
+        the lowest goodput-per-token jobs (downgrade first, shed when
+        already downgraded) — CostAwareShed.overload_actions."""
+        maxo = pol.max_occupancy
+        for e in range(E):
+            def on_engine(s):
+                insvc = (s["so"] >= 0) & (s["sm"] >= 0)
+                return insvc & (cn["eom"][jnp.clip(s["sm"], 0, M - 1)] == e)
+
+            n0 = jnp.sum(jnp.where(on_engine(st), 1, 0))
+            excess = n0 - maxo
+
+            def cond(c):
+                s, taken, cnt = c
+                return cnt < excess
+
+            def body(c):
+                s, taken, cnt = c
+                cand = on_engine(s) & ~taken
+                acc = cn["bacc"][s["su"]]
+                remc = jnp.maximum(cn["mcost"][s["su"]] - s["sec"], 0.0)
+                score = jnp.where(
+                    jnp.isfinite(acc),
+                    jnp.maximum(acc, 0.0) / (s["sec"] + remc + 1e-9),
+                    -jnp.inf)
+                key = jnp.where(cand, score, jnp.inf)
+                pick = cand & (key == jnp.min(key))
+                victim = jnp.argmax(pick)
+                onehot_c = jnp.arange(C) == victim
+                dg = pol.downgrade & ~s["sdg"][victim]
+                s = dict(s)
+                s["sdg"] = jnp.where(onehot_c & dg, True, s["sdg"])
+                s["dgc"] = s["dgc"] + jnp.where(dg, 1, 0)
+                shed_m = onehot_c & ~dg
+                s = record_terminal(s, cn, s["so"], shed_m, t,
+                                    jnp.full(C, _OC_SHED, i32), s["sec"])
+                s["shd"] = s["shd"] + jnp.where(dg, 0, 1)
+                s = sim_clear(s, shed_m)
+                s = release(s, shed_m)
+                return s, taken | onehot_c, cnt + 1
+
+            st, _, _ = lax.while_loop(
+                cond, body, (st, jnp.zeros(C, bool), jnp.asarray(0, "int64")))
+        return st
+
+    def next_event_time(st, cn):
+        B = cn["arr"].shape[0]
+        t_arr = jnp.where(st["ap"] < B,
+                          cn["arrs"][jnp.clip(st["ap"], 0, B - 1)], jnp.inf)
+        tn = jnp.minimum(t_arr, next_completion(st, cn))
+        tn = jnp.minimum(tn, jnp.min(st["sddl"]))
+        if cfg.priorities and cfg.deadline_sheds:
+            req = jnp.clip(st["pb"], 0, B - 1)
+            activep = jnp.arange(P)[None, :] < st["pn"][:, None]
+            pddl = jnp.where(activep,
+                             cn["arr"][req] + cn["cap"][req], jnp.inf)
+            tn = jnp.minimum(tn, jnp.min(pddl))
+        return tn
+
+    def event_body(st, cn):
+        t = st["tn"]
+        st = {**st, "ev": st["ev"] + 1, "snd": jnp.zeros(C, bool)}
+        if cfg.ps:
+            act = st["je"] >= 0
+            jrm, tl = traced_advance(st["jrm"], st["tl"], t, st["je"],
+                                     st["jw"], act, cn["conc"], st["wtd"])
+            st = {**st, "jrm": jrm, "tl": tl}
+        st = phase_completions(st, cn, t)
+        st = phase_deadline_sheds(st, cn, t)
+        st = phase_arrivals(st, cn, t)
+        st = phase_queue_rejections(st, cn, t)
+
+        # 3-5 cycle: preempt -> admit/resume -> replan -> dispatch,
+        # repeated while freed slots can absorb queued arrivals
+        def cyc_cond(c):
+            st_, go = c
+            return go
+
+        def cyc_body(c):
+            s, _ = c
+            s = phase_preempt(s, cn, t)
+            s = phase_admit(s, cn, t)
+            need_any = s["snd"].any()
+            s = lax.cond(need_any,
+                         lambda ss: phase_replan_dispatch(ss, cn, t),
+                         lambda ss: ss, s)
+            valid, _, _, _ = merged_head(s, cn)
+            again = jnp.where(
+                need_any,
+                (s["sfree"].any() & valid) | any_preemptable(s, cn),
+                any_preemptable(s, cn))
+            return s, again
+
+        st, _ = lax.while_loop(cyc_cond, cyc_body,
+                               (st, jnp.asarray(True)))
+        return {**st, "tn": next_event_time(st, cn)}
+
+    def step(st, cn, t_hi):
+        def cond(s):
+            return jnp.isfinite(s["tn"]) & (s["tn"] <= t_hi)
+
+        return lax.while_loop(cond, lambda s: event_body(s, cn), st)
+
+    jitted = jax.jit(step, donate_argnums=(0,))
+    _ENGINE_CACHE[cfg] = jitted
+    return jitted
+
+
+def _tabulate_executor(executor: StageExecutor, requests: np.ndarray,
+                       probe: np.ndarray, t_start: float):
+    """Evaluate the executor over (unique request value, depth, model)
+    once, producing the dense (U, D, M) tables the traced dispatch
+    gathers from.  This is what makes executors compilable — and why the
+    compiled engine requires them to be pure functions of that triple
+    (the host loop passes the live event time; here every cell is probed
+    at ``t_start``).  ``probe`` is a (D, M) bool mask of the (depth,
+    model) pairs the trie can actually dispatch — only those cells are
+    evaluated, so executors (like the oracle's) that index stage tables
+    by depth never see out-of-range probes; unreachable cells stay at
+    benign zeros and are masked out of every traced use."""
+    uniq, row = np.unique(requests, return_inverse=True)
+    U = uniq.shape[0]
+    D, M = probe.shape
+    tab_s = np.zeros((U, D, M), dtype=bool)
+    tab_c = np.zeros((U, D, M), dtype=np.float64)
+    tab_l = np.zeros((U, D, M), dtype=np.float64)
+    for ui, rv in enumerate(uniq):
+        for d, m in zip(*np.nonzero(probe)):
+            s, c, lat = executor(int(rv), int(d), int(m), t_start)
+            tab_s[ui, d, m] = bool(s)
+            tab_c[ui, d, m] = float(c)
+            tab_l[ui, d, m] = float(lat)
+    return tab_s, tab_c, tab_l, row.astype(np.int32)
+
+
+def run_events_compiled(
+    trie: Trie,
+    ann: TrieAnnotations,
+    obj: Objective,
+    requests: np.ndarray,
+    executor: StageExecutor,
+    *,
+    arrivals: np.ndarray | None = None,
+    capacity: int | None = None,
+    policy: str = "dynamic",
+    admission=None,
+    classes: np.ndarray | None = None,
+    class_specs=None,
+    preempt: bool = True,
+    restrict_nodes: np.ndarray | None = None,
+    load_probe=None,
+    fleet_load=None,
+    t_start: float = 0.0,
+    plan_variant: str | None = None,
+    epoch: int = DEFAULT_EPOCH,
+    stream: bool = False,
+) -> tuple[list[ExecutionResult], EventStats]:
+    """Compiled twin of `repro.core.events.run_events` (same signature
+    plus ``epoch``/``stream``); see that function for the serving
+    semantics — the two are bit-compatible on the differential oracle.
+
+    ``epoch`` sets how many arrivals each jitted step ingests before the
+    host drains progress scalars (a throughput/latency knob; any value
+    gives identical results and hits the same compiled program).  With
+    ``stream=True`` the per-request result list is NOT materialized:
+    the call returns ``(summary_dict, EventStats)`` where the summary
+    carries the streaming Welford moments, quantile histogram and
+    counters — constant host memory regardless of trace length (the
+    1M-request replay path, `benchmarks/trace_replay.py`).
+    """
+    if policy not in ("dynamic", "dynamic_load_aware"):
+        raise ValueError(f"unsupported events policy {policy!r}: the static "
+                         "baseline plans once per request — use run_cohort's "
+                         "scalar path")
+    if load_probe is not None:
+        raise NotImplementedError(
+            "compiled event engine cannot trace a host load_probe callback; "
+            "use fleet_load=FleetLoadModel(...) or the host loop")
+    pol = get_policy(admission)
+    tpol = traced_admission(pol)  # raises for custom policy subclasses
+    requests = np.asarray(requests)
+    B = int(requests.shape[0])
+    if arrivals is None:
+        arrivals = np.zeros(B, dtype=np.float64)
+    else:
+        arrivals = np.asarray(arrivals, dtype=np.float64)
+        if arrivals.shape != (B,):
+            raise ValueError(f"arrivals shape {arrivals.shape} != ({B},)")
+        if B and (not np.all(np.isfinite(arrivals)) or arrivals.min() < 0):
+            raise ValueError("arrivals must be finite and non-negative")
+    if capacity is None:
+        capacity = B if arrivals.size == 0 or arrivals.max() == 0.0 \
+            else min(B, _DEFAULT_CAPACITY)
+    C = int(capacity)
+    if B and C < 1:
+        raise ValueError("capacity must be >= 1")
+
+    priorities = class_specs is not None
+    if not priorities and classes is not None:
+        raise ValueError("classes requires class_specs (the SLOClass table "
+                         "the indices point into)")
+    base_cap = obj.lat_cap if obj.lat_cap is not None else np.inf
+    if priorities:
+        specs = tuple(class_specs)
+        if not specs:
+            raise ValueError("class_specs must be a non-empty sequence of "
+                             "SLO classes")
+        cls_idx = (np.zeros(B, dtype=np.int64) if classes is None
+                   else np.asarray(classes, dtype=np.int64))
+        if cls_idx.shape != (B,):
+            raise ValueError(f"classes shape {cls_idx.shape} != ({B},)")
+        if B and (cls_idx.min() < 0 or cls_idx.max() >= len(specs)):
+            raise ValueError(
+                f"classes must index the {len(specs)} class_specs entries")
+        cap_cls = np.array([c.deadline_s if c.deadline_s is not None
+                            else base_cap for c in specs], dtype=np.float64)
+        w_cls = np.array([c.weight for c in specs], dtype=np.float64)
+        cap_req = cap_cls[cls_idx]
+        weight_req = w_cls[cls_idx]
+        K = len(specs)
+    else:
+        cls_idx = np.zeros(B, dtype=np.int64)
+        cap_req = np.full(B, base_cap)
+        weight_req = np.ones(B)
+        w_cls = np.ones(1)
+        K = 1
+
+    stats = EventStats(capacity=C, policy=pol.name,
+                       outcome=[SERVED] * B,
+                       arrival_t=arrivals.copy(),
+                       admit_t=np.zeros(B, dtype=np.float64),
+                       done_t=np.zeros(B, dtype=np.float64),
+                       class_of=cls_idx.copy() if priorities else None,
+                       preempt_count=np.zeros(B, dtype=np.int64))
+    if B == 0:
+        return ([], stats) if not stream else (
+            _empty_summary(stats), stats)
+
+    td = TrieDevice.build(trie, ann, restrict_nodes)
+    lat_shift = np.zeros(B)
+    eff_cap = None
+    if priorities:
+        finite = cap_req[np.isfinite(cap_req)]
+        eff_cap = float(finite.max()) if finite.size else None
+        if eff_cap is not None:
+            lat_shift = np.where(np.isfinite(cap_req),
+                                 eff_cap - cap_req, -np.inf)
+            # same float32 elapsed-shift resolution caveat as the host
+            # loop (see run_events): warn when the deadline spread makes
+            # the quantization material for the tightest class
+            step = float(np.spacing(np.float32(eff_cap)))
+            if step > 1e-3 * float(finite.min()):
+                warnings.warn(
+                    f"class deadline spread ({finite.min():.3g}s .. "
+                    f"{eff_cap:.3g}s) exceeds float32 elapsed-shift "
+                    f"resolution ({step:.3g}s at the largest cap): the "
+                    "planner's feasibility may lag the deadline "
+                    "bookkeeping by up to that much for tight classes",
+                    stacklevel=2)
+    plan_obj = obj if eff_cap is None \
+        else dataclasses.replace(obj, lat_cap=eff_cap)
+    engines = trie_engines(trie.template)
+    E = len(engines)
+    M = trie.template.n_models
+    max_depth = trie.template.max_depth
+    load_aware = policy == "dynamic_load_aware"
+
+    term_mask = trie.terminal.copy()
+    if restrict_nodes is not None:
+        keep = np.zeros(trie.n_nodes, dtype=bool)
+        keep[restrict_nodes] = True
+        term_mask &= keep
+    pol.bind(trie, ann, obj, term_mask)
+    tpol = traced_admission(pol)  # re-distill with bound min_path_lat
+    deadline_sheds = pol.shed_on_deadline and bool(
+        np.isfinite(cap_req).any())
+
+    # load coupling: the traced calendar needs the concrete
+    # EngineLoadModel parameters, not a duck-typed slowdown callable
+    conc = np.full(E, np.inf)
+    ms = np.ones(E)
+    hasm = np.zeros(E, dtype=bool)
+    ps = load_aware and fleet_load is not None
+    if ps:
+        from repro.serving.loadsim import EngineLoadModel, FleetLoadModel
+        if not isinstance(fleet_load, FleetLoadModel) or not all(
+                isinstance(m, EngineLoadModel)
+                for m in fleet_load.engines.values()):
+            raise NotImplementedError(
+                "compiled event engine supports FleetLoadModel with "
+                "EngineLoadModel entries; use the host loop for duck-typed "
+                "load models")
+        for j, e in enumerate(engines):
+            m = fleet_load.engines.get(e)
+            if m is not None:
+                conc[j] = float(m.concurrency)
+                ms[j] = float(fleet_load.mean_service_s.get(e, 1.0))
+                hasm[j] = True
+
+    order = np.argsort(arrivals, kind="stable")
+    seq_of = np.empty(B, dtype=np.int64)
+    seq_of[order] = np.arange(B)
+    members = np.full((K, B), -1, dtype=np.int32)
+    cls_ord = cls_idx[order].astype(np.int32)
+    for k in range(K):
+        mem_k = order[cls_ord == k]
+        members[k, :mem_k.size] = mem_k
+
+    # only (depth, model) pairs some trie node can dispatch get probed
+    probe = np.zeros((max_depth + 1, M), dtype=bool)
+    node_depth = trie.depth.astype(np.int64)
+    has_child = trie.child >= 0  # (n_nodes, M)
+    np.logical_or.at(probe, node_depth, has_child)
+    tab_s, tab_c, tab_l, row = _tabulate_executor(
+        executor, requests, probe, t_start)
+    best_acc, min_cost = _subtree_reductions(trie, ann, term_mask)
+
+    sketch = QuantileSketch.log_spaced()
+    cfg = _EngineConfig(
+        capacity=C, n_classes=K, n_engines=E, n_models=M,
+        max_depth=max_depth, priorities=priorities, preempt=bool(preempt),
+        ps=ps, load_aware=load_aware, deadline_sheds=deadline_sheds,
+        pol=tpol, kind=obj.kind, kind_dg="min_cost",
+        variant=_resolve_variant(plan_variant), n_bins=sketch.n_bins)
+    step = _build_step(cfg)
+
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        import jax.numpy as jnp
+
+        dg_obj = Objective("min_cost", acc_floor=-1.0,
+                           cost_cap=obj.cost_cap, lat_cap=plan_obj.lat_cap)
+        cn = {
+            "td": td,
+            "sc": objective_scalars(plan_obj),
+            "scdg": objective_scalars(dg_obj),
+            "arr": jnp.asarray(arrivals),
+            "arrs": jnp.asarray(arrivals[order]),
+            "cap": jnp.asarray(cap_req),
+            "wreq": jnp.asarray(weight_req),
+            "shift": jnp.asarray(lat_shift),
+            "seq": jnp.asarray(seq_of),
+            "cls": jnp.asarray(cls_idx.astype(np.int32)),
+            "clsord": jnp.asarray(cls_ord),
+            "members": jnp.asarray(members),
+            "wcls": jnp.asarray(w_cls),
+            "child": jnp.asarray(trie.child.astype(np.int32)),
+            "depth": jnp.asarray(trie.depth.astype(np.int32)),
+            "eom": jnp.asarray(
+                np.asarray(td.engine_of_model).astype(np.int32)),
+            "row": jnp.asarray(row),
+            "tabs": jnp.asarray(tab_s),
+            "tabc": jnp.asarray(tab_c),
+            "tabl": jnp.asarray(tab_l),
+            "conc": jnp.asarray(conc),
+            "ms": jnp.asarray(ms),
+            "hasm": jnp.asarray(hasm),
+            "bacc": jnp.asarray(best_acc),
+            "mcost": jnp.asarray(min_cost),
+            "edges": jnp.asarray(sketch.edges),
+        }
+        st = _init_state(jnp, cfg, B, arrivals[order])
+
+        arrs = arrivals[order]
+        chunk = max(int(epoch), 1)
+        pos = 0
+        while True:
+            pos = min(pos + chunk, B)
+            t_hi = np.inf if pos >= B else float(arrs[pos - 1])
+            st = step(st, cn, t_hi)
+            if pos >= B:
+                # arrivals exhausted: one final unbounded epoch drains
+                # every remaining completion/deadline event
+                break
+        n_done = int(st["don"])
+        if n_done != B:
+            raise RuntimeError(
+                f"compiled event loop stalled with work outstanding "
+                f"({n_done}/{B} requests terminal)")
+
+        stats.events = int(st["ev"])
+        stats.replans = int(st["rp"])
+        stats.admitted = int(st["adm"])
+        stats.rejected = int(st["rej"])
+        stats.shed = int(st["shd"])
+        stats.downgraded = int(st["dgc"])
+        stats.preemptions = int(st["pre"])
+        stats.resumed = int(st["res"])
+        stats.peak_occupancy = {
+            e: int(v) for e, v in zip(engines, np.asarray(st["po"]))}
+        sketch.merge_counts(np.asarray(st["hist"]))
+        if stream:
+            # constant-memory path: per-request columns stay on device and
+            # are never materialized as host-side python lists; the summary
+            # is O(1) scalars + the fixed-size quantile histogram
+            summary = {
+                "n_requests": B,
+                "events": stats.events,
+                "replans": stats.replans,
+                "served": B - stats.rejected - stats.shed,
+                "succeeded": int(jnp.sum(st["rsc"])),
+                "rejected": stats.rejected,
+                "shed": stats.shed,
+                "slo_violations": int(st["slo"]),
+                "latency": _wf(st["lw"]),
+                "cost": _wf(st["cw"]),
+                "latency_p50": sketch.quantile(0.5),
+                "latency_p95": sketch.quantile(0.95),
+                "latency_p99": sketch.quantile(0.99),
+            }
+            stats.preempt_count = np.zeros(0, dtype=np.int64)
+            stats.outcome = []
+            return summary, stats
+
+        roc = np.asarray(st["roc"])
+        rsc = np.asarray(st["rsc"])
+        rct = np.asarray(st["rct"])
+        ru = np.asarray(st["ru"])
+        stats.done_t = np.asarray(st["rdn"]).copy()
+        stats.admit_t = np.asarray(st["rad"]).copy()
+        stats.preempt_count = np.asarray(st["rpc"]).astype(np.int64)
+        stats.outcome = [_OUTCOMES[int(o)] for o in roc]
+        results = []
+        for i in range(B):
+            lat = float(stats.done_t[i] - stats.arrival_t[i])
+            slo = bool(np.isfinite(cap_req[i])) and lat > cap_req[i] + _SLO_TOL
+            mods = trie.path(int(ru[i]))
+            results.append(ExecutionResult(
+                success=bool(rsc[i]),
+                total_cost=float(rct[i]),
+                total_lat=lat,
+                models=mods,
+                n_stages=len(mods),
+                replan_overhead_s=0.0,
+                slo_violated=slo,
+                outcome=stats.outcome[i],
+            ))
+        return results, stats
+
+
+def _wf(wt) -> dict:
+    """Finalize a traced Welford triple into host floats."""
+    from repro.core.streaming import welford_finalize
+    return welford_finalize(tuple(float(x) for x in wt))
+
+
+def _empty_summary(stats: EventStats) -> dict:
+    from repro.core.streaming import welford_finalize, welford_init
+    z = welford_finalize(welford_init())
+    return {"n_requests": 0, "events": 0, "replans": 0, "served": 0,
+            "succeeded": 0, "rejected": 0, "shed": 0, "slo_violations": 0,
+            "latency": z, "cost": z, "latency_p50": float("nan"),
+            "latency_p95": float("nan"), "latency_p99": float("nan")}
+
+
+def _init_state(jnp, cfg: _EngineConfig, B: int, arrs_sorted: np.ndarray):
+    """Device state pytree at t=0 (first event = first arrival)."""
+    C, K, E = cfg.capacity, cfg.n_classes, cfg.n_engines
+    P = C
+    i32, i64, f64 = jnp.int32, jnp.int64, jnp.float64
+    st = {
+        "tn": jnp.asarray(float(arrs_sorted[0]), f64),
+        "tl": jnp.asarray(0.0, f64),
+        "ap": jnp.asarray(0, i64),
+        "ns": jnp.asarray(0, i64),
+        "wtd": jnp.asarray(False),
+        "ev": jnp.asarray(0, i64), "rp": jnp.asarray(0, i64),
+        "adm": jnp.asarray(0, i64), "rej": jnp.asarray(0, i64),
+        "shd": jnp.asarray(0, i64), "dgc": jnp.asarray(0, i64),
+        "pre": jnp.asarray(0, i64), "res": jnp.asarray(0, i64),
+        "don": jnp.asarray(0, i64), "slo": jnp.asarray(0, i64),
+        "po": jnp.zeros(E, i64),
+        "so": jnp.full(C, -1, i32),
+        "su": jnp.zeros(C, i32),
+        "sec": jnp.zeros(C, f64),
+        "sm": jnp.full(C, -1, i32),
+        "sok": jnp.zeros(C, bool),
+        "sdg": jnp.zeros(C, bool),
+        "sfree": jnp.ones(C, bool),
+        "snd": jnp.zeros(C, bool),
+        "sddl": jnp.full(C, jnp.inf, f64),
+        "je": jnp.full(C, -1, i32),
+        "jsq": jnp.zeros(C, i64),
+        "jtc": jnp.full(C, jnp.inf, f64),
+        "jwk": jnp.zeros(C, f64),
+        "jrm": jnp.full(C, jnp.inf, f64),
+        "jw": jnp.ones(C, f64),
+        "qh": jnp.zeros(K, i32),
+        "qt": jnp.zeros(K, i32),
+        "roc": jnp.full(B, _OC_SERVED, i32),
+        "rsc": jnp.zeros(B, bool),
+        "rct": jnp.zeros(B, f64),
+        "rdn": jnp.zeros(B, f64),
+        "rad": jnp.zeros(B, f64),
+        "ru": jnp.zeros(B, i32),
+        "rpc": jnp.zeros(B, i32),
+        "lw": (jnp.asarray(0.0, f64), jnp.asarray(0.0, f64),
+               jnp.asarray(0.0, f64)),
+        "cw": (jnp.asarray(0.0, f64), jnp.asarray(0.0, f64),
+               jnp.asarray(0.0, f64)),
+        "hist": jnp.zeros(cfg.n_bins, i64),
+    }
+    if cfg.priorities:
+        st.update({
+            "pb": jnp.full((K, P), -1, i32),
+            "pn": jnp.zeros(K, i32),
+            "rpu": jnp.zeros(B, i32),
+            "rpm": jnp.zeros(B, i32),
+            "rpok": jnp.zeros(B, bool),
+            "rprm": jnp.zeros(B, f64),
+            "rpec": jnp.zeros(B, f64),
+            "rpdg": jnp.zeros(B, bool),
+            "rpp": jnp.zeros(B, bool),
+        })
+    if cfg.pol.wants_forecast:
+        st["dead"] = jnp.zeros(B, bool)
+    return st
+
+
+def merge_stream_summaries(a: dict, b: dict) -> dict:
+    """Fold two streaming summaries (e.g. from sharded replays) — Welford
+    moments merge exactly; quantiles are not mergeable from the finalized
+    dict (merge the sketches' counts instead)."""
+    out = dict(a)
+    for key in ("n_requests", "events", "replans", "served", "succeeded",
+                "rejected", "shed", "slo_violations"):
+        out[key] = a[key] + b[key]
+    for key in ("latency", "cost"):
+        wa = (a[key]["count"], a[key]["mean"], a[key]["var"] * a[key]["count"])
+        wb = (b[key]["count"], b[key]["mean"], b[key]["var"] * b[key]["count"])
+        c, m, m2 = welford_merge(wa, wb)
+        var = m2 / c if c > 0 else 0.0
+        out[key] = {"count": c, "mean": m, "var": var,
+                    "std": float(np.sqrt(max(var, 0.0)))}
+    return out

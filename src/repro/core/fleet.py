@@ -63,6 +63,7 @@ class FleetStats:
 
     @property
     def total_replan_s(self) -> float:
+        """Total wall time spent in batched replans over the run."""
         return float(sum(self.replan_s_per_round))
 
     @property

@@ -23,6 +23,11 @@ from repro.core.trie import Trie, TrieAnnotations
 
 @dataclasses.dataclass
 class DriftReport:
+    """Outcome of one `DriftMonitor.check`: which trie nodes' live
+    conditional accuracies left the offline band, with z-scores and the
+    per-model live/offline latency ratios that triggered (or not) the
+    drift flag."""
+
     drifted_nodes: np.ndarray       # node ids whose live stats left the band
     z_scores: np.ndarray            # per-node drift z-scores (nan = no data)
     latency_ratio: dict[int, float] # per-model live/offline latency ratio
@@ -78,6 +83,9 @@ class DriftMonitor:
 
     # ------------------------------------------------------------------
     def check(self) -> DriftReport:
+        """Compare accumulated live stats against the offline annotations:
+        per-node success-rate z-test (nodes with >= ``min_obs`` samples)
+        plus per-model latency-ratio drift; see `DriftReport`."""
         n = self.trie.n_nodes
         z = np.full(n, np.nan)
         enough = self.count >= self.min_obs

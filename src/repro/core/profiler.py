@@ -59,11 +59,14 @@ class ProfileResult:
         return out
 
     def stage_cost_mean(self) -> np.ndarray:
+        """Per-node mean observed stage cost (0 where never executed)."""
         c = self.stage_count.copy().astype(np.float64)
         c[c == 0] = 1.0
         return self.stage_cost_sum / c
 
     def stage_lat_mean(self) -> np.ndarray:
+        """Per-node mean observed stage latency (0 where never
+        executed)."""
         c = self.stage_count.copy().astype(np.float64)
         c[c == 0] = 1.0
         return self.stage_lat_sum / c
@@ -88,6 +91,8 @@ class CheckpointStore:
         self.misses = 0
 
     def get(self, q: int, node: int):
+        """Checkpointed stage record for (request, node), or None —
+        counted as a hit or miss either way."""
         rec = self._store.get((q, node))
         if rec is not None:
             self.hits += 1
@@ -96,6 +101,8 @@ class CheckpointStore:
         return rec
 
     def put(self, q: int, node: int, rec: tuple[bool, float, float]) -> None:
+        """Store a stage record, FIFO-evicting past ``capacity``; an
+        existing key is kept (first execution wins)."""
         key = (q, node)
         if key in self._store:
             return

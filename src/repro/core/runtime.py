@@ -21,6 +21,11 @@ from repro.core.trie import Trie, TrieAnnotations
 
 @dataclasses.dataclass
 class ExecutionResult:
+    """Per-request outcome of any runtime (`run_request`, `run_fleet`,
+    `run_events`): realized success/cost/latency, the executed model
+    sequence, replanning overhead attributed to the request, and the
+    SLO/admission disposition."""
+
     success: bool
     total_cost: float
     total_lat: float
@@ -187,6 +192,9 @@ _SUMMARY_KEYS = ("accuracy", "goodput", "mean_cost", "mean_lat", "p99_lat",
 
 
 def summarize(results: list[ExecutionResult]) -> dict:
+    """Cohort-level aggregates over `ExecutionResult` rows — the fixed
+    `_SUMMARY_KEYS` schema every benchmark reports (all 0.0 for an empty
+    cohort)."""
     n = len(results)
     if n == 0:
         # empty cohort: every aggregate is defined as 0.0 (np.mean and

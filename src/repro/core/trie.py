@@ -22,6 +22,11 @@ from repro.core.workflow import WorkflowTemplate
 
 @dataclasses.dataclass
 class Trie:
+    """Preorder structure-of-arrays workflow trie (paper §4.1): every
+    node is a realized model-sequence prefix, stored so that a subtree is
+    a contiguous index interval and all per-node attributes are flat
+    numpy columns."""
+
     template: WorkflowTemplate
     # --- structure-of-arrays, all shape (n_nodes,) ---
     parent: np.ndarray          # int32, parent index; -1 for root
@@ -35,10 +40,12 @@ class Trie:
 
     @property
     def n_nodes(self) -> int:
+        """Number of trie nodes (prefixes), root included."""
         return int(self.parent.shape[0])
 
     @property
     def n_models(self) -> int:
+        """Number of models in the underlying workflow template."""
         return self.template.n_models
 
     # ------------------------------------------------------------------
@@ -46,6 +53,10 @@ class Trie:
     # ------------------------------------------------------------------
     @staticmethod
     def build(template: WorkflowTemplate) -> "Trie":
+        """Enumerate the template's admissible prefixes depth-first into
+        preorder SoA columns (children of a node appear in model-index
+        order; a subtree is the contiguous interval
+        ``[u, u + subtree_size[u])``)."""
         parent: list[int] = [-1]
         depth: list[int] = [0]
         model: list[int] = [-1]
@@ -127,6 +138,7 @@ class Trie:
         return int(u), int(u) + int(self.subtree_size[u])
 
     def descendants_mask(self, u: int) -> np.ndarray:
+        """Boolean (n_nodes,) mask of u's subtree (u included)."""
         lo, hi = self.descendants_interval(u)
         idx = np.arange(self.n_nodes)
         return (idx >= lo) & (idx < hi)
@@ -141,15 +153,20 @@ class Trie:
         return chain[::-1]
 
     def nodes_at_depth(self, d: int) -> np.ndarray:
+        """Node ids at exactly depth ``d`` (ascending)."""
         return np.nonzero(self.depth == d)[0]
 
     def leaves(self) -> np.ndarray:
+        """Node ids with no children (subtree of size 1)."""
         return np.nonzero(self.subtree_size == 1)[0]
 
     # ------------------------------------------------------------------
     # sanity
     # ------------------------------------------------------------------
     def validate(self) -> None:
+        """Assert the preorder/SoA invariants (root at 0, parents before
+        children, contiguous subtrees, consistent child table); raises
+        AssertionError on violation — test/debug helper."""
         assert self.parent[0] == -1 and self.depth[0] == 0
         # preorder property: parent < child, descendants contiguous
         assert np.all(self.parent[1:] < np.arange(1, self.n_nodes))
@@ -216,6 +233,9 @@ class TrieAnnotations:
     lat: np.ndarray
 
     def check_monotone(self, trie: Trie, atol: float = 1e-9) -> bool:
+        """True when acc/cost/lat are monotone non-decreasing along every
+        root->node edge (within ``atol``) — the property the planner's
+        pruning relies on."""
         p = trie.parent.copy()
         p[0] = 0
         ok = (

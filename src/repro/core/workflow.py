@@ -82,13 +82,16 @@ class WorkflowTemplate:
 
     @property
     def max_depth(self) -> int:
+        """Number of decision points (maximum workflow stages)."""
         return len(self.decisions)
 
     @property
     def n_models(self) -> int:
+        """Size of the model pool decisions index into."""
         return len(self.models)
 
     def model_names(self) -> list[str]:
+        """Model names in pool-index order."""
         return [m.name for m in self.models]
 
     def admissible(self, depth: int) -> tuple[int, ...]:
@@ -96,6 +99,8 @@ class WorkflowTemplate:
         return self.decisions[depth].models
 
     def tool_cost_latency(self, depth: int) -> tuple[float, float]:
+        """Summed (cost, latency) of the tool calls that run after the
+        decision at 0-based ``depth``."""
         tools = self.decisions[depth].tools_after
         return (sum(t.cost for t in tools), sum(t.latency for t in tools))
 

@@ -23,7 +23,6 @@ Everything is deterministic given ``seed``.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import numpy as np
 
@@ -51,6 +50,7 @@ class Workload:
 
     @property
     def n_requests(self) -> int:
+        """Number of requests in the generated workload."""
         return int(self.S.shape[0])
 
     # ------------------------------------------------------------------
@@ -212,22 +212,29 @@ def poisson_arrivals(n: int, rate: float, seed: int = 0) -> np.ndarray:
 
 
 def trace_arrivals(times, n: int | None = None,
-                   rate_scale: float = 1.0) -> np.ndarray:
+                   rate_scale: float = 1.0, seed: int = 0) -> np.ndarray:
     """Trace-replay arrival process: a 1-d sequence of finite, non-negative
     arrival offsets (seconds), sorted ascending (stable) — the form
     `run_events` consumes.
 
     ``n`` selects the first n arrivals of the (sorted) trace for a cohort
-    of n requests.  A trace *shorter* than n used to yield a zero-length
-    cohort downstream (the arrivals/requests shape check fails and callers
-    fell back to serving nothing); now the count is **clamped to the trace
-    length with a warning**, so the caller can trim its request cohort to
-    ``len(result)`` instead of crashing the slot math.
+    of n requests.  When ``n`` *exceeds* the trace length, the trace is
+    extended past its last arrival by bootstrap-resampling its own
+    empirical inter-arrival gaps with a `numpy` generator seeded by
+    ``seed`` — the extension replays the trace's arrival-rate statistics
+    instead of clamping the cohort (the old behavior) or deterministically
+    repeating the tail.  The result always has exactly ``n`` entries and
+    is deterministic given ``(times, n, rate_scale, seed)``; extending an
+    *empty* trace is a ``ValueError`` (there is no gap distribution to
+    resample).
 
     ``rate_scale`` replays the trace at a scaled arrival rate: timestamps
     are divided by it, so 2.0 compresses the trace to double the offered
     load and 0.5 stretches it to half — the standard knob for overload
-    sweeps over a recorded production trace."""
+    sweeps over a recorded production trace.  Scaling is applied before
+    extension, so resampled gaps are drawn from the *scaled* gap
+    distribution and the offered load stays consistent across the splice.
+    """
     t = np.asarray(times, dtype=np.float64)
     if t.ndim != 1:
         raise ValueError(f"arrival trace must be 1-d, got shape {t.shape}")
@@ -241,11 +248,16 @@ def trace_arrivals(times, n: int | None = None,
     if n < 0:
         raise ValueError("n must be >= 0")
     if n > t.size:
-        warnings.warn(
-            f"arrival trace has {t.size} entries but {n} were requested; "
-            f"clamping the cohort to {t.size} arrivals",
-            stacklevel=2)
-        n = t.size
+        if t.size == 0:
+            raise ValueError(f"cannot draw {n} arrivals from an empty "
+                             "trace: no inter-arrival distribution to "
+                             "resample")
+        # bootstrap the empirical gaps (including the initial offset from
+        # the virtual-clock origin, so 1-entry traces still extend)
+        gaps = np.diff(t, prepend=0.0)
+        rng = np.random.default_rng(seed)
+        extra = rng.choice(gaps, size=n - t.size, replace=True)
+        t = np.concatenate([t, t[-1] + np.cumsum(extra)])
     return t[:n]
 
 

@@ -506,6 +506,113 @@ class FleetEngineSim:
         self._weight[slot] = 1.0
 
 
+# ----------------------------------------------------------------------
+# traced calendar math (compiled event engine)
+# ----------------------------------------------------------------------
+# jnp mirrors of the FleetEngineSim drain arithmetic, for use INSIDE the
+# jitted epoch step of `repro.core.events_compiled`.  Each function is the
+# exact IEEE image of the numpy method it mirrors (same op order, float64
+# under `jax.experimental.enable_x64`), so the compiled engine's virtual
+# clock is bit-compatible with the host calendar: the differential-oracle
+# sweep pins this.  jax is imported lazily so this module stays importable
+# (numpy-only) for hosts that never touch the compiled path.
+
+
+def traced_engine_rates(occ, conc):
+    """(E,) shared processor-sharing rate per engine — the traced image of
+    `FleetEngineSim._rates` under the standard `EngineLoadModel` slowdown
+    ``max(1, occupancy / concurrency)``.
+
+    ``occ`` is the (E,) active-job count (float), ``conc`` the (E,) engine
+    concurrency.  Idle engines come out at rate 1.0 exactly like the host
+    (whose loop skips them)."""
+    import jax.numpy as jnp
+
+    return 1.0 / jnp.maximum(1.0, occ / conc)
+
+
+def traced_job_rates(job_engine, weight, active, rates, weighted):
+    """(C,) per-job drain rates — the traced image of
+    `FleetEngineSim._job_rates` (work-conserving bounded fair share with
+    water-filling; see that method's docstring for the algorithm).
+
+    ``job_engine``/``weight``/``active`` are the (C,) slot columns,
+    ``rates`` the (E,) shared engine rates, ``weighted`` a traced bool
+    mirroring the host's ``_weighted`` latch.  Both the plain and the
+    weighted shares are computed and selected on ``weighted`` so the
+    traced program never branches on data.  Idle lanes return 0.
+
+    Bit-compatibility note: per-engine weight sums reduce in XLA's
+    (unspecified) order vs numpy's sequential `bincount`; the result is
+    bit-identical whenever the weights are exactly summable (integers /
+    small powers of two — the priority-class convention), which is what
+    the differential oracle pins."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    E = rates.shape[0]
+    je_safe = jnp.clip(job_engine, 0, E - 1)
+    je_park = jnp.where(active, je_safe, E)  # park idle lanes off-engine
+    base = jnp.where(active, rates[je_safe], 0.0)
+
+    occ = jnp.zeros(E + 1, base.dtype).at[je_park].add(
+        jnp.where(active, 1.0, 0.0))[:E]
+    remaining0 = occ * rates
+
+    def cond(c):
+        return ~c[0]
+
+    def body(c):
+        _, r, fixed, remaining = c
+        free = active & ~fixed
+        freef = jnp.where(free, 1.0, 0.0)
+        sumw = jnp.zeros(E + 1, base.dtype).at[je_park].add(
+            weight * freef)[:E]
+        sumw_safe = jnp.where(sumw > 0.0, sumw, 1.0)
+        share = jnp.where(free,
+                          remaining[je_safe] * weight / sumw_safe[je_safe],
+                          0.0)
+        newly = free & (share >= 1.0)
+        any_free = free.any()
+        any_new = newly.any()
+        # host control flow: no free jobs -> done (r as-is); no newly
+        # capped -> r[free] = share, done; else cap, redistribute, loop
+        r = jnp.where(newly, 1.0, r)
+        r = jnp.where(any_free & ~any_new & free, share, r)
+        fixed = fixed | newly
+        remaining = remaining - jnp.zeros(E + 1, base.dtype).at[
+            je_park].add(jnp.where(newly, 1.0, 0.0))[:E]
+        done = ~any_free | (any_free & ~any_new)
+        return done, r, fixed, remaining
+
+    init = (jnp.asarray(False), jnp.zeros_like(base),
+            jnp.zeros_like(active), remaining0)
+    _, wf, _, _ = lax.while_loop(cond, body, init)
+    return jnp.where(weighted, wf, base)
+
+
+def traced_advance(remaining, t_last, t, job_engine, weight, active,
+                   conc, weighted):
+    """Drain the (C,) remaining-work column to virtual time ``t`` — the
+    traced image of `FleetEngineSim._advance` for processor-sharing
+    engines (unit-rate engines carry absolute completion times and never
+    drain).  Returns ``(remaining, t_last)``; same guard as the host
+    (positive dt and at least one active job), same single
+    ``remaining -= dt * job_rate`` update."""
+    import jax.numpy as jnp
+
+    dt = t - t_last
+    occ = jnp.zeros(conc.shape[0] + 1, remaining.dtype).at[
+        jnp.where(active, jnp.clip(job_engine, 0, conc.shape[0] - 1),
+                  conc.shape[0])].add(
+        jnp.where(active, 1.0, 0.0))[:conc.shape[0]]
+    rates = traced_engine_rates(occ, conc)
+    jr = traced_job_rates(job_engine, weight, active, rates, weighted)
+    do = (dt > 0.0) & active.any()
+    remaining = jnp.where(do & active, remaining - dt * jr, remaining)
+    return remaining, jnp.maximum(t_last, t)
+
+
 @dataclasses.dataclass
 class FleetLoadModel:
     """Self-induced load coupling for the fleet runtime.

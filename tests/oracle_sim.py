@@ -140,9 +140,12 @@ def class_specs_of(sc: Scenario):
                      weight=CLASS_WEIGHTS[1]))
 
 
-def run_subject(sc: Scenario):
+def run_subject(sc: Scenario, engine: str = "host"):
     """Replay the scenario through the real `run_events` engine; returns
-    (results, stats)."""
+    (results, stats).  ``engine="compiled"`` routes through the jitted
+    epoch-batched engine (`repro.core.events_compiled`) instead of the
+    host loop — the differential suites run both lanes against the same
+    oracle to pin bit-compatibility."""
     _, trie, ann, _ = _chain_setup(sc)
 
     def executor(q, d, m, t):
@@ -159,11 +162,14 @@ def run_subject(sc: Scenario):
                   fleet_load=FleetLoadModel(
                       engines=engines,
                       mean_service_s={e: 1.0 for e in engines}))
+    if engine not in ("host", "compiled"):
+        raise ValueError(f"unknown engine {engine!r}")
     return run_events(
         trie, ann, obj, np.arange(sc.n_requests), executor,
         arrivals=sc.arrivals, capacity=sc.capacity,
         admission=sc.admission, classes=sc.classes,
-        class_specs=class_specs_of(sc), preempt=sc.preempt, **kw)
+        class_specs=class_specs_of(sc), preempt=sc.preempt,
+        compiled=(engine == "compiled"), **kw)
 
 
 # ----------------------------------------------------------------------
@@ -468,9 +474,9 @@ def run_oracle(sc: Scenario) -> list[dict]:
     return out
 
 
-def assert_scenario_matches(sc: Scenario) -> None:
+def assert_scenario_matches(sc: Scenario, engine: str = "host") -> None:
     """Run subject and oracle on ``sc`` and assert they agree."""
-    res, stats = run_subject(sc)
+    res, stats = run_subject(sc, engine=engine)
     ref = run_oracle(sc)
     comp_subject = sorted(range(sc.n_requests),
                           key=lambda i: (round(stats.done_t[i], 6), i))

@@ -514,11 +514,14 @@ def test_sinusoidal_arrivals_sampler():
         sinusoidal_arrivals(-1, 1.0)
 
 
-def test_trace_arrivals_clamps_short_trace_with_warning():
-    # trace shorter than the requested cohort: clamp + warn, never empty
-    with pytest.warns(UserWarning, match="clamping the cohort"):
-        t = trace_arrivals([0.0, 1.0, 2.5], n=5)
-    assert t.tolist() == [0.0, 1.0, 2.5]
+def test_trace_arrivals_extends_short_trace():
+    # trace shorter than the requested cohort: extended by resampling the
+    # trace's own inter-arrival gaps — exactly n entries, sorted, with
+    # the original (sorted) trace as its prefix
+    t = trace_arrivals([0.0, 1.0, 2.5], n=5, seed=3)
+    assert t.shape == (5,)
+    assert t[:3].tolist() == [0.0, 1.0, 2.5]
+    assert np.all(np.diff(t) >= 0)
     # long enough: first n of the sorted trace
     t = trace_arrivals([3.0, 0.0, 1.5, 9.0], n=2)
     assert t.tolist() == [0.0, 1.5]
@@ -531,17 +534,17 @@ def test_trace_arrivals_clamps_short_trace_with_warning():
         trace_arrivals([0.0, 1.0], n=-1)
 
 
-def test_trace_arrivals_clamped_cohort_serves_end_to_end():
-    """The clamped arrival vector drives run_events without tripping the
-    shape check — the caller trims its cohort to len(arrivals)."""
+def test_trace_arrivals_extended_cohort_serves_end_to_end():
+    """The extended arrival vector drives run_events for the full
+    requested cohort — no shape-check trip, no trimmed requests."""
     _, trie, wl, ann = random_setup(17)
     execu = make_workload_executor(wl)
-    with pytest.warns(UserWarning):
-        arr = trace_arrivals([0.0, 0.2, 0.9], n=8)
+    arr = trace_arrivals([0.0, 0.2, 0.9], n=8, seed=17)
+    assert arr.shape == (8,)
     reqs = np.arange(len(arr))
     res, stats = run_events(trie, ann, Objective("max_acc"), reqs, execu,
                             arrivals=arr, capacity=2)
-    assert len(res) == 3 and stats.admitted == 3
+    assert len(res) == 8 and stats.admitted == 8
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,227 @@
+"""Tier-1 suite for the jitted epoch-batched event engine (ISSUE 6).
+
+The bit-compatibility bar is carried by the differential-oracle lanes in
+`test_oracle_differential.py` (chain workflows, exact grids); this module
+covers what the oracle cannot:
+
+- host-vs-compiled identity on *branching* tries with the full workload
+  generator (realistic annotations, load coupling, admission gates);
+- the ``stream=True`` constant-memory path: summary consistency against
+  the materialized per-request results, Welford moments, quantile-sketch
+  resolution, and the no-O(n)-host-lists guarantee;
+- `merge_stream_summaries` exactness for sharded replays;
+- dispatch plumbing: the ``compiled=`` switch in `run_events`, kwarg
+  validation, and the NotImplementedError fence around host-only
+  features (custom policies, ``load_probe``, duck-typed load models).
+"""
+import numpy as np
+import pytest
+from fleetlib import assert_results_identical, random_setup
+
+from repro.core.admission import AdmissionPolicy
+from repro.core.controller import Objective
+from repro.core.events import run_events
+from repro.core.events_compiled import (
+    merge_stream_summaries,
+    run_events_compiled,
+)
+from repro.core.runtime import make_workload_executor
+from repro.core.workload import SLOClass, poisson_arrivals, sample_classes
+from repro.serving.loadsim import EngineLoadModel, FleetLoadModel
+
+
+def _serving_setup(seed, n=24, rate=3.0):
+    """Branching workflow + open arrivals + a load-coupled fleet."""
+    rng, trie, wl, ann = random_setup(seed)
+    execu = make_workload_executor(wl)
+    engines = sorted({m.engine for m in trie.template.models})
+    load = FleetLoadModel(
+        engines={e: EngineLoadModel(e, concurrency=2, jitter=0.0)
+                 for e in engines},
+        mean_service_s={e: 1.0 for e in engines})
+    reqs = rng.choice(wl.n_requests, n, replace=False)
+    arrivals = poisson_arrivals(n, rate=rate, seed=seed)
+    lat_q = float(np.quantile(ann.lat[trie.terminal], 0.7))
+    return trie, ann, execu, load, reqs, arrivals, lat_q
+
+
+def _both_lanes(trie, ann, obj, reqs, execu, **kw):
+    host = run_events(trie, ann, obj, reqs, execu, **kw)
+    comp = run_events(trie, ann, obj, reqs, execu, compiled=True, **kw)
+    return host, comp
+
+
+def _assert_lanes_identical(host, comp):
+    hres, hstats = host
+    cres, cstats = comp
+    assert_results_identical(hres, cres)
+    for a, b in zip(hres, cres):
+        assert a.total_lat == b.total_lat  # bitwise
+        assert a.total_cost == b.total_cost
+        assert a.outcome == b.outcome and a.n_stages == b.n_stages
+    assert hstats.done_t.tolist() == cstats.done_t.tolist()
+    assert hstats.admit_t.tolist() == cstats.admit_t.tolist()
+    assert (hstats.admitted, hstats.rejected, hstats.shed) == \
+        (cstats.admitted, cstats.rejected, cstats.shed)
+    assert (hstats.preemptions, hstats.resumed) == \
+        (cstats.preemptions, cstats.resumed)
+    assert hstats.preempt_count.tolist() == cstats.preempt_count.tolist()
+    assert hstats.peak_occupancy == cstats.peak_occupancy
+
+
+@pytest.mark.parametrize("seed", [3, 11])
+def test_compiled_matches_host_branching_load_aware(seed):
+    """Branching trie + processor sharing + feasibility gate: the two
+    lanes must agree bit-for-bit on every per-request field."""
+    trie, ann, execu, load, reqs, arrivals, lat_q = _serving_setup(seed)
+    obj = Objective("max_acc", lat_cap=lat_q)
+    host, comp = _both_lanes(
+        trie, ann, obj, reqs, execu, arrivals=arrivals, capacity=4,
+        policy="dynamic_load_aware", fleet_load=load,
+        admission="feasibility")
+    _assert_lanes_identical(host, comp)
+
+
+def test_compiled_matches_host_priority_preempt():
+    """Priority classes + preemption + predictive gating, load-aware."""
+    trie, ann, execu, load, reqs, arrivals, lat_q = _serving_setup(7)
+    obj = Objective("max_acc", lat_cap=lat_q)
+    specs = (SLOClass("hi", deadline_s=lat_q * 0.75, weight=4.0),
+             SLOClass("lo", deadline_s=None, weight=1.0))
+    cls = sample_classes(len(reqs), (0.4, 0.6), seed=7)
+    host, comp = _both_lanes(
+        trie, ann, obj, reqs, execu, arrivals=arrivals, capacity=3,
+        policy="dynamic_load_aware", fleet_load=load,
+        admission="predictive", classes=cls, class_specs=specs,
+        preempt=True)
+    _assert_lanes_identical(host, comp)
+
+
+def test_compiled_matches_host_unit_calendar():
+    """No load model (unit-rate calendar), plain dynamic policy."""
+    trie, ann, execu, _, reqs, arrivals, lat_q = _serving_setup(19)
+    obj = Objective("max_acc", lat_cap=lat_q)
+    host, comp = _both_lanes(
+        trie, ann, obj, reqs, execu, arrivals=arrivals, capacity=4,
+        admission="feasibility")
+    _assert_lanes_identical(host, comp)
+
+
+# ----------------------------------------------------------------------
+# streaming (constant-memory) path
+# ----------------------------------------------------------------------
+def test_stream_summary_matches_materialized_results():
+    trie, ann, execu, load, reqs, arrivals, lat_q = _serving_setup(5)
+    obj = Objective("max_acc", lat_cap=lat_q)
+    kw = dict(arrivals=arrivals, capacity=4, policy="dynamic_load_aware",
+              fleet_load=load, admission="feasibility")
+    res, stats = run_events_compiled(trie, ann, obj, reqs, execu, **kw)
+    summary, sstats = run_events_compiled(trie, ann, obj, reqs, execu,
+                                          stream=True, **kw)
+    served = [r for r in res if r.outcome == "served"]
+    assert summary["n_requests"] == len(reqs)
+    assert summary["served"] == len(served)
+    assert summary["succeeded"] == sum(r.success for r in res)
+    assert summary["rejected"] == stats.rejected
+    assert summary["shed"] == stats.shed
+    assert summary["slo_violations"] == sum(r.slo_violated for r in res)
+    # Welford moments over the SERVED population, exact to rounding
+    lats = np.array([r.total_lat for r in served])
+    costs = np.array([r.total_cost for r in served])
+    assert summary["latency"]["count"] == len(served)
+    assert summary["latency"]["mean"] == pytest.approx(lats.mean(),
+                                                       rel=1e-12)
+    assert summary["latency"]["std"] == pytest.approx(lats.std(), rel=1e-9)
+    assert summary["cost"]["mean"] == pytest.approx(costs.mean(), rel=1e-12)
+    # sketch quantiles: upper edge of the rank bin — at least the true
+    # order statistic, at most one log-spaced bin (~3.3%) above it
+    for q, key in ((0.5, "latency_p50"), (0.95, "latency_p95"),
+                   (0.99, "latency_p99")):
+        exact = float(np.quantile(lats, q, method="inverted_cdf"))
+        assert summary[key] >= exact - 1e-9
+        assert summary[key] <= max(exact * 1.04, 1.1e-3)
+    # constant-memory guarantee: no O(n) per-request host lists
+    assert sstats.outcome == [] and sstats.preempt_count.size == 0
+    # counters still drain
+    assert (sstats.admitted, sstats.rejected, sstats.shed) == \
+        (stats.admitted, stats.rejected, stats.shed)
+
+
+def test_merge_stream_summaries_exact():
+    trie, ann, execu, load, _, _, lat_q = _serving_setup(9)
+    obj = Objective("max_acc", lat_cap=lat_q)
+    rng = np.random.default_rng(9)
+    shards = []
+    all_res = []
+    for shard_seed in (1, 2):
+        n = 16
+        reqs = rng.choice(100, n, replace=False)
+        arrivals = poisson_arrivals(n, rate=3.0, seed=shard_seed)
+        kw = dict(arrivals=arrivals, capacity=3,
+                  policy="dynamic_load_aware", fleet_load=load,
+                  admission="feasibility")
+        s, _ = run_events_compiled(trie, ann, obj, reqs, execu,
+                                   stream=True, **kw)
+        shards.append(s)
+        res, _ = run_events_compiled(trie, ann, obj, reqs, execu, **kw)
+        all_res.extend(res)
+    merged = merge_stream_summaries(shards[0], shards[1])
+    served = [r for r in all_res if r.outcome == "served"]
+    assert merged["n_requests"] == 32
+    assert merged["served"] == len(served)
+    assert merged["succeeded"] == sum(r.success for r in all_res)
+    lats = np.array([r.total_lat for r in served])
+    assert merged["latency"]["count"] == len(served)
+    assert merged["latency"]["mean"] == pytest.approx(lats.mean(),
+                                                      rel=1e-12)
+    assert merged["latency"]["std"] == pytest.approx(lats.std(), rel=1e-9)
+
+
+def test_empty_cohort_stream_summary():
+    trie, ann, execu, _, _, _, _ = _serving_setup(13)
+    summary, stats = run_events_compiled(
+        trie, ann, Objective("max_acc"), np.zeros(0, dtype=np.int64),
+        execu, arrivals=np.zeros(0), capacity=2, stream=True)
+    assert summary["n_requests"] == 0 and summary["served"] == 0
+    assert np.isnan(summary["latency_p99"])
+
+
+# ----------------------------------------------------------------------
+# dispatch plumbing and the host-only fence
+# ----------------------------------------------------------------------
+def test_run_events_rejects_compiled_kwargs_on_host_lane():
+    trie, ann, execu, _, reqs, arrivals, _ = _serving_setup(3, n=4)
+    with pytest.raises(TypeError, match="compiled=True"):
+        run_events(trie, ann, Objective("max_acc"), reqs, execu,
+                   arrivals=arrivals, epoch=64)
+
+
+def test_compiled_rejects_host_only_features():
+    trie, ann, execu, _, reqs, arrivals, _ = _serving_setup(3, n=4)
+    obj = Objective("max_acc")
+
+    class MyPolicy(AdmissionPolicy):
+        """Custom subclass: host-only (cannot be distilled to a trace)."""
+        name = "mine"
+
+    with pytest.raises(NotImplementedError):
+        run_events(trie, ann, obj, reqs, execu, arrivals=arrivals,
+                   compiled=True, admission=MyPolicy())
+    with pytest.raises(NotImplementedError):
+        run_events(trie, ann, obj, reqs, execu, arrivals=arrivals,
+                   compiled=True, load_probe=lambda t: {})
+
+    class DuckLoad:
+        """Duck-typed load model: host-only."""
+        engines = {}
+
+        def delays(self, inflight):
+            return {}
+
+        def slowdown(self, engine, n):
+            return 1.0
+
+    with pytest.raises(NotImplementedError):
+        run_events(trie, ann, obj, reqs, execu, arrivals=arrivals,
+                   compiled=True, policy="dynamic_load_aware",
+                   fleet_load=DuckLoad())

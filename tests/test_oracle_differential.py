@@ -9,6 +9,12 @@ and order, stage counts, costs, SLO flags, and preemption counts agree.
 in CI; this module pins a fixed seed sweep (with and without preemption,
 priority classes, processor sharing, and deadline policies) so the bare
 interpreter exercises the differential harness too.
+
+Every scenario runs in two lanes: ``engine="host"`` (the PR 5 Python
+event loop) and ``engine="compiled"`` (the jitted epoch-batched engine,
+`repro.core.events_compiled`) — the acceptance bar is that BOTH are
+bit-compatible with the oracle, which transitively pins the compiled
+engine to the host loop.
 """
 import numpy as np
 import pytest
@@ -20,23 +26,28 @@ from oracle_sim import (
     run_subject,
 )
 
+ENGINES = ("host", "compiled")
 
+
+@pytest.mark.parametrize("engine", ENGINES)
 @pytest.mark.parametrize("seed", range(40))
-def test_random_scenarios_match_oracle(seed):
-    assert_scenario_matches(random_scenario(seed))
+def test_random_scenarios_match_oracle(seed, engine):
+    assert_scenario_matches(random_scenario(seed), engine=engine)
 
 
+@pytest.mark.parametrize("engine", ENGINES)
 @pytest.mark.parametrize("seed", range(40, 60))
-def test_random_scenarios_match_oracle_preempt_toggled(seed):
+def test_random_scenarios_match_oracle_preempt_toggled(seed, engine):
     """The same drawn scenario must match with preemption forced both
     ways (the fuzz space leaves preempt random; force-cover both here)."""
     sc = random_scenario(seed)
     for pre in (False, True):
         sc2 = Scenario(**{**sc.__dict__, "preempt": pre})
-        assert_scenario_matches(sc2)
+        assert_scenario_matches(sc2, engine=engine)
 
 
-def test_handcrafted_preemption_scenario():
+@pytest.mark.parametrize("engine", ENGINES)
+def test_handcrafted_preemption_scenario(engine):
     """Binary-exact preemption walkthrough: one slot, a batch request in
     service, an interactive arrival preempts it, the batch work resumes
     and completes with nothing lost.
@@ -57,18 +68,69 @@ def test_handcrafted_preemption_scenario():
         lat_cap=None, admission="always", concurrency=None,
         classes=np.array([1, 0]), class_caps=(None, None), preempt=True,
     )
-    assert_scenario_matches(sc)
-    res, stats = run_subject(sc)
+    assert_scenario_matches(sc, engine=engine)
+    res, stats = run_subject(sc, engine=engine)
     assert stats.preemptions == 1 and stats.resumed == 1
     assert stats.done_t.tolist() == pytest.approx([3.0, 1.5])
     assert [r.success for r in res] == [True, True]
     assert [r.total_cost for r in res] == pytest.approx([0.125, 0.25])
+    assert stats.preempt_count.tolist() == [1, 0]
     # without preemption the high class waits its turn instead
     sc_fifo = Scenario(**{**sc.__dict__, "preempt": False})
-    assert_scenario_matches(sc_fifo)
-    _, st2 = run_subject(sc_fifo)
+    assert_scenario_matches(sc_fifo, engine=engine)
+    _, st2 = run_subject(sc_fifo, engine=engine)
     assert st2.preemptions == 0
     assert st2.done_t.tolist() == pytest.approx([2.0, 3.0])
+
+
+def test_compiled_engine_no_retrace_across_epoch_widths():
+    """The epoch width is a host-side chunking knob: every width must
+    reuse the same compiled program (the epoch boundary enters the step
+    as a traced float operand, never a static shape).  Pin zero retraces
+    after warmup across widths, and identical results."""
+    from repro.core.events_compiled import compiled_engine_cache_size
+
+    sc = random_scenario(7)
+    baseline, base_stats = run_subject(sc, engine="compiled")  # warmup
+    n0 = compiled_engine_cache_size()
+    assert n0 >= 1
+    for epoch in (1, 2, 3, sc.n_requests, 4096):
+        res, stats = run_subject_epoch(sc, epoch)
+        assert [r.outcome for r in res] == [r.outcome for r in baseline]
+        assert stats.done_t.tolist() == base_stats.done_t.tolist()
+    assert compiled_engine_cache_size() == n0, \
+        "epoch width changed the compiled program set"
+
+
+def run_subject_epoch(sc, epoch):
+    """run_subject in the compiled lane with an explicit epoch width."""
+    from repro.core.controller import Objective
+    from repro.core.events import run_events
+    from oracle_sim import _chain_setup, class_specs_of
+
+    _, trie, ann, _ = _chain_setup(sc)
+
+    def executor(q, d, m, t):
+        return bool(sc.succ[q, d]), float(sc.cost[q, d]), float(sc.work[q, d])
+
+    kw = {}
+    if sc.concurrency is not None:
+        from repro.serving.loadsim import EngineLoadModel, FleetLoadModel
+        engines = {f"e{e}": EngineLoadModel(f"e{e}",
+                                            concurrency=sc.concurrency,
+                                            jitter=0.0)
+                   for e in range(sc.n_engines)}
+        kw = dict(policy="dynamic_load_aware",
+                  fleet_load=FleetLoadModel(
+                      engines=engines,
+                      mean_service_s={e: 1.0 for e in engines}))
+    return run_events(
+        trie, ann, Objective("max_acc", lat_cap=sc.lat_cap),
+        np.arange(sc.n_requests), executor,
+        arrivals=sc.arrivals, capacity=sc.capacity,
+        admission=sc.admission, classes=sc.classes,
+        class_specs=class_specs_of(sc), preempt=sc.preempt,
+        compiled=True, epoch=epoch, **kw)
 
 
 def test_oracle_is_not_trivial():

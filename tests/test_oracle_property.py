@@ -48,6 +48,19 @@ def test_fuzz_scenarios_match_oracle_forced_preempt(seed, pre):
     assert_scenario_matches(Scenario(**{**sc.__dict__, "preempt": pre}))
 
 
+@given(seed=st.integers(0, 10**6), pre=st.booleans())
+@settings(max_examples=25, deadline=None)
+def test_fuzz_scenarios_match_oracle_compiled(seed, pre):
+    """Bounded fuzz lane through the jitted epoch-batched engine
+    (`repro.core.events_compiled`): the compiled engine must match the
+    oracle — and therefore the host loop — on the same drawn scenario
+    space, preemption forced both ways.  Bounded example count: each new
+    (config, cohort-shape) pair pays an XLA compile."""
+    sc = random_scenario(seed)
+    assert_scenario_matches(Scenario(**{**sc.__dict__, "preempt": pre}),
+                            engine="compiled")
+
+
 # ----------------------------------------------------------------------
 # conservation properties
 # ----------------------------------------------------------------------

@@ -58,22 +58,35 @@ def test_sinusoidal_single_and_zero_requests():
     assert one.shape == (1,) and one[0] > 0
 
 
-def test_trace_arrivals_short_trace_clamps_and_warns():
-    with pytest.warns(UserWarning, match="clamping the cohort"):
-        t = trace_arrivals([0.5, 0.0], n=7)
+def test_trace_arrivals_short_trace_extends_by_resampling():
+    """Regression: n > len(trace) extends the trace by bootstrapping its
+    own inter-arrival gaps (seeded), instead of clamping the cohort or
+    deterministically repeating the tail."""
+    t = trace_arrivals([0.5, 0.0], n=7, seed=11)
+    assert t.shape == (7,)
+    # prefix is the sorted trace, untouched
+    assert t[:2].tolist() == [0.0, 0.5]
+    # extension continues past the last arrival, sorted ascending
+    assert np.all(np.diff(t) >= 0) and t[-1] >= 0.5
+    # every synthesized gap is drawn from the empirical gap set {0.0, 0.5}
+    assert set(np.round(np.diff(t[1:]), 12)) <= {0.0, 0.5}
+    # deterministic given the seed, different across seeds (re-seeded,
+    # not a deterministic tail repeat)
+    assert np.array_equal(t, trace_arrivals([0.5, 0.0], n=7, seed=11))
+    diff = [not np.array_equal(t, trace_arrivals([0.5, 0.0], n=7, seed=s))
+            for s in range(5)]
+    assert any(diff)
+    # n == len(trace): exact, no extension
+    t = trace_arrivals([0.5, 0.0], n=2)
     assert t.tolist() == [0.0, 0.5]
-    # n == len(trace): exact, no warning
-    import warnings
-
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")
-        t = trace_arrivals([0.5, 0.0], n=2)
-    assert t.tolist() == [0.0, 0.5]
+    # a 1-entry trace still extends (the origin offset is its only gap)
+    one = trace_arrivals([0.25], n=4)
+    assert one.tolist() == [0.25, 0.5, 0.75, 1.0]
     # empty trace with n=0 is a valid empty cohort
     assert trace_arrivals([], n=0).shape == (0,)
-    # but asking for arrivals from an empty trace clamps to nothing
-    with pytest.warns(UserWarning):
-        assert trace_arrivals([], n=3).shape == (0,)
+    # but extending an empty trace has no gap distribution to resample
+    with pytest.raises(ValueError, match="empty"):
+        trace_arrivals([], n=3)
 
 
 def test_trace_arrivals_rate_scale_and_validation():

@@ -1,6 +1,6 @@
-"""Docs gate: markdown link integrity + a runnable README quickstart.
+"""Docs gate: link integrity, runnable quickstart, docstring coverage.
 
-Two checks, both cheap enough for every CI run (the `docs` job in
+Three checks, all cheap enough for every CI run (the `docs` job in
 .github/workflows/ci.yml):
 
 1. every relative link in README.md and docs/*.md resolves to an existing
@@ -9,7 +9,11 @@ Two checks, both cheap enough for every CI run (the `docs` job in
    file's headings when the target is markdown);
 2. the first ```python fence under README's "## Quickstart" heading is
    extracted and executed in a subprocess with src/ on PYTHONPATH — the
-   snippet users copy-paste first must actually run.
+   snippet users copy-paste first must actually run;
+3. every public function, class, and public method defined in
+   `repro.core` modules carries a docstring (ast-based, no imports).
+   "Public" means not underscore-prefixed, counting names inside public
+   classes; `@overload` stubs and trivial `__init__` bodies are exempt.
 
 Exit status is non-zero on any failure, with one line per problem.
 
@@ -17,6 +21,7 @@ Exit status is non-zero on any failure, with one line per problem.
 """
 from __future__ import annotations
 
+import ast
 import os
 import re
 import subprocess
@@ -98,6 +103,73 @@ def check_quickstart(readme_path: str) -> list[str]:
     return []
 
 
+def _needs_doc(node: ast.AST) -> bool:
+    """Functions/classes that must carry a docstring: public name, not an
+    ``@overload`` stub, not a trivial dataclass-style ``__init__``."""
+    if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+        return False
+    if node.name.startswith("_"):
+        return False
+    for dec in getattr(node, "decorator_list", []):
+        name = dec.id if isinstance(dec, ast.Name) else (
+            dec.attr if isinstance(dec, ast.Attribute) else None)
+        if name == "overload":
+            return False
+    return True
+
+
+def check_docstrings(pkg_dir: str) -> list[str]:
+    """Every public function/class/method in ``pkg_dir`` has a docstring.
+
+    Walks the package source with ``ast`` (no imports, so a broken module
+    reports a syntax error instead of crashing the gate) and reports one
+    line per undocumented public definition.  Nested private helpers and
+    anything inside a private class are skipped.
+    """
+    errors = []
+    for dirpath, _, files in os.walk(pkg_dir):
+        for fname in sorted(files):
+            if not fname.endswith(".py"):
+                continue
+            if fname.startswith("_") and fname != "__init__.py":
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, ROOT)
+            with open(path) as f:
+                try:
+                    tree = ast.parse(f.read(), filename=rel)
+                except SyntaxError as e:
+                    errors.append(f"{rel}: syntax error: {e}")
+                    continue
+            stack = [(tree, True)]
+            while stack:
+                node, public_scope = stack.pop()
+                for child in ast.iter_child_nodes(node):
+                    if not isinstance(child, (ast.FunctionDef,
+                                              ast.AsyncFunctionDef,
+                                              ast.ClassDef)):
+                        # only descend through real scopes; module-level
+                        # statements can't hide public defs
+                        if isinstance(node, ast.Module):
+                            continue
+                        continue
+                    is_public = public_scope and _needs_doc(child)
+                    if is_public and ast.get_docstring(child) is None:
+                        kind = ("class"
+                                if isinstance(child, ast.ClassDef)
+                                else "function")
+                        errors.append(
+                            f"{rel}:{child.lineno}: public {kind} "
+                            f"'{child.name}' has no docstring")
+                    # methods of public classes must be documented too;
+                    # bodies of functions (nested defs) are private scope
+                    descend_public = is_public and isinstance(
+                        child, ast.ClassDef)
+                    stack.append((child, descend_public))
+    return errors
+
+
 def main() -> int:
     docs = [os.path.join(ROOT, "README.md")]
     docs_dir = os.path.join(ROOT, "docs")
@@ -107,11 +179,13 @@ def main() -> int:
     errors = []
     for md in docs:
         errors += check_links(md)
+    errors += check_docstrings(os.path.join(ROOT, "src", "repro", "core"))
     errors += check_quickstart(os.path.join(ROOT, "README.md"))
     for e in errors:
         print(f"DOCS ERROR: {e}", file=sys.stderr)
     if not errors:
-        print(f"docs OK: {len(docs)} files link-checked, quickstart ran")
+        print(f"docs OK: {len(docs)} files link-checked, repro.core "
+              "docstrings complete, quickstart ran")
     return 1 if errors else 0
 
 
