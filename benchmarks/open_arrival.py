@@ -21,22 +21,58 @@ outcome-level consistency check, recording per-rate host-vs-compiled
 event throughput; `benchmarks/trace_replay.py` carries the hard >=10x
 floor at trace scale.
 
-    PYTHONPATH=src python -m benchmarks.open_arrival [--tiny]
+With ``--devices N`` (N > 1) the highest rate additionally replays
+through the lane-sharded compiled engine on N virtual CPU devices
+(provisioned below before jax loads), with the same outcome-equality
+bar and a zero-retrace guard; the row gains ``sharded_events_per_s``.
+
+    PYTHONPATH=src python -m benchmarks.open_arrival [--tiny] \\
+        [--devices N]
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
-import numpy as np
 
-from benchmarks.common import exact_ann, save_report, workload
-from repro.core.controller import Objective
-from repro.core.controller_jax import fleet_planner_cache_size
-from repro.core.events import run_events
-from repro.core.runtime import make_workload_executor, summarize
-from repro.core.workload import poisson_arrivals
-from repro.serving.loadsim import EngineLoadModel, FleetLoadModel
+def _devices_arg(argv) -> int | None:
+    """Peek ``--devices`` out of argv (pre-argparse: the XLA device count
+    must be pinned BEFORE anything imports jax)."""
+    for i, a in enumerate(argv):
+        val = None
+        if a == "--devices" and i + 1 < len(argv):
+            val = argv[i + 1]
+        elif a.startswith("--devices="):
+            val = a.split("=", 1)[1]
+        if val is not None:
+            return int(val)
+    return None
+
+
+# only peek argv when running AS this benchmark — other modules import
+# make_fleet_load from here and own their own --devices conventions
+_DEVICES = _devices_arg(sys.argv[1:]) if __name__ == "__main__" else None
+if _DEVICES and _DEVICES > 1 and \
+        "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") +
+        f" --xla_force_host_platform_device_count={_DEVICES}").strip()
+
+import numpy as np  # noqa: E402
+
+from benchmarks.common import exact_ann, save_report, workload  # noqa: E402
+from repro.core.controller import Objective  # noqa: E402
+from repro.core.controller_jax import fleet_planner_cache_size  # noqa: E402
+from repro.core.events import run_events  # noqa: E402
+from repro.core.events_compiled import (  # noqa: E402
+    compiled_engine_cache_size,
+)
+from repro.core.runtime import make_workload_executor, summarize  # noqa: E402
+from repro.core.workload import poisson_arrivals  # noqa: E402
+from repro.serving.loadsim import EngineLoadModel, FleetLoadModel  # noqa: E402
 
 FULL_RATES = (0.5, 1.0, 2.0, 4.0, 8.0, 16.0)   # requests/second
 TINY_RATES = (1.0, 4.0, 16.0)
@@ -58,7 +94,7 @@ def make_fleet_load(trie, wl, concurrency: int = 4) -> FleetLoadModel:
 
 
 def run(wf: str = "nl2sql_8", rates=FULL_RATES, n_requests: int = 192,
-        capacity: int = 32):
+        capacity: int = 32, devices: int | None = None):
     trie, wl = workload(wf)
     ann = exact_ann(wf)
     execu = make_workload_executor(wl)
@@ -107,6 +143,31 @@ def run(wf: str = "nl2sql_8", rates=FULL_RATES, n_requests: int = 192,
             raise RuntimeError(
                 f"compiled engine disagrees with the host loop at "
                 f"rate={rate}/s — run the differential oracle suite")
+        sharded = None
+        if devices and devices > 1 and rate == rates[-1]:
+            # lane-sharded replay of the hottest rate: same dispositions,
+            # one compiled program, recorded throughput
+            run_events(trie, ann, obj, reqs, execu, arrivals=arr,
+                       capacity=capacity, policy="dynamic_load_aware",
+                       fleet_load=load, compiled=True, devices=devices)
+            sc0 = compiled_engine_cache_size()
+            t0 = time.perf_counter()
+            sres, sstats = run_events(
+                trie, ann, obj, reqs, execu, arrivals=arr,
+                capacity=capacity, policy="dynamic_load_aware",
+                fleet_load=load, compiled=True, devices=devices)
+            sh_wall = time.perf_counter() - t0
+            if sc0 >= 0 and compiled_engine_cache_size() != sc0:
+                raise RuntimeError(
+                    f"sharded engine re-traced on a replay at "
+                    f"devices={devices} — device count must be the only "
+                    "static axis")
+            if any(a.outcome != b.outcome or a.models != b.models
+                   for a, b in zip(cres, sres)):
+                raise RuntimeError(
+                    f"sharded engine (devices={devices}) disagrees with "
+                    f"the single-device run at rate={rate}/s")
+            sharded = round(sstats.events / sh_wall, 1)
         s = summarize(res)
         rows.append({
             "workflow": wf,
@@ -126,6 +187,9 @@ def run(wf: str = "nl2sql_8", rates=FULL_RATES, n_requests: int = 192,
             "compiled_events_per_s": round(cstats.events / comp_wall, 1),
             "compiled_speedup": round(
                 (cstats.events / comp_wall) / (stats.events / host_wall), 2),
+            **({"sharded_devices": devices,
+                "sharded_events_per_s": sharded}
+               if sharded is not None else {}),
         })
     cache1 = fleet_planner_cache_size()
     retraces = (cache1 - cache0) if cache0 >= 0 and cache1 >= 0 else -1
@@ -152,21 +216,28 @@ def main():
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: small trie, 3 rates, small cohort")
     ap.add_argument("--workflow", default=None)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the compiled lane of the highest rate "
+                         "over N virtual CPU devices")
     args = ap.parse_args()
     wf = args.workflow or ("nl2sql_2" if args.tiny else "nl2sql_8")
     out = run(wf=wf,
               rates=TINY_RATES if args.tiny else FULL_RATES,
               n_requests=48 if args.tiny else 192,
-              capacity=16 if args.tiny else 32)
+              capacity=16 if args.tiny else 32,
+              devices=_DEVICES)
     print(out["derived"])
     for r in out["rows"]:
+        sh = (f" sharded@{r['sharded_devices']}dev="
+              f"{r['sharded_events_per_s']:.0f}ev/s"
+              if "sharded_events_per_s" in r else "")
         print(f"{r['workflow']:9s} rate={r['rate_rps']:5.1f}/s "
               f"goodput={r['goodput']:.3f} p99={r['p99_lat_s']:7.2f}s "
               f"wait={r['mean_queue_wait_s']:7.2f}s "
               f"peak_occ={r['peak_occupancy']:3d} "
               f"events={r['events']:4d} replans={r['replans']:4d} "
               f"({r['replan_us_per_planned_request']:.0f}us/req) "
-              f"compiled={r['compiled_speedup']:.1f}x")
+              f"compiled={r['compiled_speedup']:.1f}x{sh}")
 
 
 if __name__ == "__main__":

@@ -20,25 +20,66 @@ engine clears ``MIN_SPEEDUP``x the host loop, and unless the streaming
 stats are constant-memory (no O(n) host-side lists).  Results land in
 ``reports/bench/BENCH_replay.json``.
 
-    PYTHONPATH=src python -m benchmarks.trace_replay [--tiny]
+With ``--devices 1,2,4,8`` the run adds a lane-sharded sweep: a prefix of
+the trace replays through the sharded engine at each device count, the
+streaming summary is checked for EXACT equality against the single-device
+run (shard count must never change a disposition or a sketch bin), a
+zero-retrace guard pins one compiled program per device count, and the
+per-device-count throughput lands in the report under ``"sharded"``.  The
+virtual CPU devices are provisioned automatically (``XLA_FLAGS=
+--xla_force_host_platform_device_count``, set below before jax loads).
+
+    PYTHONPATH=src python -m benchmarks.trace_replay [--tiny] \\
+        [--devices 1,2,4,8]
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
-import numpy as np
 
-from benchmarks.common import exact_ann, save_report, workload
-from benchmarks.open_arrival import make_fleet_load
-from repro.core.controller import Objective
-from repro.core.events import run_events
-from repro.core.events_compiled import run_events_compiled
-from repro.core.runtime import make_workload_executor
-from repro.core.workload import poisson_arrivals, trace_arrivals
+def _devices_arg(argv) -> tuple[int, ...]:
+    """Peek ``--devices`` out of argv (pre-argparse: the XLA device count
+    must be pinned BEFORE anything imports jax, which the repro imports
+    below do transitively)."""
+    for i, a in enumerate(argv):
+        val = None
+        if a == "--devices" and i + 1 < len(argv):
+            val = argv[i + 1]
+        elif a.startswith("--devices="):
+            val = a.split("=", 1)[1]
+        if val is not None:
+            return tuple(int(x) for x in val.split(",") if x.strip())
+    return ()
+
+
+_DEVICES = _devices_arg(sys.argv[1:])
+if _DEVICES and max(_DEVICES) > 1 and \
+        "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") +
+        f" --xla_force_host_platform_device_count={max(_DEVICES)}").strip()
+
+import numpy as np  # noqa: E402
+
+from benchmarks.common import exact_ann, save_report, workload  # noqa: E402
+from benchmarks.open_arrival import make_fleet_load  # noqa: E402
+from repro.core.controller import Objective  # noqa: E402
+from repro.core.events import run_events  # noqa: E402
+from repro.core.events_compiled import (  # noqa: E402
+    compiled_engine_cache_size,
+    run_events_compiled,
+)
+from repro.core.runtime import make_workload_executor  # noqa: E402
+from repro.core.workload import poisson_arrivals, trace_arrivals  # noqa: E402
 
 MIN_SPEEDUP = 10.0      # ISSUE 6 acceptance: compiled >= 10x host events/s
 TRACE_SEED_LEN = 512    # length of the "recorded" arrival trace stub
+SHARDED_N = 4_000       # sharded-sweep prefix length (replicated compute
+                        # on virtual CPU devices multiplies real work)
 
 
 def _check_constant_memory(summary: dict, stats) -> None:
@@ -53,9 +94,43 @@ def _check_constant_memory(summary: dict, stats) -> None:
                                "Welford moment dict")
 
 
+def _sharded_sweep(trie, ann, obj, reqs, arr, execu, kw, ckw,
+                   devices: tuple[int, ...]) -> dict:
+    """Per-device-count replay of a trace prefix: exact summary equality
+    vs single-device, zero retraces, recorded throughput."""
+    sn = min(len(reqs), SHARDED_N)
+    sreqs, sarr = reqs[:sn], arr[:sn]
+
+    def one(d, **extra):
+        return run_events_compiled(trie, ann, obj, sreqs, execu,
+                                   arrivals=sarr, stream=True,
+                                   devices=d, **kw, **ckw, **extra)
+
+    base, _ = one(None)
+    per = []
+    for d in devices:
+        one(d)  # warm: compile this device count's program
+        c0 = compiled_engine_cache_size()
+        t0 = time.perf_counter()
+        summary, sstats = one(d)
+        wall = time.perf_counter() - t0
+        if c0 >= 0 and compiled_engine_cache_size() != c0:
+            raise RuntimeError(
+                f"sharded engine re-traced on a replay at devices={d} — "
+                "device count must be the only static axis")
+        if summary != base:
+            raise RuntimeError(
+                f"sharded replay summary diverged from single-device at "
+                f"devices={d} — dispositions/sketches must be exact")
+        _check_constant_memory(summary, sstats)
+        per.append({"devices": d, "wall_s": round(wall, 3),
+                    "events_per_s": round(summary["events"] / wall, 1)})
+    return {"n_requests": sn, "summary_identical": True, "per_devices": per}
+
+
 def replay(wf: str = "mathqa_4", n: int = 1_000_000, host_n: int = 20_000,
            rate: float = 8.0, capacity: int = 32, epoch: int | None = None,
-           warm: bool = False):
+           warm: bool = False, devices: tuple[int, ...] = ()):
     """Run both lanes, differential-check the prefix, return the report.
 
     ``warm=True`` (the --tiny CI mode) times a SECOND run of each lane so
@@ -116,11 +191,14 @@ def replay(wf: str = "mathqa_4", n: int = 1_000_000, host_n: int = 20_000,
     comp_wall = time.perf_counter() - t0
     _check_constant_memory(summary, sstats)
 
+    sharded = _sharded_sweep(trie, ann, obj, reqs, arr, execu, kw, ckw,
+                             devices) if devices else None
+
     host_eps = hstats.events / host_wall
     comp_eps = summary["events"] / comp_wall
     speedup = comp_eps / host_eps
     report = {
-        "schema": "bench_replay/v1",
+        "schema": "bench_replay/v2",
         "workflow": wf,
         "n_requests": n,
         "rate_rps": rate,
@@ -142,6 +220,7 @@ def replay(wf: str = "mathqa_4", n: int = 1_000_000, host_n: int = 20_000,
                      "p99_lat_s": round(summary["latency_p99"], 4)},
         "speedup": round(speedup, 2),
         "min_speedup": MIN_SPEEDUP,
+        "sharded": sharded,
     }
     save_report("BENCH_replay", report)
     if speedup < MIN_SPEEDUP:
@@ -160,10 +239,14 @@ def main():
                     help="replay size (default 1M, or 10k with --tiny)")
     ap.add_argument("--epoch", type=int, default=None,
                     help="epoch width override (default: engine default)")
+    ap.add_argument("--devices", type=str, default=None,
+                    help="comma list of device counts for the sharded "
+                         "sweep, e.g. 1,2,4,8 (virtual CPU devices are "
+                         "provisioned automatically)")
     args = ap.parse_args()
     n = args.n or (10_000 if args.tiny else 1_000_000)
     rep = replay(n=n, host_n=2_000 if args.tiny else 20_000,
-                 epoch=args.epoch, warm=args.tiny)
+                 epoch=args.epoch, warm=args.tiny, devices=_DEVICES)
     h, c = rep["host"], rep["compiled"]
     print(f"host     {h['events']:>9d} events in {h['wall_s']:8.2f}s  "
           f"({h['events_per_s']:>10.0f} ev/s, {h['n_requests']} reqs)")
@@ -171,6 +254,11 @@ def main():
           f"({c['events_per_s']:>10.0f} ev/s, {c['n_requests']} reqs)")
     print(f"speedup  {rep['speedup']:.1f}x (floor {MIN_SPEEDUP:.0f}x)  "
           f"goodput={c['goodput']:.3f} p99={c['p99_lat_s']:.2f}s")
+    if rep["sharded"]:
+        for row in rep["sharded"]["per_devices"]:
+            print(f"sharded  devices={row['devices']} "
+                  f"{row['events_per_s']:>10.0f} ev/s "
+                  f"({rep['sharded']['n_requests']} reqs, summary exact)")
 
 
 if __name__ == "__main__":

@@ -237,6 +237,124 @@ def _resident_plan(td, u, el, ec, delay_row, acc_floor, cost_cap, lat_cap,
                           lat_cap, kind=kind, variant=variant)
 
 
+# ----------------------------------------------------------------------
+# lane-sharded resident programs (multi-device control plane)
+# ----------------------------------------------------------------------
+# One compiled program per (mesh, ...) key, registered here so
+# `fleet_planner_cache_size` keeps covering every planner program the
+# process traced (the no-retrace guards sum this dict too).
+_SHARDED_JITS: dict[tuple, object] = {}
+
+
+def _mesh_key(mesh) -> tuple:
+    return tuple(d.id for d in np.asarray(mesh.devices).flat)
+
+
+def _sharded_scatter(mesh, n_cols: int):
+    """shard_map'd masked scatter into ``n_cols`` lane-sharded columns.
+
+    Each device owns one contiguous lane block [base, base + per): global
+    update indices outside the local block are remapped to the
+    out-of-range local index ``per``, which ``mode="drop"`` discards — so
+    every device applies the same replicated update batch to its own
+    block with ZERO collectives."""
+    key = ("scatter", n_cols, _mesh_key(mesh))
+    if key in _SHARDED_JITS:
+        return _SHARDED_JITS[key]
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    from repro.dist.sharding import LANE_AXIS, lane_spec
+    lane, rep = lane_spec(), PartitionSpec()
+
+    def scatter(cols, idx, vals):
+        per = cols[0].shape[0]
+        base = jax.lax.axis_index(LANE_AXIS) * per
+        loc = jnp.where((idx >= base) & (idx < base + per),
+                        idx - base, per)
+        return tuple(c.at[loc].set(v, mode="drop")
+                     for c, v in zip(cols, vals))
+
+    fn = jax.jit(shard_map(scatter, mesh=mesh,
+                           in_specs=(lane, rep, rep),
+                           out_specs=(lane,) * n_cols, check_rep=False),
+                 donate_argnums=(0,))
+    _SHARDED_JITS[key] = fn
+    return fn
+
+
+def _sharded_plan(mesh, kind: str, variant: str):
+    """shard_map'd lane-local replan: each device plans only its own lane
+    block (the planner is lane-independent, so block results are bitwise
+    the lanes of a capacity-wide call) against the replicated trie SoA and
+    the shared replicated (E,) delay row.  Zero collectives."""
+    key = ("plan", kind, variant, _mesh_key(mesh))
+    if key in _SHARDED_JITS:
+        return _SHARDED_JITS[key]
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    from repro.dist.sharding import lane_spec
+    lane, rep = lane_spec(), PartitionSpec()
+
+    def plan(td, u, el, ec, delay_row, acc_floor, cost_cap, lat_cap):
+        delays = jnp.broadcast_to(
+            delay_row[None, :], (u.shape[0], delay_row.shape[0]))
+        return _dispatch_plan(td, u, el, ec, delays, acc_floor, cost_cap,
+                              lat_cap, kind=kind, variant=variant)
+
+    fn = jax.jit(shard_map(
+        plan, mesh=mesh,
+        in_specs=(rep, lane, lane, lane, rep, rep, rep, rep),
+        out_specs=(lane, lane), check_rep=False))
+    _SHARDED_JITS[key] = fn
+    return fn
+
+
+def _sharded_plan_coupled(mesh, kind: str, variant: str):
+    """Load-coupled sharded replan: the per-engine delay row is derived
+    from the *resident* lane->engine occupancy columns, so each device
+    contributes its own lanes' partial occupancy row and exactly ONE
+    `psum` per replan round merges them — the only cross-shard coupling
+    in the sharded control plane (the delay row every lane's feasibility
+    test reads).  The slowdown model mirrors
+    ``FleetLoadModel.delays``: ``(max(1, (occ + 1) / conc) - 1) * ms``
+    on engines that have a load model (``hasm``)."""
+    key = ("plan_coupled", kind, variant, _mesh_key(mesh))
+    if key in _SHARDED_JITS:
+        return _SHARDED_JITS[key]
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    from repro.dist.sharding import LANE_AXIS, lane_spec
+    lane, rep = lane_spec(), PartitionSpec()
+
+    def plan(td, u, el, ec, park, w, conc, ms, hasm,
+             acc_floor, cost_cap, lat_cap):
+        E = conc.shape[0]
+        act = park >= 0
+        parkc = jnp.where(act, jnp.clip(park, 0, E - 1), E)
+        occ_part = jnp.zeros(E + 1, w.dtype).at[parkc].add(
+            jnp.where(act, w, 0.0))[:E]
+        occ = jax.lax.psum(occ_part, LANE_AXIS)  # the one collective
+        row = jnp.where(
+            hasm, (jnp.maximum(1.0, (occ + 1.0) / conc) - 1.0) * ms,
+            0.0).astype(jnp.float32)
+        delays = jnp.broadcast_to(row[None, :], (u.shape[0], E))
+        tgt, nxt = _dispatch_plan(td, u, el, ec, delays, acc_floor,
+                                  cost_cap, lat_cap, kind=kind,
+                                  variant=variant)
+        return tgt, nxt, row
+
+    fn = jax.jit(shard_map(
+        plan, mesh=mesh,
+        in_specs=(rep, lane, lane, lane, lane, lane,
+                  rep, rep, rep, rep, rep, rep),
+        out_specs=(lane, lane, rep), check_rep=False))
+    _SHARDED_JITS[key] = fn
+    return fn
+
+
 class ResidentPlanner:
     """Fleet replanner whose slot state lives on the device across events.
 
@@ -260,10 +378,29 @@ class ResidentPlanner:
     lat_cap - elapsed`` feasibility test evaluates every lane against its
     own class deadline.  Scalars are traced operands, so changing the cap
     value never re-traces.
+
+    ``mesh`` (a 1-D `repro.dist.sharding.lane_mesh`) shards the slot
+    columns over the lane axis: capacity is padded to a device multiple
+    (`lane_counts`; pad lanes are dead), updates become collective-free
+    masked block scatters, and the replan runs lane-locally per device —
+    bitwise the same lanes as the single-device call, since the planner
+    is lane-independent and the trie SoA is replicated.  `replan_coupled`
+    additionally derives the shared delay row from resident lane->engine
+    occupancy columns with exactly one `psum` per replan round (the only
+    cross-shard coupling).
+
+    The slot buffers are DONATED to the update scatter: a host-side
+    exception that interrupts a call (or any external consumer of the
+    donated arrays) leaves them invalidated, which `update`/`replan`
+    detect and report as a `RuntimeError` naming `reset` instead of the
+    runtime's opaque deleted-array error.  `reset` rematerializes zeroed
+    buffers; the host re-mirrors every lane it reads before reading it
+    (the staleness contract above), so serving resumes correctly.
     """
 
     def __init__(self, td: TrieDevice, obj: Objective, capacity: int,
-                 variant: str | None = None, lat_cap: float | None = None):
+                 variant: str | None = None, lat_cap: float | None = None,
+                 mesh=None):
         self.capacity = int(capacity)
         self.variant = _resolve_variant(variant)
         self._td = td
@@ -271,9 +408,20 @@ class ResidentPlanner:
         if lat_cap is not None:
             obj = dataclasses.replace(obj, lat_cap=float(lat_cap))
         self._scalars = _objective_scalars(obj)
-        self._u = jnp.zeros((self.capacity,), jnp.int32)
-        self._el = jnp.zeros((self.capacity,), jnp.float32)
-        self._ec = jnp.zeros((self.capacity,), jnp.float32)
+        self.mesh = mesh
+        if mesh is None:
+            self._n_lanes = self.capacity
+            self._sharding = None
+        else:
+            from repro.dist.sharding import lane_counts, lane_spec
+            self._n_lanes, _ = lane_counts(self.capacity, mesh)
+            self._sharding = jax.sharding.NamedSharding(mesh, lane_spec())
+            self._scatter3 = _sharded_scatter(mesh, 3)
+            self._scatter2 = _sharded_scatter(mesh, 2)
+            self._plan_fn = _sharded_plan(mesh, self._kind, self.variant)
+            self._plan_coupled_fn = _sharded_plan_coupled(
+                mesh, self._kind, self.variant)
+        self._materialize()
         # two fixed scatter widths: a small one for the few lanes a steady-
         # state event touches, and a capacity-wide one so an admission burst
         # is a single dispatch instead of ceil(C / width) sequential calls
@@ -282,10 +430,52 @@ class ResidentPlanner:
         # counter after the first replan, and the burst width must not trace
         # mid-sweep the first time a full cohort lands in one event
         for w in {self._w_small, self.capacity}:
-            self._scatter(np.full(w, self.capacity, dtype=np.int32),
+            self._scatter(np.full(w, self._n_lanes, dtype=np.int32),
                           np.zeros(w, dtype=np.int32),
                           np.zeros(w, dtype=np.float32),
                           np.zeros(w, dtype=np.float32))
+
+    def _materialize(self) -> None:
+        def zeros(dtype, fill=None):
+            a = (jnp.zeros((self._n_lanes,), dtype) if fill is None
+                 else jnp.full((self._n_lanes,), fill, dtype))
+            return a if self._sharding is None \
+                else jax.device_put(a, self._sharding)
+
+        self._u = zeros(jnp.int32)
+        self._el = zeros(jnp.float32)
+        self._ec = zeros(jnp.float32)
+        # lane->engine occupancy columns for `replan_coupled` (sharded
+        # mode only; -1 = lane holds no running stage)
+        self._park = None if self.mesh is None else zeros(jnp.int32, -1)
+        self._w = None if self.mesh is None else zeros(jnp.float32)
+
+    def _live_buffers(self):
+        bufs = [self._u, self._el, self._ec]
+        if self._park is not None:
+            bufs += [self._park, self._w]
+        return bufs
+
+    def _check_live(self) -> None:
+        try:
+            dead = any(b.is_deleted() for b in self._live_buffers())
+        except AttributeError:  # array type without deletion tracking
+            return
+        if dead:
+            raise RuntimeError(
+                "ResidentPlanner's device-resident slot buffers have been "
+                "invalidated: a previous update donated them and did not "
+                "complete (e.g. a host-side exception between events), so "
+                "the runtime deleted the storage.  Call reset() to "
+                "rematerialize zeroed buffers — the event loop re-mirrors "
+                "every lane it reads before reading it, so serving resumes "
+                "correctly — or construct a fresh planner.")
+
+    def reset(self) -> None:
+        """Rematerialize zeroed resident buffers after donation
+        invalidation (see `_check_live`).  Compiled programs are
+        unaffected — only the storage is rebuilt."""
+        self._materialize()
 
     def _scatter(self, idx, nu, nel, nec) -> None:
         with warnings.catch_warnings():
@@ -293,36 +483,89 @@ class ResidentPlanner:
             # (e.g. some CPU jaxlibs) — harmless, don't spam every event
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable")
-            self._u, self._el, self._ec = _apply_slot_updates(
-                self._u, self._el, self._ec, idx, nu, nel, nec)
+            if self.mesh is None:
+                self._u, self._el, self._ec = _apply_slot_updates(
+                    self._u, self._el, self._ec, idx, nu, nel, nec)
+            else:
+                self._u, self._el, self._ec = self._scatter3(
+                    (self._u, self._el, self._ec), idx, (nu, nel, nec))
+
+    def _pad(self, slots, *cols):
+        """Fixed-width update batch: pad index ``n_lanes`` lies outside
+        every lane block, so pad entries are dropped by the scatter."""
+        n = slots.shape[0]
+        w = self._w_small if n <= self._w_small else self.capacity
+        idx = np.full(w, self._n_lanes, dtype=np.int32)
+        idx[:n] = slots
+        out = [idx]
+        for c in cols:
+            buf = np.zeros(w, dtype=c.dtype)
+            buf[:n] = c
+            out.append(buf)
+        return out
 
     def update(self, slots, u_vals, el_vals, ec_vals) -> None:
         """Mirror host-side state for ``slots`` into the resident buffers."""
-        slots = np.asarray(slots, dtype=np.int32)
-        u_vals = np.asarray(u_vals, dtype=np.int32)
-        el_vals = np.asarray(el_vals, dtype=np.float32)
-        ec_vals = np.asarray(ec_vals, dtype=np.float32)
-        n = slots.shape[0]
-        w = self._w_small if n <= self._w_small else self.capacity
-        idx = np.full(w, self.capacity, dtype=np.int32)  # pad -> dropped
-        nu = np.zeros(w, dtype=np.int32)
-        nel = np.zeros(w, dtype=np.float32)
-        nec = np.zeros(w, dtype=np.float32)
-        idx[:n] = slots
-        nu[:n] = u_vals
-        nel[:n] = el_vals
-        nec[:n] = ec_vals
+        self._check_live()
+        idx, nu, nel, nec = self._pad(
+            np.asarray(slots, dtype=np.int32),
+            np.asarray(u_vals, dtype=np.int32),
+            np.asarray(el_vals, dtype=np.float32),
+            np.asarray(ec_vals, dtype=np.float32))
         self._scatter(idx, nu, nel, nec)
+
+    def update_loads(self, slots, engine_ids, weights) -> None:
+        """Mirror lane->engine occupancy (engine index or -1, weighted
+        share) for ``slots`` into the resident load columns that
+        `replan_coupled` derives the delay row from (sharded mode)."""
+        if self.mesh is None:
+            raise RuntimeError("update_loads requires a lane mesh "
+                               "(make_resident_planner(..., mesh=))")
+        self._check_live()
+        idx, pk, wv = self._pad(
+            np.asarray(slots, dtype=np.int32),
+            np.asarray(engine_ids, dtype=np.int32),
+            np.asarray(weights, dtype=np.float32))
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            self._park, self._w = self._scatter2(
+                (self._park, self._w), idx, (pk, wv))
 
     def replan(self, delay_row) -> tuple[np.ndarray, np.ndarray]:
         """One fused replan over all capacity lanes; returns host
         (targets, next_models).  ``delay_row`` is the (E,) shared delta_e
         vector for this instant."""
-        tgt, nxt = _resident_plan(
-            self._td, self._u, self._el, self._ec,
-            np.asarray(delay_row, dtype=np.float32),
-            *self._scalars, kind=self._kind, variant=self.variant)
-        return np.asarray(tgt), np.asarray(nxt)
+        self._check_live()
+        row = np.asarray(delay_row, dtype=np.float32)
+        if self.mesh is None:
+            tgt, nxt = _resident_plan(
+                self._td, self._u, self._el, self._ec, row,
+                *self._scalars, kind=self._kind, variant=self.variant)
+        else:
+            tgt, nxt = self._plan_fn(
+                self._td, self._u, self._el, self._ec, row, *self._scalars)
+        C = self.capacity
+        return np.asarray(tgt)[:C], np.asarray(nxt)[:C]
+
+    def replan_coupled(self, conc, ms, hasm):
+        """Load-coupled sharded replan: derives the per-engine delay row
+        from the resident occupancy columns (`update_loads`) with exactly
+        one `psum`, then plans every lane against it.  ``conc``/``ms``/
+        ``hasm`` are the (E,) `FleetLoadModel` parameter rows (traced
+        operands — value changes never retrace).  Returns host
+        ``(targets, next_models, delay_row)``."""
+        if self.mesh is None:
+            raise RuntimeError("replan_coupled requires a lane mesh "
+                               "(make_resident_planner(..., mesh=))")
+        self._check_live()
+        tgt, nxt, row = self._plan_coupled_fn(
+            self._td, self._u, self._el, self._ec, self._park, self._w,
+            np.asarray(conc, dtype=np.float32),
+            np.asarray(ms, dtype=np.float32),
+            np.asarray(hasm, dtype=bool), *self._scalars)
+        C = self.capacity
+        return np.asarray(tgt)[:C], np.asarray(nxt)[:C], np.asarray(row)
 
 
 def traced_fleet_plan(td: TrieDevice, prefixes, elapsed_lat, elapsed_cost,
@@ -358,13 +601,17 @@ def objective_scalars(obj: Objective):
 
 def make_resident_planner(td: TrieDevice, obj: Objective, capacity: int,
                           variant: str | None = None,
-                          lat_cap: float | None = None) -> ResidentPlanner:
+                          lat_cap: float | None = None,
+                          mesh=None) -> ResidentPlanner:
     """Device-resident fleet replanner for the event-driven runtime.
 
     ``lat_cap`` overrides the objective's latency cap with the effective
     (largest) per-class deadline so priority classes can express per-slot
-    deadlines through elapsed-latency shifts — see `ResidentPlanner`."""
-    return ResidentPlanner(td, obj, capacity, variant, lat_cap)
+    deadlines through elapsed-latency shifts — see `ResidentPlanner`.
+    ``mesh`` (from `repro.dist.sharding.lane_mesh`) shards the slot lanes
+    across devices — see `ResidentPlanner` for the partitioning and the
+    single-`psum` load coupling."""
+    return ResidentPlanner(td, obj, capacity, variant, lat_cap, mesh)
 
 
 def fleet_planner_cache_size() -> int:
@@ -372,8 +619,9 @@ def fleet_planner_cache_size() -> int:
     or -1 when the JAX runtime doesn't expose the counter.
 
     Covers the fleet-step program (one entry per trie shape x batch size x
-    objective kind x variant), the shared-delay batched form, and the
-    device-resident pair (slot-update scatter + resident replan).  The
+    objective kind x variant), the shared-delay batched form, the
+    device-resident pair (slot-update scatter + resident replan), and the
+    lane-sharded programs (one scatter/plan set per lane mesh).  The
     event-driven runtime pins its planner batch at the slot capacity and
     its scatter width at `_UPDATE_WIDTH` precisely so this stays flat while
     the number of in-flight requests fluctuates — tests and
@@ -381,7 +629,7 @@ def fleet_planner_cache_size() -> int:
     arrival-rate sweep."""
     total, found = 0, False
     for fn in (_fleet_step, _plan_shared_delays, _resident_plan,
-               _apply_slot_updates):
+               _apply_slot_updates, *_SHARDED_JITS.values()):
         try:
             total += int(fn._cache_size())
             found = True

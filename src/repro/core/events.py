@@ -187,6 +187,7 @@ def run_events(
     t_start: float = 0.0,
     plan_variant: str | None = None,
     compiled: bool = False,
+    devices: int | None = None,
     **compiled_kwargs,
 ) -> tuple[list[ExecutionResult], EventStats]:
     """Serve an open-arrival stream of ``requests`` event-by-event.
@@ -225,6 +226,13 @@ def run_events(
     raises ``NotImplementedError`` for host-only features (custom
     admission-policy subclasses, ``load_probe``, duck-typed fleet load
     models); see `docs/EVENT_ENGINE.md` for the support matrix.
+
+    ``devices`` shards the control plane over a 1-D lane mesh
+    (`repro.dist.sharding.lane_mesh`): the compiled engine partitions its
+    replan sweeps by lane residue class with one `psum` per replan round,
+    and the host loop shards the resident planner's slot columns —
+    either way dispositions and summaries are bit-identical at any
+    device count (docs/EVENT_ENGINE.md, "Sharding").
     """
     if policy not in ("dynamic", "dynamic_load_aware"):
         raise ValueError(f"unsupported events policy {policy!r}: the static "
@@ -238,7 +246,7 @@ def run_events(
             classes=classes, class_specs=class_specs, preempt=preempt,
             restrict_nodes=restrict_nodes, load_probe=load_probe,
             fleet_load=fleet_load, t_start=t_start,
-            plan_variant=plan_variant, **compiled_kwargs)
+            plan_variant=plan_variant, devices=devices, **compiled_kwargs)
     if compiled_kwargs:
         raise TypeError(f"unexpected keyword arguments for the host event "
                         f"loop: {sorted(compiled_kwargs)} (compiled=True "
@@ -260,6 +268,13 @@ def run_events(
     C = int(capacity)
     if B and C < 1:
         raise ValueError("capacity must be >= 1")
+    mesh_kw = {}
+    if devices is not None:
+        if int(devices) < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
+        if int(devices) > 1:
+            from repro.dist.sharding import lane_mesh
+            mesh_kw = {"mesh": lane_mesh(int(devices))}
 
     # ---- priority classes -------------------------------------------
     priorities = class_specs is not None
@@ -327,9 +342,10 @@ def run_events(
                     "bookkeeping by up to that much for tight classes",
                     stacklevel=2)
         planner = make_resident_planner(td, obj, C, variant=plan_variant,
-                                        lat_cap=eff_cap)
+                                        lat_cap=eff_cap, **mesh_kw)
     else:
-        planner = make_resident_planner(td, obj, C, variant=plan_variant)
+        planner = make_resident_planner(td, obj, C, variant=plan_variant,
+                                        **mesh_kw)
     engines = trie_engines(trie.template)
     E = len(engines)
     engine_of_model = np.asarray(td.engine_of_model, dtype=np.int64)

@@ -108,6 +108,7 @@ class _EngineConfig:
     kind_dg: str           # downgrade-lane objective kind (cost_aware)
     variant: str
     n_bins: int            # streaming histogram bins (incl. under/overflow)
+    n_shards: int = 1      # lane-axis mesh extent (1 = single device)
 
 
 _ENGINE_CACHE: dict[_EngineConfig, Callable] = {}
@@ -137,6 +138,7 @@ def _build_step(cfg: _EngineConfig):
     import jax.numpy as jnp
     from jax import lax
 
+    from repro.dist.sharding import LANE_AXIS
     from repro.serving.loadsim import traced_advance, traced_engine_rates, \
         traced_job_rates
 
@@ -768,6 +770,22 @@ def _build_step(cfg: _EngineConfig):
                     delay_row.astype(st["sec"].dtype),
                     pol.backlog_delay * drain).astype(jnp.float32)
         need = st["snd"]
+        if cfg.n_shards > 1:
+            # Sharded control plane: every device keeps the full replicated
+            # bookkeeping (the event loop is sequential and globally
+            # coupled), but the expensive part of a replan round — the
+            # per-lane trie sweeps below — is partitioned by residue class
+            # ``lane % n_shards == axis_index``.  Each device plans only
+            # its own needy lanes; the one `psum` after the sweep is the
+            # ONLY cross-device collective per replan round and carries the
+            # planned (target, next-model) pair back to every device.
+            # Lane-independence of the planner (see the sweep comment
+            # below) makes the merged result bit-identical to the
+            # single-device sweep.
+            mine = need & ((jnp.arange(C) % cfg.n_shards)
+                           == lax.axis_index(LANE_AXIS))
+        else:
+            mine = need
 
         # Plan ONLY the lanes that need dispatch, one width-1 kernel sweep
         # per lane: the planner's math is lane-independent (per-request
@@ -783,7 +801,7 @@ def _build_step(cfg: _EngineConfig):
         # EVENT_ENGINE.md).
         def plan_lane(c):
             tgt, nxt, done = c
-            i = jnp.argmax(need & ~done)
+            i = jnp.argmax(mine & ~done)
             pre1 = lax.dynamic_slice_in_dim(st["su"], i, 1)
             el1 = lax.dynamic_slice_in_dim(el32, i, 1)
             ec1 = lax.dynamic_slice_in_dim(ec32, i, 1)
@@ -803,9 +821,19 @@ def _build_step(cfg: _EngineConfig):
             return tgt, nxt, done.at[i].set(True)
 
         tgt, nxt, _ = lax.while_loop(
-            lambda c: (need & ~c[2]).any(), plan_lane,
+            lambda c: (mine & ~c[2]).any(), plan_lane,
             (jnp.full(C, -1, i32), jnp.full(C, -1, i32),
              jnp.zeros(C, bool)))
+        if cfg.n_shards > 1:
+            # the one collective per replan round: lanes are shifted +1 so
+            # an owner's infeasible plan (-1) and a non-owner's zero both
+            # decode to -1 after the sum (each needy lane has exactly one
+            # owner, so the sum IS the owner's value)
+            enc = lax.psum(jnp.stack([jnp.where(mine, tgt + 1, 0),
+                                      jnp.where(mine, nxt + 1, 0)]),
+                           LANE_AXIS)
+            tgt = jnp.where(need, enc[0] - 1, -1)
+            nxt = jnp.where(need, enc[1] - 1, -1)
         stop = need & (nxt < 0)
         infeas = stop & (tgt < 0)
         oc = jnp.full(C, _OC_SERVED, i32)
@@ -955,6 +983,25 @@ def _build_step(cfg: _EngineConfig):
 
         return lax.while_loop(cond, lambda s: event_body(s, cn), st)
 
+    if cfg.n_shards > 1:
+        # SPMD wrapper: every operand and result is REPLICATED (empty
+        # PartitionSpec) — the sequential event loop's bookkeeping must be
+        # identical on every device so the outer while_loops take the same
+        # trip counts everywhere (a collective inside a device-varying
+        # loop would deadlock).  What the mesh buys is the replan sweep:
+        # each device walks only its residue class of needy lanes
+        # (collective-free inner while_loop — device-varying trip counts
+        # are legal there), and one psum per replan round rebroadcasts the
+        # merged plans.  check_rep=False because jax cannot prove the
+        # psum output replicated through the surrounding loops.
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as PSpec
+
+        from repro.dist.sharding import lane_mesh
+        rep = PSpec()
+        step = shard_map(step, mesh=lane_mesh(cfg.n_shards),
+                         in_specs=(rep, rep, rep), out_specs=rep,
+                         check_rep=False)
     jitted = jax.jit(step, donate_argnums=(0,))
     _ENGINE_CACHE[cfg] = jitted
     return jitted
@@ -1008,10 +1055,12 @@ def run_events_compiled(
     plan_variant: str | None = None,
     epoch: int = DEFAULT_EPOCH,
     stream: bool = False,
+    devices: int | None = None,
 ) -> tuple[list[ExecutionResult], EventStats]:
     """Compiled twin of `repro.core.events.run_events` (same signature
-    plus ``epoch``/``stream``); see that function for the serving
-    semantics — the two are bit-compatible on the differential oracle.
+    plus ``epoch``/``stream``/``devices``); see that function for the
+    serving semantics — the two are bit-compatible on the differential
+    oracle.
 
     ``epoch`` sets how many arrivals each jitted step ingests before the
     host drains progress scalars (a throughput/latency knob; any value
@@ -1021,6 +1070,14 @@ def run_events_compiled(
     carries the streaming Welford moments, quantile histogram and
     counters — constant host memory regardless of trace length (the
     1M-request replay path, `benchmarks/trace_replay.py`).
+
+    ``devices`` shards the control plane's replan sweeps over a 1-D lane
+    mesh (`repro.dist.sharding.lane_mesh`): each device plans only the
+    needy lanes in its residue class and one `psum` per replan round
+    merges the plans — bit-identical dispositions and summaries at any
+    device count (docs/EVENT_ENGINE.md, "Sharding").  ``None``/``1``
+    keeps the single-device program unchanged.  On CPU hosts virtual
+    devices come from ``--xla_force_host_platform_device_count``.
     """
     if policy not in ("dynamic", "dynamic_load_aware"):
         raise ValueError(f"unsupported events policy {policy!r}: the static "
@@ -1169,13 +1226,21 @@ def run_events_compiled(
         executor, requests, probe, t_start)
     best_acc, min_cost = _subtree_reductions(trie, ann, term_mask)
 
+    n_shards = 1 if devices is None else int(devices)
+    if n_shards < 1:
+        raise ValueError(f"devices must be >= 1, got {devices}")
+    if n_shards > 1:
+        from repro.dist.sharding import lane_mesh
+        lane_mesh(n_shards)  # availability check: clear error + CPU recipe
+
     sketch = QuantileSketch.log_spaced()
     cfg = _EngineConfig(
         capacity=C, n_classes=K, n_engines=E, n_models=M,
         max_depth=max_depth, priorities=priorities, preempt=bool(preempt),
         ps=ps, load_aware=load_aware, deadline_sheds=deadline_sheds,
         pol=tpol, kind=obj.kind, kind_dg="min_cost",
-        variant=_resolve_variant(plan_variant), n_bins=sketch.n_bins)
+        variant=_resolve_variant(plan_variant), n_bins=sketch.n_bins,
+        n_shards=n_shards)
     step = _build_step(cfg)
 
     from jax.experimental import enable_x64
@@ -1243,11 +1308,12 @@ def run_events_compiled(
         stats.resumed = int(st["res"])
         stats.peak_occupancy = {
             e: int(v) for e, v in zip(engines, np.asarray(st["po"]))}
-        sketch.merge_counts(np.asarray(st["hist"]))
+        sketch.merge_counts(np.asarray(st["hist"]), edges=sketch.edges)
         if stream:
             # constant-memory path: per-request columns stay on device and
             # are never materialized as host-side python lists; the summary
-            # is O(1) scalars + the fixed-size quantile histogram
+            # is O(1) scalars + the fixed-size quantile histogram (carried
+            # under "sketch" so shard drains merge exactly)
             summary = {
                 "n_requests": B,
                 "events": stats.events,
@@ -1262,6 +1328,7 @@ def run_events_compiled(
                 "latency_p50": sketch.quantile(0.5),
                 "latency_p95": sketch.quantile(0.95),
                 "latency_p99": sketch.quantile(0.99),
+                "sketch": sketch.state(),
             }
             stats.preempt_count = np.zeros(0, dtype=np.int64)
             stats.outcome = []
@@ -1305,7 +1372,8 @@ def _empty_summary(stats: EventStats) -> dict:
     return {"n_requests": 0, "events": 0, "replans": 0, "served": 0,
             "succeeded": 0, "rejected": 0, "shed": 0, "slo_violations": 0,
             "latency": z, "cost": z, "latency_p50": float("nan"),
-            "latency_p95": float("nan"), "latency_p99": float("nan")}
+            "latency_p95": float("nan"), "latency_p99": float("nan"),
+            "sketch": QuantileSketch.log_spaced().state()}
 
 
 def _init_state(jnp, cfg: _EngineConfig, B: int, arrs_sorted: np.ndarray):
@@ -1373,9 +1441,15 @@ def _init_state(jnp, cfg: _EngineConfig, B: int, arrs_sorted: np.ndarray):
 
 
 def merge_stream_summaries(a: dict, b: dict) -> dict:
-    """Fold two streaming summaries (e.g. from sharded replays) — Welford
-    moments merge exactly; quantiles are not mergeable from the finalized
-    dict (merge the sketches' counts instead)."""
+    """Fold two streaming summaries (e.g. per-shard drains of a sharded
+    replay) into one — the merge is EXACT: counters add, Welford moments
+    combine via Chan's parallel update, and the quantile sketches (each
+    summary carries its histogram under ``"sketch"``) merge bin-by-bin
+    before the p50/p95/p99 fields are recomputed from the merged counts.
+    Sketch merging validates the bin edges bitwise and raises
+    ``ValueError`` when the two summaries were accumulated over different
+    binnings (or when only one side carries a sketch) — a silent merge of
+    incompatible histograms would corrupt every reported quantile."""
     out = dict(a)
     for key in ("n_requests", "events", "replans", "served", "succeeded",
                 "rejected", "shed", "slo_violations"):
@@ -1387,4 +1461,17 @@ def merge_stream_summaries(a: dict, b: dict) -> dict:
         var = m2 / c if c > 0 else 0.0
         out[key] = {"count": c, "mean": m, "var": var,
                     "std": float(np.sqrt(max(var, 0.0)))}
+    has_a, has_b = "sketch" in a, "sketch" in b
+    if has_a != has_b:
+        raise ValueError(
+            "cannot merge stream summaries: only one side carries a "
+            "quantile sketch — quantiles are not mergeable from the "
+            "finalized p50/p95/p99 fields alone")
+    if has_a:
+        sk = QuantileSketch.from_state(a["sketch"])
+        sk.merge(QuantileSketch.from_state(b["sketch"]))  # validates edges
+        out["sketch"] = sk.state()
+        out["latency_p50"] = sk.quantile(0.5)
+        out["latency_p95"] = sk.quantile(0.95)
+        out["latency_p99"] = sk.quantile(0.99)
     return out

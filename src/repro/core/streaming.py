@@ -87,8 +87,14 @@ class QuantileSketch:
     underflow in bin 0 and overflow in the last bin.  `update_indices`
     exposes the same binning for traced scatter-adds; `quantile` walks the
     cumulative counts and returns the upper edge of the bin containing the
-    requested rank (a conservative — never underestimating — quantile
-    within one bin of resolution).
+    rank-``floor(q * total) + 1`` order statistic (a conservative — never
+    underestimating — quantile within one bin of resolution).
+
+    Sketches merge EXACTLY (`merge` / `merge_counts`) — histogram addition
+    loses nothing — but only when both sides share the identical binning:
+    merging counts binned over different ``lo``/``hi``/``bins`` would
+    silently mis-assign every sample, so the merge path compares edges
+    bit-for-bit and raises on any mismatch.
     """
 
     edges: np.ndarray
@@ -136,24 +142,79 @@ class QuantileSketch:
         idx = self.update_indices(np.asarray(x, dtype=np.float64).ravel())
         np.add.at(self.counts, idx, 1)
 
-    def merge_counts(self, counts) -> None:
-        """Fold a drained device histogram (same binning) into this one."""
+    def merge_counts(self, counts, edges=None) -> None:
+        """Fold a drained device histogram into this one.
+
+        ``edges``, when provided, is the binning the drained counts were
+        accumulated under and must equal this sketch's edges EXACTLY
+        (bitwise) — counts binned over a different ``lo``/``hi``/``bins``
+        grid cannot be re-binned and would silently corrupt every
+        quantile, so a mismatch raises instead of merging."""
         counts = np.asarray(counts, dtype=np.int64)
+        if edges is not None:
+            edges = np.asarray(edges, dtype=np.float64)
+            if edges.shape != self.edges.shape or \
+                    not np.array_equal(edges, self.edges):
+                raise ValueError(
+                    "incompatible sketch binning: merged counts were "
+                    f"accumulated over edges {_edges_desc(edges)} but this "
+                    f"sketch bins over {_edges_desc(self.edges)}; sketches "
+                    "only merge exactly when built with identical "
+                    "lo/hi/bins")
         if counts.shape != self.counts.shape:
             raise ValueError(f"histogram shape {counts.shape} != "
                              f"{self.counts.shape}")
         self.counts = self.counts + counts
 
+    def merge(self, other: "QuantileSketch") -> None:
+        """Exact in-place merge of another sketch (identical edges only —
+        raises ``ValueError`` on any binning mismatch)."""
+        if not isinstance(other, QuantileSketch):
+            raise TypeError(f"expected QuantileSketch, got {type(other)}")
+        self.merge_counts(other.counts, edges=other.edges)
+
+    def state(self) -> dict:
+        """JSON-serializable ``{edges, counts}`` snapshot — the form the
+        streaming summaries carry so per-shard drains can be re-hydrated
+        with `from_state` and merged exactly."""
+        return {"edges": self.edges.tolist(),
+                "counts": self.counts.tolist()}
+
+    @staticmethod
+    def from_state(state: dict) -> "QuantileSketch":
+        """Rebuild a sketch from a `state` snapshot."""
+        return QuantileSketch(edges=np.asarray(state["edges"]),
+                              counts=np.asarray(state["counts"]))
+
     def quantile(self, q: float) -> float:
         """Upper edge of the bin holding the q-quantile (0 <= q <= 1);
         NaN when the sketch is empty.  Overflow-bin hits return the last
-        edge (the sketch's covered range was exceeded)."""
+        edge (the sketch's covered range was exceeded).
+
+        The rank convention is the right-continuous inverse CDF clamped
+        to the sample range: the returned edge covers order statistic
+        ``min(floor(q * total) + 1, total)``.  Concretely the walk finds
+        the first bin whose cumulative count strictly exceeds
+        ``q * total`` (for ``q == 1``, the last non-empty bin).  This
+        keeps the documented never-underestimates guarantee at the
+        boundaries: ``quantile(0.0)`` is the (upper bin edge of the)
+        minimum sample even when bin 0 is empty, exact-boundary ranks
+        (e.g. q=0.5 over an even count) resolve to the *later* of the two
+        straddling order statistics, and ``quantile(1.0)`` is the bin of
+        the maximum sample."""
         if not 0.0 <= q <= 1.0:
             raise ValueError("q must be in [0, 1]")
         total = self.total
         if total == 0:
             return float("nan")
-        rank = q * total
         cum = np.cumsum(self.counts)
-        b = int(np.searchsorted(cum, rank, side="left"))
+        b = int(np.searchsorted(cum, q * total, side="right"))
+        if b >= cum.size:  # q * total == total: bin of the max sample
+            b = int(np.searchsorted(cum, total, side="left"))
         return float(self.edges[min(b, self.edges.size - 1)])
+
+
+def _edges_desc(edges: np.ndarray) -> str:
+    """Compact human-readable description of a bin-edge vector."""
+    return (f"[{edges[0]:.6g} .. {edges[-1]:.6g}] "
+            f"({edges.size - 1} bins)")

@@ -8,9 +8,19 @@
 """
 from repro.dist.act_sharding import constrain, use_mesh_axes
 from repro.dist.pipeline import pipeline_forward, split_stages
-from repro.dist.sharding import batch_specs, cache_specs, sharding_tree, spec_tree
+from repro.dist.sharding import (
+    LANE_AXIS,
+    batch_specs,
+    cache_specs,
+    lane_counts,
+    lane_mesh,
+    lane_spec,
+    sharding_tree,
+    spec_tree,
+)
 
 __all__ = [
-    "batch_specs", "cache_specs", "constrain", "pipeline_forward",
-    "sharding_tree", "spec_tree", "split_stages", "use_mesh_axes",
+    "LANE_AXIS", "batch_specs", "cache_specs", "constrain", "lane_counts",
+    "lane_mesh", "lane_spec", "pipeline_forward", "sharding_tree",
+    "spec_tree", "split_stages", "use_mesh_axes",
 ]

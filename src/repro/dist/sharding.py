@@ -109,3 +109,48 @@ def sharding_tree(params, mesh):
         specs,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# ----------------------------------------------------------------------
+# control-plane lane sharding (the serving runtime's slot arrays)
+# ----------------------------------------------------------------------
+LANE_AXIS = "lanes"
+
+
+def lane_mesh(n_devices: int | None = None):
+    """1-D mesh over the first ``n_devices`` local devices, axis
+    ``"lanes"`` — the serving control plane's slot lanes shard over it
+    (`repro.core.controller_jax` sharded resident planner,
+    `repro.core.events_compiled` ``devices=``).  On CPU hosts, virtual
+    devices come from ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    set before jax initializes (the `repro.launch` harness idiom) — that
+    is how the multi-device lane is developed and CI'd without hardware.
+
+    ``n_devices=None`` uses every local device.  Raises ``ValueError``
+    when more devices are requested than exist, with the CPU recipe in
+    the message."""
+    avail = jax.devices()
+    n = len(avail) if n_devices is None else int(n_devices)
+    if n < 1:
+        raise ValueError(f"lane mesh needs >= 1 device, got {n}")
+    if n > len(avail):
+        raise ValueError(
+            f"lane mesh over {n} devices requested but only {len(avail)} "
+            f"visible — on CPU, set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} before jax "
+            "initializes (see docs/EVENT_ENGINE.md, 'Sharding')")
+    return jax.sharding.Mesh(np.array(avail[:n]), (LANE_AXIS,))
+
+
+def lane_spec() -> P:
+    """PartitionSpec sharding a leading slot-lane dim over `LANE_AXIS`."""
+    return P(LANE_AXIS)
+
+
+def lane_counts(n_lanes: int, mesh) -> tuple[int, int]:
+    """``(padded_lanes, lanes_per_shard)`` for ``n_lanes`` slot lanes on
+    ``mesh``: lanes are padded up to a multiple of the lane-axis extent so
+    every shard holds an equal block (pad lanes are dead — never read)."""
+    n_sh = int(mesh.shape[LANE_AXIS])
+    per = -(-int(n_lanes) // n_sh)
+    return per * n_sh, per

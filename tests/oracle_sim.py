@@ -140,12 +140,15 @@ def class_specs_of(sc: Scenario):
                      weight=CLASS_WEIGHTS[1]))
 
 
-def run_subject(sc: Scenario, engine: str = "host"):
+def run_subject(sc: Scenario, engine: str = "host",
+                devices: int | None = None):
     """Replay the scenario through the real `run_events` engine; returns
     (results, stats).  ``engine="compiled"`` routes through the jitted
     epoch-batched engine (`repro.core.events_compiled`) instead of the
     host loop — the differential suites run both lanes against the same
-    oracle to pin bit-compatibility."""
+    oracle to pin bit-compatibility.  ``devices`` shards the control
+    plane over a lane mesh (the sharded suite re-runs the sweep at
+    2/4/8 virtual devices)."""
     _, trie, ann, _ = _chain_setup(sc)
 
     def executor(q, d, m, t):
@@ -169,7 +172,7 @@ def run_subject(sc: Scenario, engine: str = "host"):
         arrivals=sc.arrivals, capacity=sc.capacity,
         admission=sc.admission, classes=sc.classes,
         class_specs=class_specs_of(sc), preempt=sc.preempt,
-        compiled=(engine == "compiled"), **kw)
+        compiled=(engine == "compiled"), devices=devices, **kw)
 
 
 # ----------------------------------------------------------------------
@@ -474,9 +477,10 @@ def run_oracle(sc: Scenario) -> list[dict]:
     return out
 
 
-def assert_scenario_matches(sc: Scenario, engine: str = "host") -> None:
+def assert_scenario_matches(sc: Scenario, engine: str = "host",
+                            devices: int | None = None) -> None:
     """Run subject and oracle on ``sc`` and assert they agree."""
-    res, stats = run_subject(sc, engine=engine)
+    res, stats = run_subject(sc, engine=engine, devices=devices)
     ref = run_oracle(sc)
     comp_subject = sorted(range(sc.n_requests),
                           key=lambda i: (round(stats.done_t[i], 6), i))

@@ -1,0 +1,221 @@
+"""Streaming-statistics regression tests (`repro.core.streaming`).
+
+Pins the two sketch bugs the sharded control plane would have amplified
+(every multi-device run merges per-shard drains):
+
+- `QuantileSketch.merge_counts` / `merge` must validate the bin EDGES,
+  not just the counts shape — merging sketches built over different
+  lo/hi/bins grids silently corrupts every quantile;
+- `QuantileSketch.quantile`'s rank convention at the boundaries: q=0
+  must return the minimum sample's bin (not the underflow bin's edge
+  when bin 0 is empty), exact-boundary ranks must resolve to the later
+  straddling order statistic, and q=1 must return the maximum sample's
+  bin — the documented never-underestimates guarantee.
+
+Plus the `merge_stream_summaries` sketch-carrying merge path the sharded
+replay relies on.
+"""
+import numpy as np
+import pytest
+
+from repro.core.events_compiled import merge_stream_summaries
+from repro.core.streaming import (
+    QuantileSketch,
+    welford_finalize,
+    welford_init,
+    welford_merge,
+    welford_update,
+)
+
+
+# ----------------------------------------------------------------------
+# quantile boundary-rank convention
+# ----------------------------------------------------------------------
+def test_quantile_zero_is_min_sample_bin_not_underflow_edge():
+    sk = QuantileSketch.log_spaced(lo=1e-3, hi=1e3, bins=64)
+    sk.add([5.0, 7.0, 9.0])  # bin 0 (underflow) stays EMPTY
+    q0 = sk.quantile(0.0)
+    # the bug returned edges[0] (= lo); the fix returns the upper edge of
+    # the bin holding the minimum sample, which can never underestimate it
+    assert q0 >= 5.0
+    assert q0 == sk.quantile(1e-9) or q0 >= 5.0
+    assert q0 < 7.0 * 1.5  # and it is the min's bin, not some later one
+
+
+def test_quantile_exact_boundary_rank_takes_later_order_statistic():
+    # two samples in a low bin, two in a high bin: rank q*total = 2 sits
+    # exactly on the low bin's cumulative boundary; order statistic
+    # floor(0.5 * 4) + 1 = 3 is the HIGH bin.  side="left" (the bug)
+    # returned the low bin, underestimating the conventional median.
+    sk = QuantileSketch.log_spaced(lo=1e-3, hi=1e3, bins=64)
+    lo_v, hi_v = 0.01, 100.0
+    sk.add([lo_v, lo_v, hi_v, hi_v])
+    assert sk.quantile(0.5) >= hi_v
+    # strictly below the boundary, the earlier bin is correct
+    assert sk.quantile(0.49) >= lo_v
+    assert sk.quantile(0.49) < hi_v
+
+
+def test_quantile_one_is_max_sample_bin():
+    sk = QuantileSketch.log_spaced(lo=1e-3, hi=1e3, bins=64)
+    sk.add([0.5, 2.0, 40.0])
+    q1 = sk.quantile(1.0)
+    assert q1 >= 40.0
+    # and it is the max's bin, not the histogram's last edge
+    assert q1 < 1e3
+
+
+def test_quantile_never_underestimates_inverted_cdf():
+    rng = np.random.default_rng(7)
+    samples = np.sort(rng.lognormal(mean=0.0, sigma=2.0, size=500))
+    sk = QuantileSketch.log_spaced()
+    sk.add(samples)
+    rel = (1e4 / 1e-3) ** (1 / 512) - 1  # one-bin relative resolution
+    n = samples.size
+    for q in (0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0):
+        # the sketch covers order statistic min(floor(q*n) + 1, n) — one
+        # later than inverted_cdf at exact-integer ranks (conservative)
+        exact = float(np.quantile(samples, q, method="inverted_cdf"))
+        covered = samples[min(int(np.floor(q * n)), n - 1)]
+        got = sk.quantile(q)
+        assert got >= exact - 1e-12, (q, got, exact)
+        assert got <= covered * (1 + rel) * (1 + 1e-9), (q, got, covered)
+
+
+def test_quantile_validation_and_empty():
+    sk = QuantileSketch.log_spaced(bins=8)
+    assert np.isnan(sk.quantile(0.5))
+    with pytest.raises(ValueError):
+        sk.quantile(-0.1)
+    with pytest.raises(ValueError):
+        sk.quantile(1.1)
+
+
+def test_quantile_underflow_and_overflow_bins():
+    sk = QuantileSketch.log_spaced(lo=1.0, hi=10.0, bins=8)
+    sk.add([0.1])      # underflow
+    assert sk.quantile(0.0) == sk.edges[0]
+    sk.add([100.0])    # overflow -> clamped to the last edge
+    assert sk.quantile(1.0) == sk.edges[-1]
+
+
+# ----------------------------------------------------------------------
+# merge validation (edges, not just shape)
+# ----------------------------------------------------------------------
+def test_merge_counts_rejects_incompatible_edges_same_shape():
+    a = QuantileSketch.log_spaced(lo=1e-3, hi=1e4, bins=64)
+    b = QuantileSketch.log_spaced(lo=1e-2, hi=1e5, bins=64)  # same SHAPE
+    b.add([1.0, 2.0])
+    assert a.counts.shape == b.counts.shape
+    with pytest.raises(ValueError, match="incompatible sketch binning"):
+        a.merge(b)
+    with pytest.raises(ValueError, match="incompatible sketch binning"):
+        a.merge_counts(b.counts, edges=b.edges)
+    # and the failed merge must not have mutated the target
+    assert a.total == 0
+
+
+def test_merge_counts_rejects_different_bin_count():
+    a = QuantileSketch.log_spaced(bins=64)
+    b = QuantileSketch.log_spaced(bins=128)
+    with pytest.raises(ValueError):
+        a.merge(b)
+    with pytest.raises(ValueError):
+        a.merge_counts(b.counts)  # shape check still applies without edges
+
+
+def test_merge_identical_binning_is_exact():
+    xs = np.array([0.02, 0.5, 3.0, 3.0, 700.0])
+    ys = np.array([0.01, 0.5, 9000.0])
+    a = QuantileSketch.log_spaced()
+    b = QuantileSketch.log_spaced()
+    u = QuantileSketch.log_spaced()
+    a.add(xs)
+    b.add(ys)
+    u.add(np.concatenate([xs, ys]))
+    a.merge(b)
+    assert np.array_equal(a.counts, u.counts)
+    for q in (0.0, 0.5, 0.95, 1.0):
+        assert a.quantile(q) == u.quantile(q)
+    with pytest.raises(TypeError):
+        a.merge(u.counts)  # sketches merge sketches, not raw arrays
+
+
+def test_state_round_trip():
+    sk = QuantileSketch.log_spaced(bins=16)
+    sk.add([0.1, 1.0, 10.0])
+    back = QuantileSketch.from_state(sk.state())
+    assert np.array_equal(back.edges, sk.edges)
+    assert np.array_equal(back.counts, sk.counts)
+    assert back.quantile(0.5) == sk.quantile(0.5)
+
+
+# ----------------------------------------------------------------------
+# welford
+# ----------------------------------------------------------------------
+def test_welford_merge_matches_single_stream():
+    rng = np.random.default_rng(3)
+    xs, ys = rng.random(100), rng.random(57)
+    wa, wb, wu = welford_init(), welford_init(), welford_init()
+    for x in xs:
+        wa = welford_update(wa, x)
+        wu = welford_update(wu, x)
+    for y in ys:
+        wb = welford_update(wb, y)
+        wu = welford_update(wu, y)
+    merged = welford_finalize(welford_merge(wa, wb))
+    ref = welford_finalize(wu)
+    assert merged["count"] == ref["count"]
+    assert merged["mean"] == pytest.approx(ref["mean"], rel=1e-12)
+    assert merged["var"] == pytest.approx(ref["var"], rel=1e-9)
+    # identity on empty sides
+    assert welford_merge(wa, welford_init()) == wa
+    assert welford_merge(welford_init(), wb) == wb
+
+
+# ----------------------------------------------------------------------
+# merge_stream_summaries carries and validates the sketch
+# ----------------------------------------------------------------------
+def _summary_of(lats, costs):
+    sk = QuantileSketch.log_spaced()
+    sk.add(lats)
+    wl, wc = welford_init(), welford_init()
+    for x in lats:
+        wl = welford_update(wl, x)
+    for x in costs:
+        wc = welford_update(wc, x)
+    n = len(lats)
+    return {
+        "n_requests": n, "events": n, "replans": n, "served": n,
+        "succeeded": n, "rejected": 0, "shed": 0, "slo_violations": 0,
+        "latency": welford_finalize(wl), "cost": welford_finalize(wc),
+        "latency_p50": sk.quantile(0.5), "latency_p95": sk.quantile(0.95),
+        "latency_p99": sk.quantile(0.99), "sketch": sk.state(),
+    }
+
+
+def test_merge_stream_summaries_recomputes_quantiles_from_merged_sketch():
+    rng = np.random.default_rng(11)
+    la, lb = rng.lognormal(size=40), rng.lognormal(size=25)
+    m = merge_stream_summaries(_summary_of(la, la), _summary_of(lb, lb))
+    union = _summary_of(np.concatenate([la, lb]),
+                        np.concatenate([la, lb]))
+    assert m["sketch"] == union["sketch"]
+    for key in ("latency_p50", "latency_p95", "latency_p99"):
+        assert m[key] == union[key]
+    assert m["latency"]["count"] == union["latency"]["count"]
+    assert m["latency"]["mean"] == pytest.approx(
+        union["latency"]["mean"], rel=1e-12)
+
+
+def test_merge_stream_summaries_rejects_incompatible_sketches():
+    a = _summary_of(np.array([1.0, 2.0]), np.array([1.0, 2.0]))
+    b = _summary_of(np.array([3.0]), np.array([3.0]))
+    b["sketch"] = QuantileSketch.log_spaced(lo=1e-2, hi=1e5,
+                                            bins=512).state()
+    with pytest.raises(ValueError, match="incompatible sketch binning"):
+        merge_stream_summaries(a, b)
+    c = _summary_of(np.array([3.0]), np.array([3.0]))
+    del c["sketch"]
+    with pytest.raises(ValueError, match="only one side carries"):
+        merge_stream_summaries(a, c)

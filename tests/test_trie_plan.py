@@ -199,3 +199,47 @@ def test_resident_planner_matches_fleet_step():
                         np.broadcast_to(row, (C, len(engines))).copy())
     np.testing.assert_array_equal(tgt_r, np.asarray(tgt_f))
     np.testing.assert_array_equal(nxt_r, np.asarray(nxt_f))
+
+
+def test_resident_planner_detects_donated_buffer_invalidation():
+    """A host-side failure that interrupts a donated update leaves the
+    planner's resident buffers deleted; the next call must raise a
+    descriptive RuntimeError (naming reset()) instead of the runtime's
+    opaque deleted-array error, and reset() must let serving resume."""
+    from repro.core.controller_jax import _apply_slot_updates
+
+    tpl, trie, ann = _setup("nl2sql_2")
+    td = TrieDevice.build(trie, ann)
+    obj = Objective("max_acc",
+                    lat_cap=float(np.quantile(ann.lat[trie.terminal], 0.7)))
+    C = 8
+    row = np.zeros(len(trie_engines(tpl)), np.float32)
+    rng = np.random.default_rng(5)
+    u = rng.integers(0, trie.n_nodes, size=C).astype(np.int32)
+    el = rng.uniform(0, 1, size=C).astype(np.float32)
+    ec = rng.uniform(0, 0.01, size=C).astype(np.float32)
+
+    planner = make_resident_planner(td, obj, C)
+    planner.update(np.arange(C), u, el, ec)
+    tgt0, nxt0 = planner.replan(row)
+
+    # inject the mid-run failure: donate the planner's buffers to an
+    # update whose results are lost (exactly what an exception between
+    # dispatch and reassignment leaves behind)
+    _apply_slot_updates(planner._u, planner._el, planner._ec,
+                        np.full(C, C, np.int32), np.zeros(C, np.int32),
+                        np.zeros(C, np.float32), np.zeros(C, np.float32))
+    if not planner._u.is_deleted():
+        pytest.skip("backend did not donate (no invalidation to detect)")
+    with pytest.raises(RuntimeError, match=r"reset\(\)"):
+        planner.update([0], [0], [0.0], [0.0])
+    with pytest.raises(RuntimeError, match=r"reset\(\)"):
+        planner.replan(row)
+
+    # resume: reset rematerializes zeroed buffers, the host re-mirrors
+    # its authoritative lane state, and replans match the pre-failure run
+    planner.reset()
+    planner.update(np.arange(C), u, el, ec)
+    tgt1, nxt1 = planner.replan(row)
+    np.testing.assert_array_equal(tgt0, tgt1)
+    np.testing.assert_array_equal(nxt0, nxt1)
