@@ -31,12 +31,23 @@ classes (`repro.core.workload.SLOClass`): FRAC of requests are
 preempt in-flight batch stages — paused at their realized trie node and
 resumed later), the rest ``batch``.
 
+``--refresh N`` turns on the online estimator loop
+(`repro.core.estimators`): streaming Beta/Gaussian posteriors — seeded
+from the cascade profile — absorb every realized stage outcome, and every
+N virtual seconds the `TrieAnnotator` republishes a fresh annotation
+version that the planner swaps in WITHOUT retracing.  ``--explore EPS``
+adds the epsilon-greedy exploration lane: that fraction of requests
+dispatch one deliberately-different model so the posteriors keep seeing
+off-plan cells.
+
     PYTHONPATH=src python examples/serve_workflow.py [--requests 60]
     PYTHONPATH=src python examples/serve_workflow.py --arrival-rate 2.0
     PYTHONPATH=src python examples/serve_workflow.py --arrival-rate 4.0 \\
         --admission feasibility --slo 20
     PYTHONPATH=src python examples/serve_workflow.py --arrival-rate 4.0 \\
         --classes 0.25 --slo 30
+    PYTHONPATH=src python examples/serve_workflow.py --arrival-rate 4.0 \\
+        --refresh 5.0 --explore 0.1 --slo 20
 """
 import argparse
 import time
@@ -44,7 +55,11 @@ import time
 import numpy as np
 
 from repro.core.controller import Objective
-from repro.core.estimators import annotate
+from repro.core.estimators import (
+    OnlineEstimators,
+    RefreshConfig,
+    annotate,
+)
 from repro.core.events import run_events
 from repro.core.fleet import run_fleet
 from repro.core.murakkab import murakkab_nodes
@@ -145,7 +160,20 @@ def main():
                          "of requests are 'interactive' (deadline = "
                          "--slo/2, weight 4, may preempt), the rest "
                          "'batch' (deadline = --slo, weight 1)")
+    ap.add_argument("--refresh", type=float, default=None, metavar="SECS",
+                    help="online estimator refresh for --arrival-rate "
+                         "mode: republish the trie annotations from the "
+                         "streaming posteriors every SECS virtual seconds "
+                         "(zero-retrace version swaps)")
+    ap.add_argument("--explore", type=float, default=None, metavar="EPS",
+                    help="epsilon-greedy exploration lane for "
+                         "--arrival-rate mode: EPS of requests dispatch "
+                         "one off-plan model to keep the posteriors fed")
     args = ap.parse_args()
+    for flag in ("refresh", "explore"):
+        if getattr(args, flag) is not None and args.arrival_rate is None:
+            ap.error(f"--{flag} requires --arrival-rate "
+                     "(open-arrival mode)")
     if args.classes is not None and not 0.0 < args.classes < 1.0:
         ap.error("--classes FRAC must be in (0, 1)")
     if args.classes is not None and args.arrival_rate is None:
@@ -210,6 +238,13 @@ def main():
                       classes=sample_classes(
                           len(fresh),
                           (args.classes, 1.0 - args.classes), seed=2))
+        if args.refresh is not None:
+            # the profile that built `ann` also seeds the posteriors, so
+            # an idle refresh loop republishes the same annotations
+            est = OnlineEstimators.from_profile(trie, profile)
+            kw["refresh"] = RefreshConfig(est, interval=args.refresh)
+        if args.explore is not None:
+            kw["explore"] = {"epsilon": args.explore, "seed": 3}
         res, stats = run_events(trie, ann, obj, fresh, executor,
                                 arrivals=arr, capacity=args.capacity,
                                 admission=args.admission, **kw)
@@ -225,6 +260,9 @@ def main():
               f"peak in-flight {max(stats.peak_occupancy.values())}")
         print(f"   admitted={stats.admitted} rejected={stats.rejected} "
               f"shed={stats.shed} downgraded={stats.downgraded}")
+        if args.refresh is not None or args.explore is not None:
+            print(f"   annotation republishes={stats.refreshes} "
+                  f"explored={stats.explored}")
         if specs is not None:
             print(f"   preemptions={stats.preemptions} "
                   f"resumed={stats.resumed}")

@@ -156,6 +156,57 @@ class AdmissionPolicy:
         policy (no occupancy cap) never intervenes."""
         return []
 
+    def observe_service(self, projected_s: float, realized_s: float) -> None:
+        """Telemetry hook: the host event loop reports each completed
+        stage's (nominal unloaded work, realized wall time) when an
+        online estimator refresh is active (``run_events(refresh=...)``).
+        Policies fitting a service-time forecast override this
+        (`PredictiveGate` feeds its `WaitForecaster`); the base policy
+        ignores it."""
+
+
+class WaitForecaster:
+    """Online calibration of the queue-wait projection (ISSUE 8).
+
+    `PredictiveGate`'s queue-side forecast comes from the engine
+    calendar's *frozen-rate* projected completions — exact if service
+    rates never changed, optimistic the moment an engine slows down
+    (drift).  This forecaster fits the realized/projected service-time
+    ratio with the same posterior machinery the trie annotators use
+    (`repro.core.estimators.GaussianPosterior`, prior 1.0 = the
+    frozen-rate assumption) and multiplies the runtime's forecast by the
+    posterior-mean ratio.
+
+    With **zero observations the factor is exactly 1.0** (the posterior
+    mean is the prior bitwise), so a gate carrying an unfed forecaster
+    is bit-identical to the legacy frozen-rate gate.  ``decay`` < 1
+    exponentially forgets old ratios so the factor tracks drift.
+    """
+
+    def __init__(self, strength: float = 8.0, decay: float = 1.0):
+        from repro.core.estimators import GaussianPosterior
+        if not 0.0 <= decay <= 1.0:
+            raise ValueError(f"decay must be in [0, 1], got {decay}")
+        self._post = GaussianPosterior(prior=1.0, strength=float(strength))
+        self.decay = float(decay)
+
+    @property
+    def observations(self) -> float:
+        """Effective (decayed) number of observed service ratios."""
+        return float(self._post.welford[0])
+
+    def observe(self, projected_s: float, realized_s: float) -> None:
+        """Fold one completed stage's realized/projected ratio in."""
+        if projected_s <= 0.0 or not np.isfinite(realized_s):
+            return
+        if self.decay != 1.0:
+            self._post.decay(self.decay)
+        self._post.observe(float(realized_s) / float(projected_s))
+
+    def factor(self) -> float:
+        """Posterior-mean slowdown ratio (>= 0; exactly 1.0 unfed)."""
+        return max(float(self._post.mean()), 0.0)
+
 
 class FeasibilityGate(AdmissionPolicy):
     """Reject infeasible work at the gate; shed it when the deadline dies.
@@ -263,7 +314,8 @@ class PredictiveGate(FeasibilityGate):
     wants_forecast = True
 
     def __init__(self, margin: float = 1e-4, discount: float = 1.0,
-                 backlog_delay: float = 0.5):
+                 backlog_delay: float = 0.5,
+                 forecaster: WaitForecaster | None = None):
         super().__init__(margin=margin)
         if not discount >= 0:
             raise ValueError("discount must be >= 0")
@@ -271,15 +323,31 @@ class PredictiveGate(FeasibilityGate):
             raise ValueError("backlog_delay must be >= 0")
         self.discount = float(discount)
         self.backlog_delay = float(backlog_delay)
+        # optional online calibration of the frozen-rate projection: the
+        # runtime's wait forecast is scaled by the posterior-mean
+        # realized/projected service ratio (exactly 1.0 until fed, so a
+        # fresh forecaster changes nothing bitwise); host loop only —
+        # `traced_admission` rejects a gate carrying one
+        self.forecaster = forecaster
+
+    def observe_service(self, projected_s: float, realized_s: float) -> None:
+        """Feed a completed stage's (nominal, realized) service pair to
+        the wait forecaster, when one is attached."""
+        if self.forecaster is not None:
+            self.forecaster.observe(projected_s, realized_s)
 
     def queue_reject(self, elapsed: float, lat_cap: float | None = None,
                      wait_forecast: float = 0.0) -> bool:
         """Forecast-gated rejection: the feasibility bound applied to
         burned wait *plus* the discounted projected further wait (see
-        class docstring for the forecast's derivation)."""
+        class docstring for the forecast's derivation), with the
+        projection rescaled by the fitted slowdown ratio when a
+        `WaitForecaster` is attached."""
         cap = self._cap(lat_cap)
         if cap is None:
             return False
+        if self.forecaster is not None:
+            wait_forecast = self.forecaster.factor() * wait_forecast
         return (elapsed + self.discount * wait_forecast
                 > cap - self._min_path_lat + self.margin)
 
@@ -438,6 +506,11 @@ def traced_admission(pol: AdmissionPolicy) -> TracedAdmission:
             f"compiled event engine supports only the stock admission "
             f"policies, not {type(pol).__name__}; use the host loop "
             f"(compiled=False) for custom policies")
+    if getattr(pol, "forecaster", None) is not None:
+        raise NotImplementedError(
+            "compiled event engine cannot feed a PredictiveGate's "
+            "WaitForecaster (service observations are host-side); use "
+            "the host loop (compiled=False) for calibrated gating")
     gates = isinstance(pol, FeasibilityGate)
     return TracedAdmission(
         name=pol.name,

@@ -110,6 +110,57 @@ class TrieDevice:
     engine_of_model: jnp.ndarray  # (M,) int32
     n_engines: int = 0            # static aux (no device sync on access)
 
+    # annotation-version bookkeeping (online estimator refresh).  Plain
+    # class attributes, NOT dataclass fields: they must stay out of both
+    # the pytree leaves (a structure change would break every compiled
+    # program's operand layout) and the static aux data (a per-version
+    # aux would re-trace on every swap — the opposite of the zero-retrace
+    # contract).  Instances published by `TrieAnnotator.publish` override
+    # them per object.
+    version = 0           # 0 = unversioned (built outside the annotator)
+    superseded_by = None  # version that donated this device's annotations
+
+    def check_live(self) -> None:
+        """Raise a descriptive error when this device's annotation
+        buffers were donated by a newer published version.
+
+        Mirrors `ResidentPlanner._check_live`/`reset()`: publishing
+        version N+1 via `repro.core.estimators.TrieAnnotator.publish`
+        donates (deletes) version N's acc/cost/lat buffers, so a stale
+        holder fails here with the version API spelled out instead of
+        hitting the runtime's opaque deleted-array error mid-plan."""
+        for name in ("acc", "cost", "lat"):
+            buf = getattr(self, name)
+            try:
+                dead = buf.is_deleted()
+            except AttributeError:  # array type without deletion tracking
+                return
+            if dead:
+                raise RuntimeError(
+                    f"TrieDevice annotation column {name!r} (version "
+                    f"{self.version}) reads a donated buffer: this device "
+                    f"was superseded by version {self.superseded_by} when "
+                    "the online annotator published a refresh.  Use the "
+                    "TrieDevice returned by TrieAnnotator.publish() — and "
+                    "hand it to ResidentPlanner.swap_device(new_td) — "
+                    "instead of a superseded version.")
+
+    def supersede(self, new_version: int) -> None:
+        """Donate this device's annotation buffers to the version that
+        replaced it: the acc/cost/lat storage is deleted on device, so
+        any stale reader fails loudly through `check_live`.  The
+        structural columns (trie topology) are shared across versions and
+        stay live."""
+        self.superseded_by = new_version
+        for name in ("acc", "cost", "lat"):
+            buf = getattr(self, name)
+            delete = getattr(buf, "delete", None)
+            if callable(delete):
+                try:
+                    delete()
+                except Exception:
+                    pass  # already deleted / backend without donation
+
     def tree_flatten(self):
         """Pytree protocol: device arrays are leaves, ``n_engines`` is
         static aux data (it shapes compiled programs)."""
@@ -457,6 +508,7 @@ class ResidentPlanner:
         return bufs
 
     def _check_live(self) -> None:
+        self._td.check_live()  # superseded annotation versions fail loudly
         try:
             dead = any(b.is_deleted() for b in self._live_buffers())
         except AttributeError:  # array type without deletion tracking
@@ -503,6 +555,49 @@ class ResidentPlanner:
             buf[:n] = c
             out.append(buf)
         return out
+
+    @property
+    def device_version(self) -> int:
+        """Annotation version of the trie device currently planned
+        against (0 when the device was built outside the annotator)."""
+        return self._td.version
+
+    @property
+    def scalars(self):
+        """The traced objective-scalar operands ``(acc_floor, cost_cap,
+        lat_cap)`` (float32) every planner program is fed — under
+        per-class deadline serving ``lat_cap`` is the largest finite
+        class cap.  Host-side guards (the exploration lane's float32
+        feasibility check in `repro.core.events`) read these to
+        reproduce the device arithmetic exactly."""
+        return self._scalars
+
+    def swap_device(self, td: TrieDevice) -> TrieDevice:
+        """Swap in a re-annotated `TrieDevice` (online estimator refresh).
+
+        The annotation columns are *traced operands* to every planner
+        program, so as long as the new device has the identical leaf
+        structure (same trie topology, same shapes/dtypes) the swap is a
+        pure buffer substitution: ZERO new compiled programs
+        (`fleet_planner_cache_size` stays flat across swaps — pinned by
+        tests/test_golden.py).  Structure drift raises instead of
+        silently re-tracing.  Returns the device swapped out (usually
+        already superseded — its annotation buffers donated — by
+        `TrieAnnotator.publish`)."""
+        old_leaves, old_aux = self._td.tree_flatten()
+        new_leaves, new_aux = td.tree_flatten()
+        old_sig = [(a.shape, a.dtype) for a in old_leaves]
+        new_sig = [(a.shape, a.dtype) for a in new_leaves]
+        if old_sig != new_sig or old_aux != new_aux:
+            raise ValueError(
+                "swap_device requires a TrieDevice with the identical "
+                "array structure (same trie, annotations only) — a "
+                f"structure change would re-trace. got {new_sig} / aux "
+                f"{new_aux}, expected {old_sig} / aux {old_aux}")
+        td.check_live()
+        old = self._td
+        self._td = td
+        return old
 
     def update(self, slots, u_vals, el_vals, ec_vals) -> None:
         """Mirror host-side state for ``slots`` into the resident buffers."""

@@ -24,9 +24,12 @@ All return a vector ``mu`` over trie nodes with ``mu[0] = 0``.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.core.profiler import ProfileResult
+from repro.core.streaming import welford_merge, welford_update
 from repro.core.trie import Trie, TrieAnnotations
 
 
@@ -419,3 +422,371 @@ def annotate(
         cost[u] = cost[p] + (1.0 - mu[p]) * (cmean[d, m] + tc)
         lat[u] = lat[p] + lmean[d, m] + tl
     return TrieAnnotations(acc=mu, cost=cost, lat=lat)
+
+
+# ----------------------------------------------------------------------
+# online estimator refresh (ISSUE 8): streaming posteriors over the
+# per-(invocation depth, model) stage statistics, seeded from the offline
+# cascade profile as priors, with exponential forgetting so drift
+# (engines slowing down, model-quality regressions) is tracked instead of
+# averaged away.  `TrieAnnotator` re-derives the trie annotation tables
+# from the current posteriors and publishes them as versioned
+# `controller_jax.TrieDevice` columns that swap into the running control
+# plane with zero new compiled programs.
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class BetaPosterior:
+    """Streaming Beta posterior over a stage success probability.
+
+    The offline profile contributes the prior (``prior`` mean backed by
+    ``strength`` pseudo-observations); online executions accumulate into
+    the decayed sufficient statistics ``weight`` (observation count) and
+    ``successes``.  `mean` is written as *prior plus correction* —
+    ``prior + (successes - weight*prior) / (strength + weight)`` — which
+    is algebraically the Beta posterior mean
+    ``(strength*prior + successes) / (strength + weight)`` but evaluates
+    to the offline prior BITWISE when there are zero online observations
+    (the correction term is exactly ±0.0), so an idle refresh loop can
+    never perturb the offline annotations.
+    """
+
+    prior: float
+    strength: float
+    weight: float = 0.0
+    successes: float = 0.0
+
+    def observe(self, success: bool, weight: float = 1.0) -> None:
+        """Fold one realized stage outcome into the posterior."""
+        self.weight += weight
+        if success:
+            self.successes += weight
+
+    def decay(self, gamma: float) -> None:
+        """Exponential forgetting: scale the online evidence by ``gamma``
+        in [0, 1].  The posterior mean moves monotonically toward the
+        offline prior as ``gamma`` shrinks (the evidence weight
+        ``gamma*weight / (strength + gamma*weight)`` is increasing in
+        ``gamma``)."""
+        if not 0.0 <= gamma <= 1.0:
+            raise ValueError(f"decay factor must be in [0, 1], got {gamma}")
+        self.weight *= gamma
+        self.successes *= gamma
+
+    def mean(self) -> float:
+        """Posterior mean; exactly ``prior`` at zero observations."""
+        return self.prior + (self.successes - self.weight * self.prior) / (
+            self.strength + self.weight)
+
+    def ucb(self, c: float = 1.0) -> float:
+        """Optimistic upper bound ``mean + c / sqrt(strength + weight)``
+        for UCB-style exploration scoring."""
+        return self.mean() + c / np.sqrt(self.strength + self.weight)
+
+    def merge(self, other: "BetaPosterior") -> "BetaPosterior":
+        """Combine evidence from two streams over the same prior.  Sums
+        of sufficient statistics, so merge is exactly commutative."""
+        if (other.prior, other.strength) != (self.prior, self.strength):
+            raise ValueError("cannot merge BetaPosteriors with different "
+                             "priors")
+        return BetaPosterior(self.prior, self.strength,
+                             self.weight + other.weight,
+                             self.successes + other.successes)
+
+    def state(self) -> dict:
+        """JSON-able snapshot; `from_state` round-trips it exactly."""
+        return {"prior": self.prior, "strength": self.strength,
+                "weight": self.weight, "successes": self.successes}
+
+    @classmethod
+    def from_state(cls, state: dict) -> "BetaPosterior":
+        """Rebuild from a `state()` snapshot."""
+        return cls(**state)
+
+
+@dataclasses.dataclass
+class GaussianPosterior:
+    """Streaming posterior over a stage cost/latency mean.
+
+    Online evidence lives in a `repro.core.streaming` Welford triple
+    ``(count, mean, M2)``; `decay` scales ``count`` and ``M2`` (standard
+    exponential-forgetting Welford), and `mean` shrinks the evidence mean
+    toward the offline prior by ``count / (strength + count)`` — the
+    normal-inverse-gamma posterior mean under a prior worth ``strength``
+    observations.  Like `BetaPosterior`, the prior-plus-correction form
+    makes the zero-observation posterior bitwise equal to the prior.
+    """
+
+    prior: float
+    strength: float
+    welford: tuple = (0.0, 0.0, 0.0)
+
+    def observe(self, x: float) -> None:
+        """Fold one realized value into the Welford triple."""
+        self.welford = welford_update(self.welford, float(x))
+
+    def decay(self, gamma: float) -> None:
+        """Exponential forgetting: scale the evidence count and spread."""
+        if not 0.0 <= gamma <= 1.0:
+            raise ValueError(f"decay factor must be in [0, 1], got {gamma}")
+        n, m, m2 = self.welford
+        self.welford = (n * gamma, m, m2 * gamma)
+
+    def mean(self) -> float:
+        """Posterior mean; exactly ``prior`` at zero observations."""
+        n, m, _ = self.welford
+        return self.prior + n * (m - self.prior) / (self.strength + n)
+
+    def merge(self, other: "GaussianPosterior") -> "GaussianPosterior":
+        """Combine evidence via Chan's parallel Welford merge.  The two
+        operands are put in canonical order first, so merge is exactly
+        commutative (Chan's mean update is not symmetric in floats)."""
+        if (other.prior, other.strength) != (self.prior, self.strength):
+            raise ValueError("cannot merge GaussianPosteriors with "
+                             "different priors")
+        a, b = self.welford, other.welford
+        if tuple(b) < tuple(a):
+            a, b = b, a
+        return GaussianPosterior(self.prior, self.strength,
+                                 tuple(welford_merge(a, b)))
+
+    def state(self) -> dict:
+        """JSON-able snapshot; `from_state` round-trips it exactly."""
+        return {"prior": self.prior, "strength": self.strength,
+                "welford": list(self.welford)}
+
+    @classmethod
+    def from_state(cls, state: dict) -> "GaussianPosterior":
+        """Rebuild from a `state()` snapshot."""
+        return cls(state["prior"], state["strength"],
+                   tuple(state["welford"]))
+
+
+class OnlineEstimators:
+    """Per-(invocation depth, model) streaming posteriors for stage
+    accuracy, cost, and latency.
+
+    The container the serving loop feeds realized executions into
+    (`observe`) and the `TrieAnnotator` reads tables out of.  Seed it
+    from an offline cascade profile (`from_profile`) so the posteriors
+    start at the profiler's estimates with evidence-proportional
+    strength, or from explicit prior tables (`from_tables`).
+    """
+
+    def __init__(self, acc, cost, lat):
+        self.acc = acc      # (D, M) nested lists of BetaPosterior
+        self.cost = cost    # (D, M) nested lists of GaussianPosterior
+        self.lat = lat      # (D, M) nested lists of GaussianPosterior
+        self.observations = 0
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        """(max invocation depth, model count) of the posterior tables."""
+        return (len(self.acc), len(self.acc[0]) if self.acc else 0)
+
+    @classmethod
+    def from_tables(cls, acc_prior: np.ndarray, cost_prior: np.ndarray,
+                    lat_prior: np.ndarray, *,
+                    strength=4.0) -> "OnlineEstimators":
+        """Build from explicit (D, M) prior-mean tables.  ``strength``
+        is scalar or a (D, M) per-cell pseudo-observation count."""
+        acc_prior = np.asarray(acc_prior, dtype=np.float64)
+        D, M = acc_prior.shape
+        s = np.broadcast_to(np.asarray(strength, dtype=np.float64), (D, M))
+        acc = [[BetaPosterior(float(acc_prior[d, m]), float(s[d, m]))
+                for m in range(M)] for d in range(D)]
+        cost = [[GaussianPosterior(float(cost_prior[d, m]), float(s[d, m]))
+                 for m in range(M)] for d in range(D)]
+        lat = [[GaussianPosterior(float(lat_prior[d, m]), float(s[d, m]))
+                for m in range(M)] for d in range(D)]
+        return cls(acc, cost, lat)
+
+    @classmethod
+    def from_profile(cls, trie: Trie, profile: ProfileResult, *,
+                     prior_strength: float = 4.0,
+                     count_weight: float = 1.0) -> "OnlineEstimators":
+        """Seed the posteriors from an offline cascade profile: accuracy
+        priors are the profile's per-(depth, model) conditional success
+        stats (`ProfileResult.stage_success_stats`), cost/latency priors
+        the filled stage means, each backed by ``prior_strength`` plus
+        ``count_weight`` times the profile's actual per-cell observation
+        count.  Lower ``count_weight`` (0 = flat ``prior_strength``
+        everywhere) to keep a heavily-profiled prior from drowning out
+        online evidence — the responsiveness knob drift-tracking
+        deployments (`benchmarks/drift.py`) turn down."""
+        smean, scnt = profile.stage_success_stats(trie)
+        cmean, lmean = _stage_means_filled(trie, profile)
+        cnt = profile.stage_count.astype(np.float64)
+        acc = cls.from_tables(smean, cmean, lmean,
+                              strength=prior_strength + count_weight * scnt)
+        # cost/lat strength follows the telemetry count, not the outcome
+        # observation count (checkpoint reuse makes them differ)
+        strength = prior_strength + count_weight * cnt
+        D, M = smean.shape
+        for d in range(D):
+            for m in range(M):
+                acc.cost[d][m].strength = float(strength[d, m])
+                acc.lat[d][m].strength = float(strength[d, m])
+        return acc
+
+    def observe(self, depth: int, model: int, success: bool,
+                cost: float, lat: float) -> None:
+        """Fold one realized stage execution into all three posteriors."""
+        self.acc[depth][model].observe(bool(success))
+        self.cost[depth][model].observe(float(cost))
+        self.lat[depth][model].observe(float(lat))
+        self.observations += 1
+
+    def decay_all(self, gamma: float) -> None:
+        """Apply exponential forgetting to every posterior cell."""
+        for table in (self.acc, self.cost, self.lat):
+            for row in table:
+                for p in row:
+                    p.decay(gamma)
+
+    def merge(self, other: "OnlineEstimators") -> "OnlineEstimators":
+        """Cell-wise posterior merge (e.g. shard-local evidence streams);
+        commutative exactly, like the underlying posterior merges."""
+        if self.shape != other.shape:
+            raise ValueError(f"shape mismatch: {self.shape} vs "
+                             f"{other.shape}")
+        D, M = self.shape
+        out = OnlineEstimators(
+            [[self.acc[d][m].merge(other.acc[d][m]) for m in range(M)]
+             for d in range(D)],
+            [[self.cost[d][m].merge(other.cost[d][m]) for m in range(M)]
+             for d in range(D)],
+            [[self.lat[d][m].merge(other.lat[d][m]) for m in range(M)]
+             for d in range(D)])
+        out.observations = self.observations + other.observations
+        return out
+
+    def q_table(self) -> np.ndarray:
+        """(D, M) posterior conditional-accuracy means, clipped to
+        [0, 1]."""
+        return np.clip([[p.mean() for p in row] for row in self.acc],
+                       0.0, 1.0)
+
+    def cost_table(self) -> np.ndarray:
+        """(D, M) posterior stage-cost means, floored at 0."""
+        return np.maximum([[p.mean() for p in row] for row in self.cost],
+                          0.0)
+
+    def lat_table(self) -> np.ndarray:
+        """(D, M) posterior stage-latency means, floored at 0."""
+        return np.maximum([[p.mean() for p in row] for row in self.lat],
+                          0.0)
+
+    def state(self) -> dict:
+        """JSON-able snapshot of every posterior cell; `from_state`
+        round-trips it exactly."""
+        return {
+            "observations": self.observations,
+            "acc": [[p.state() for p in row] for row in self.acc],
+            "cost": [[p.state() for p in row] for row in self.cost],
+            "lat": [[p.state() for p in row] for row in self.lat],
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "OnlineEstimators":
+        """Rebuild from a `state()` snapshot."""
+        out = cls(
+            [[BetaPosterior.from_state(s) for s in row]
+             for row in state["acc"]],
+            [[GaussianPosterior.from_state(s) for s in row]
+             for row in state["cost"]],
+            [[GaussianPosterior.from_state(s) for s in row]
+             for row in state["lat"]])
+        out.observations = state["observations"]
+        return out
+
+
+class TrieAnnotator:
+    """Re-derives the trie annotation tables from the current posteriors
+    and publishes them as **versioned** device tables.
+
+    `annotations` composes the posterior conditional accuracies down the
+    trie (eq. (7)-(9), same recursion as `annotate`) and rebuilds the
+    cost/latency path sums from the posterior stage means.  `publish`
+    wraps the result in a fresh `controller_jax.TrieDevice` with a
+    bumped ``version`` and *supersedes* the previous one: the old
+    device's annotation buffers are donated (deleted on device), so any
+    stale reader fails loudly through `TrieDevice.check_live` instead of
+    silently planning on dead annotations.  Every published device has
+    identical array shapes/dtypes, so swapping it into a resident
+    planner or the compiled event engine reuses every compiled program
+    (the zero-retrace pins in tests/test_golden.py hold this).
+    """
+
+    def __init__(self, trie: Trie, estimators: OnlineEstimators,
+                 restrict_nodes: np.ndarray | None = None):
+        if estimators.shape != (trie.template.max_depth,
+                                trie.template.n_models):
+            raise ValueError(
+                f"estimator table shape {estimators.shape} does not match "
+                f"the trie's (max_depth, n_models) = "
+                f"({trie.template.max_depth}, {trie.template.n_models})")
+        self.trie = trie
+        self.estimators = estimators
+        self.restrict_nodes = restrict_nodes
+        self.version = 0
+        self.current = None
+        self.current_ann = None
+
+    def annotations(self) -> TrieAnnotations:
+        """Current posterior-derived trie annotations (same §3.3 path
+        recursion as `annotate`, with posterior stage means)."""
+        trie = self.trie
+        q = self.estimators.q_table()
+        cmean = self.estimators.cost_table()
+        lmean = self.estimators.lat_table()
+        n = trie.n_nodes
+        q_hat = np.zeros(n)
+        for u in range(1, n):
+            q_hat[u] = q[int(trie.depth[u]) - 1, int(trie.model[u])]
+        mu = _compose(trie, q_hat)
+        cost = np.zeros(n)
+        lat = np.zeros(n)
+        tpl = trie.template
+        for u in range(1, n):
+            p = int(trie.parent[u])
+            d = int(trie.depth[u]) - 1
+            m = int(trie.model[u])
+            tc, tl = tpl.tool_cost_latency(d)
+            cost[u] = cost[p] + (1.0 - mu[p]) * (cmean[d, m] + tc)
+            lat[u] = lat[p] + lmean[d, m] + tl
+        return TrieAnnotations(acc=mu, cost=cost, lat=lat)
+
+    def publish(self):
+        """Build a new versioned `TrieDevice` from the current posteriors
+        and donate the superseded version's annotation buffers.  Returns
+        the new device; feed it to `ResidentPlanner.swap_device` (host)
+        or the compiled engine's annotation schedule.  The float64
+        annotations the device was built from stay readable as
+        ``self.current_ann`` (host-side consumers like the downgrade
+        re-router need them alongside the float32 device columns)."""
+        from repro.core.controller_jax import TrieDevice
+
+        ann = self.annotations()
+        td = TrieDevice.build(self.trie, ann, self.restrict_nodes)
+        self.version += 1
+        td.version = self.version
+        if self.current is not None:
+            self.current.supersede(self.version)
+        self.current = td
+        self.current_ann = ann
+        return td
+
+
+@dataclasses.dataclass
+class RefreshConfig:
+    """How the event loop drives the online estimator refresh:
+    ``estimators`` accumulate realized executions, and every
+    ``interval`` virtual seconds the loop decays them by ``decay`` and
+    publishes a re-annotated `TrieDevice` (provided at least
+    ``min_observations`` new executions arrived since the last
+    publish)."""
+
+    estimators: OnlineEstimators
+    interval: float = 4.0
+    decay: float = 1.0
+    min_observations: int = 1

@@ -125,6 +125,9 @@ class EventStats:
     downgraded: int = 0             # re-routed to the cheapest feasible path
     preemptions: int = 0            # in-flight stages paused for a higher class
     resumed: int = 0                # paused stages restored into a slot
+    explored: int = 0               # exploration-lane dispatch overrides
+    annotation_swaps: int = 0       # scheduled annotation-version swaps
+    refreshes: int = 0              # online-estimator republish+swap events
     replan_s: list = dataclasses.field(default_factory=list)
     planned_per_replan: list = dataclasses.field(default_factory=list)
     peak_occupancy: dict = dataclasses.field(default_factory=dict)
@@ -135,6 +138,11 @@ class EventStats:
     # per-request preemption counts (zeros when serving without classes)
     preempt_count: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0, dtype=np.int64))
+    # per-request annotation version active at each dispatched stage
+    # (prefix-aligned with ``ExecutionResult.models``; a request shed
+    # mid-stage keeps one trailing entry for the aborted dispatch; host
+    # loop only — the compiled engine leaves this empty)
+    stage_versions: list = dataclasses.field(default_factory=list)
     arrival_t: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0))
     admit_t: np.ndarray = dataclasses.field(
@@ -167,6 +175,52 @@ class EventStats:
         return float(np.mean(shares)) if shares else 0.0
 
 
+def _explore_tables(trie: Trie, term_mask: np.ndarray, n_requests: int,
+                    explore) -> np.ndarray | None:
+    """Precompute the per-request exploration draws (epsilon-greedy).
+
+    ``explore`` is an epsilon in [0, 1] or a dict ``{"epsilon":, "seed":}``.
+    Returns an (n_requests,) int32 array: the root-stage model to explore
+    for each request, or -1 (not drawn / epsilon 0 / no explorable model).
+    Only models whose root child leads to at least one effective terminal
+    are explorable — exploration must never strand a request on a subtree
+    with no terminating plan.  The draws are a pure function of (seed,
+    epsilon, trie) made BEFORE the event loop runs, so the host and
+    compiled engines apply bit-identical overrides in any event order.
+    """
+    if explore is None:
+        return None
+    if isinstance(explore, dict):
+        unknown = set(explore) - {"epsilon", "seed"}
+        if unknown:
+            raise ValueError(f"unknown explore keys {sorted(unknown)} "
+                             "(expected epsilon=/seed=)")
+        eps = float(explore.get("epsilon", 0.0))
+        seed = int(explore.get("seed", 0))
+    else:
+        eps = float(explore)
+        seed = 0
+    if not 0.0 <= eps <= 1.0:
+        raise ValueError(f"explore epsilon must be in [0, 1], got {eps}")
+    if eps == 0.0 or n_requests == 0:
+        return None
+    valid = []
+    for m in range(trie.template.n_models):
+        v = int(trie.child[0, m])
+        if v < 0:
+            continue
+        lo, hi = trie.descendants_interval(v)
+        if term_mask[lo:hi].any():
+            valid.append(m)
+    if not valid:
+        return None
+    rng = np.random.default_rng(seed)
+    drawn = rng.random(n_requests) < eps
+    picks = np.asarray(valid, dtype=np.int32)[
+        rng.integers(0, len(valid), n_requests)]
+    return np.where(drawn, picks, np.int32(-1)).astype(np.int32)
+
+
 def run_events(
     trie: Trie,
     ann: TrieAnnotations,
@@ -186,6 +240,9 @@ def run_events(
     fleet_load=None,
     t_start: float = 0.0,
     plan_variant: str | None = None,
+    annotation_schedule=None,
+    refresh=None,
+    explore=None,
     compiled: bool = False,
     devices: int | None = None,
     **compiled_kwargs,
@@ -214,6 +271,32 @@ def run_events(
     resumed later with its remaining work intact.
     ``plan_variant`` picks the planner dispatch path
     (`controller_jax.PLAN_VARIANTS`; None = the session default).
+
+    **Online annotations** (ISSUE 8): three knobs close the loop between
+    realized executions and the planner's annotation tables.
+    ``annotation_schedule`` is a sequence of ``(t_swap, TrieAnnotations)``
+    pairs: when the virtual clock first strictly exceeds ``t_swap`` the
+    planner's `TrieDevice` is rebuilt from the new annotations and
+    swapped in via `ResidentPlanner.swap_device` — the annotation columns
+    are traced operands, so every swap is a pure buffer substitution with
+    ZERO new compiled programs; events at ``t <= t_swap`` run under the
+    old version (both engines apply this rule identically, so host and
+    compiled stay bit-compatible across mid-run swaps).
+    ``refresh`` takes a `repro.core.estimators.RefreshConfig`: realized
+    stage outcomes feed its `OnlineEstimators` posteriors at each
+    completion, and every ``interval`` virtual seconds (given
+    ``min_observations`` new observations) the estimators are decayed,
+    re-annotated through `TrieAnnotator.publish`, and swapped in — host
+    loop only (the compiled engine raises ``NotImplementedError``).
+    ``explore`` (an epsilon or ``dict(epsilon=, seed=)``) enables the
+    epsilon-greedy exploration lane: a pre-drawn fraction of requests
+    override the planner's root-stage pick with a random explorable model
+    (guarded by a float32 budget-feasibility check against the live
+    annotation version), keeping rarely-chosen paths' posteriors fresh;
+    the explored stage is charged against the request's budget like any
+    other.  Admission-policy feasibility bounds stay bound to the
+    *initial* annotations across swaps (they are frozen scalars in the
+    compiled engine's static config — see docs/EVENT_ENGINE.md).
     Results are returned in ``requests`` order; `total_lat` and the SLO
     check (against each request's own class deadline, when classes are
     given) are measured from each request's *arrival*, so admission-queue
@@ -246,7 +329,9 @@ def run_events(
             classes=classes, class_specs=class_specs, preempt=preempt,
             restrict_nodes=restrict_nodes, load_probe=load_probe,
             fleet_load=fleet_load, t_start=t_start,
-            plan_variant=plan_variant, devices=devices, **compiled_kwargs)
+            plan_variant=plan_variant,
+            annotation_schedule=annotation_schedule, refresh=refresh,
+            explore=explore, devices=devices, **compiled_kwargs)
     if compiled_kwargs:
         raise TypeError(f"unexpected keyword arguments for the host event "
                         f"loop: {sorted(compiled_kwargs)} (compiled=True "
@@ -370,6 +455,47 @@ def run_events(
     deadline_sheds = pol.shed_on_deadline and bool(
         np.isfinite(cap_req).any())
 
+    # ---- online annotations: swaps / refresh / exploration ----------
+    sched: list[tuple[float, TrieAnnotations]] = []
+    if annotation_schedule is not None:
+        sched = sorted(((float(ts), a) for ts, a in annotation_schedule),
+                       key=lambda p: p[0])
+        for ts, _ in sched:
+            if not np.isfinite(ts) or ts < 0:
+                raise ValueError("annotation_schedule swap times must be "
+                                 f"finite and non-negative, got {ts}")
+    annotator = None
+    if refresh is not None:
+        from repro.core.estimators import TrieAnnotator
+        est = refresh.estimators
+        annotator = TrieAnnotator(trie, est, restrict_nodes)
+        refresh_t = float(refresh.interval)
+        obs_mark = est.observations
+    explore_model = _explore_tables(trie, term_mask, B, explore)
+    # the downgrade re-router and the explore guard must read the LIVE
+    # annotation version (mirroring the compiled engine, whose downgrade
+    # and explore lanes read the swapped-in cn["td"] columns); the
+    # admission policy's bound feasibility scalars stay frozen at v0
+    active_ann = ann
+    cost32 = lat32 = None
+    if explore_model is not None:
+        # float32 host copies of the device annotation columns + the
+        # planner's traced cap scalars: the guard below reproduces the
+        # compiled engine's float32 arithmetic bit-for-bit
+        cost32 = np.array(td.cost)
+        lat32 = np.array(td.lat)
+        sc_cost32 = np.float32(planner.scalars[1])
+        sc_lat32 = np.float32(planner.scalars[2])
+
+    def apply_device(new_td, new_ann) -> None:
+        """Swap a re-annotated device into the planner (zero retrace)."""
+        nonlocal active_ann, cost32, lat32
+        planner.swap_device(new_td)
+        active_ann = new_ann
+        if explore_model is not None:
+            cost32 = np.array(new_td.cost)
+            lat32 = np.array(new_td.lat)
+
     # vectorized processor-sharing calendar across all engines; numpy-only
     # module, but imported lazily so `repro.core` stays importable without
     # the serving package's model stack
@@ -394,12 +520,16 @@ def run_events(
     free_mask = np.ones(C, dtype=bool)             # free slots
     need_mask = np.zeros(C, dtype=bool)            # lanes to replan this event
     deadline = np.full(C, np.inf)                  # scheduled shed, inf = none
+    stage_depth = np.full(C, -1, dtype=np.int64)   # dispatched stage's depth
+    stage_cost_last = np.zeros(C)                  # dispatched stage's cost
+    stage_work = np.zeros(C)                       # nominal (unloaded) work
 
     # per-request outputs (aligned with ``requests``)
     success = np.zeros(B, dtype=bool)
     total_cost = np.zeros(B, dtype=np.float64)
     overhead = np.zeros(B, dtype=np.float64)
     models: list[list[int]] = [[] for _ in range(B)]
+    stats.stage_versions = [[] for _ in range(B)]
 
     # arrivals in time order (stable: ties keep ``requests`` order); the
     # admission queue is a (class weight desc, arrival order) priority
@@ -416,8 +546,9 @@ def run_events(
 
     # preempted requests checkpointed at their realized trie node:
     # (prefix u, stage model, stage success, remaining unloaded work,
-    # elapsed cost, downgraded flag) — restored verbatim on resume
-    paused: dict[int, tuple[int, int, bool, float, float, bool]] = {}
+    # elapsed cost, downgraded flag, stage depth, stage cost, nominal
+    # stage work) — restored verbatim on resume
+    paused: dict[int, tuple] = {}
 
     def release_slot(slot: int) -> None:
         """Reset a slot to the free state (every per-slot column)."""
@@ -459,7 +590,9 @@ def run_events(
         remw = sim.preempt(slot, t)
         paused[i] = (int(u[slot]), int(stage_model[slot]),
                      bool(stage_success[slot]), float(remw),
-                     float(elapsed_cost[slot]), bool(downgraded[slot]))
+                     float(elapsed_cost[slot]), bool(downgraded[slot]),
+                     int(stage_depth[slot]), float(stage_cost_last[slot]),
+                     float(stage_work[slot]))
         stats.preemptions += 1
         stats.preempt_count[i] += 1
         release_slot(slot)
@@ -469,13 +602,16 @@ def run_events(
         """Restore a preempted request into ``slot`` and resume its paused
         stage with exactly the remaining work `preempt` captured — no
         replan, no re-execution, no double-charged cost."""
-        pu, pm, psucc, remw, pec, pdg = paused.pop(i)
+        pu, pm, psucc, remw, pec, pdg, pd, psc, pw = paused.pop(i)
         u[slot] = pu
         elapsed_lat[slot] = t - arrivals[i]
         elapsed_cost[slot] = pec
         stage_model[slot] = pm
         stage_success[slot] = psucc
         downgraded[slot] = pdg
+        stage_depth[slot] = pd
+        stage_cost_last[slot] = psc
+        stage_work[slot] = pw
         if deadline_sheds:
             t_d = arrivals[i] + cap_req[i]
             if np.isfinite(t_d) and t_d > t:
@@ -509,15 +645,48 @@ def run_events(
             assert not pending and np.all(slot_owner < 0), \
                 "event loop stalled with work outstanding"
             break
+        # scheduled annotation swaps: events at t <= t_swap ran under the
+        # old version; the first event strictly past it sees the new one
+        # (the compiled engine splits its epoch loop at the same
+        # boundaries, so both engines apply this rule bit-identically)
+        while sched and t > sched[0][0]:
+            new_ann = sched.pop(0)[1]
+            new_td = TrieDevice.build(trie, new_ann, restrict_nodes)
+            new_td.version = planner.device_version + 1
+            apply_device(new_td, new_ann)
+            stats.annotation_swaps += 1
+        # estimator refresh: once per interval, as soon as enough new
+        # observations arrived — decay, republish, swap (host loop only)
+        if annotator is not None and t > refresh_t and \
+                est.observations - obs_mark >= refresh.min_observations:
+            if refresh.decay != 1.0:
+                est.decay_all(refresh.decay)
+            apply_device(annotator.publish(), annotator.current_ann)
+            stats.refreshes += 1
+            obs_mark = est.observations
+            refresh_t = t + float(refresh.interval)
         stats.events += 1
         need_mask[:] = False
 
         # 1. stage completions at exactly t (canonical engine order, then
         #    admission order — FleetEngineSim reports them pre-sorted)
-        for slot, _realized_s in sim.pop_completed(t):
+        for slot, realized_s in sim.pop_completed(t):
             i = int(slot_owner[slot])
             m = int(stage_model[slot])
             stage_model[slot] = -1
+            if annotator is not None:
+                # realized outcome -> posteriors; the latency posterior
+                # tracks the UNLOADED stage work (the executor's nominal
+                # time, same quantity the offline annotation estimates —
+                # engine slowdowns inflate it), NOT the loaded wall time:
+                # queueing delay is the load-aware delta terms' job, and
+                # feeding it here would double-count load and over-shed
+                est.observe(int(stage_depth[slot]), m,
+                            bool(stage_success[slot]),
+                            float(stage_cost_last[slot]),
+                            float(stage_work[slot]))
+                pol.observe_service(float(stage_work[slot]),
+                                    float(realized_s))
             models[i].append(m)
             u[slot] = trie.child[u[slot], m]
             if stage_success[slot]:
@@ -722,9 +891,9 @@ def run_events(
                 # lanes as elapsed shifts against the largest-cap scalar
                 # (-inf shift = deadline-free lane); see ResidentPlanner
                 el_planner = el_planner + lat_shift[slot_owner[need]]
-            planner.update(need, u[need],
-                           el_planner.astype(np.float32),
-                           elapsed_cost[need].astype(np.float32))
+            el32_arr = el_planner.astype(np.float32)
+            ec32_arr = elapsed_cost[need].astype(np.float32)
+            planner.update(need, u[need], el32_arr, ec32_arr)
             tgts, nxts = planner.replan(delay_row)
             replan_s = time.perf_counter() - t0
             stats.replans += 1
@@ -741,12 +910,37 @@ def run_events(
                     if not downgraded[slot]:
                         continue
                     tgt = cheapest_feasible_target(
-                        trie, ann, obj_for(int(slot_owner[slot])),
+                        trie, active_ann, obj_for(int(slot_owner[slot])),
                         int(u[slot]),
                         float(elapsed_lat[slot]), delay_dict, term_mask)
                     tgts[slot] = tgt
                     nxts[slot] = (next_model_for(trie, int(u[slot]), tgt)
                                   if tgt >= 0 else -1)
+
+            # 4c. exploration lane: a pre-drawn request overrides the
+            #     planner's ROOT-stage pick with its explore model iff
+            #     the float32 budget guard passes against the LIVE
+            #     annotation version — the exact arithmetic the compiled
+            #     engine's traced guard does (optimistic: annotation path
+            #     sums only, no delta_e terms).  Applied after the
+            #     downgrade override; the explored stage is charged
+            #     against the request's budget like any other.  A root
+            #     replan happens at most once per request, so each
+            #     request explores at most one stage.
+            if explore_model is not None:
+                nxts = np.array(nxts)
+                for k, slot in enumerate(need):
+                    if int(u[slot]) != 0 or int(nxts[slot]) < 0:
+                        continue
+                    em = int(explore_model[int(slot_owner[slot])])
+                    if em < 0:
+                        continue
+                    v = int(trie.child[0, em])
+                    if (el32_arr[k] + (lat32[v] - lat32[0]) <= sc_lat32
+                            and ec32_arr[k] + (cost32[v] - cost32[0])
+                            <= sc_cost32):
+                        nxts[slot] = em
+                        stats.explored += 1
 
             # 5. dispatch: start the chosen stage of every planned slot
             for slot in need:
@@ -778,6 +972,10 @@ def run_events(
                 elapsed_cost[slot] += c
                 stage_model[slot] = m
                 stage_success[slot] = bool(s)
+                stage_depth[slot] = d
+                stage_cost_last[slot] = c
+                stage_work[slot] = lat
+                stats.stage_versions[i].append(planner.device_version)
                 if priorities:
                     sim.start(int(slot), int(engine_of_model[m]), lat, t,
                               weight=float(weight_req[i]))

@@ -42,7 +42,11 @@ engine tabulates them once up front — and only the stock admission
 policies, `FleetLoadModel` load coupling, and ``load_probe=None`` are
 supported.  Custom duck-typed policies/sims/probes keep using the host
 loop.  ``replan_overhead_s`` and `EventStats.replan_s` are host-loop
-wall-clock concepts and are reported as zero/empty here.
+wall-clock concepts and are reported as zero/empty here.  The online
+estimator ``refresh`` loop also stays host-side (posterior updates need
+per-completion service observations) — precomputed
+``annotation_schedule`` swaps and the ``explore`` lane ARE supported and
+bit-compatible with the host loop.
 """
 from __future__ import annotations
 
@@ -69,7 +73,7 @@ from repro.core.controller_jax import (
     traced_fleet_plan,
     trie_engines,
 )
-from repro.core.events import _DEFAULT_CAPACITY, EventStats
+from repro.core.events import _DEFAULT_CAPACITY, EventStats, _explore_tables
 from repro.core.runtime import ExecutionResult, StageExecutor
 from repro.core.streaming import QuantileSketch, welford_merge
 from repro.core.trie import Trie, TrieAnnotations
@@ -109,6 +113,7 @@ class _EngineConfig:
     variant: str
     n_bins: int            # streaming histogram bins (incl. under/overflow)
     n_shards: int = 1      # lane-axis mesh extent (1 = single device)
+    explore: bool = False  # epsilon-greedy exploration lane (ISSUE 8)
 
 
 _ENGINE_CACHE: dict[_EngineConfig, Callable] = {}
@@ -834,6 +839,24 @@ def _build_step(cfg: _EngineConfig):
                            LANE_AXIS)
             tgt = jnp.where(need, enc[0] - 1, -1)
             nxt = jnp.where(need, enc[1] - 1, -1)
+        if cfg.explore:
+            # exploration lane (host 4c): a pre-drawn request's FIRST
+            # dispatch (root prefix) overrides the planner's pick with
+            # its explore model, iff the float32 budget guard passes
+            # against the live annotation version.  Same op order as the
+            # host guard (subtract, add, compare — all exact IEEE f32),
+            # applied after the downgrade lane, elementwise on replicated
+            # values (no collective).
+            xm = cn["xpm"][ownc]
+            xv = cn["child"][0, jnp.clip(xm, 0, M - 1)]
+            xvc = jnp.clip(xv, 0, cn["td"].lat.shape[0] - 1)
+            ok = (need & (nxt >= 0) & (st["su"] == 0) & (xm >= 0)
+                  & (el32 + (cn["td"].lat[xvc] - cn["td"].lat[0])
+                     <= cn["sc"][2])
+                  & (ec32 + (cn["td"].cost[xvc] - cn["td"].cost[0])
+                     <= cn["sc"][1]))
+            nxt = jnp.where(ok, xm, nxt)
+            st["xpc"] = st["xpc"] + jnp.sum(jnp.where(ok, 1, 0))
         stop = need & (nxt < 0)
         infeas = stop & (tgt < 0)
         oc = jnp.full(C, _OC_SERVED, i32)
@@ -1053,6 +1076,9 @@ def run_events_compiled(
     fleet_load=None,
     t_start: float = 0.0,
     plan_variant: str | None = None,
+    annotation_schedule=None,
+    refresh=None,
+    explore=None,
     epoch: int = DEFAULT_EPOCH,
     stream: bool = False,
     devices: int | None = None,
@@ -1078,6 +1104,17 @@ def run_events_compiled(
     device count (docs/EVENT_ENGINE.md, "Sharding").  ``None``/``1``
     keeps the single-device program unchanged.  On CPU hosts virtual
     devices come from ``--xla_force_host_platform_device_count``.
+
+    ``annotation_schedule`` swaps in re-annotated `TrieDevice` versions
+    mid-run (ISSUE 8): the epoch loop splits at each swap time, so every
+    event at ``t <= t_swap`` runs under the old annotations and the swap
+    is a pure operand substitution — the annotation columns are traced
+    operands, ZERO new compiled programs per swap.  ``explore`` enables
+    the same epsilon-greedy exploration lane as the host loop
+    (bit-compatible float32 budget guard).  ``refresh`` (the online
+    posterior loop) needs host-side service observations and raises
+    `NotImplementedError` here — use ``compiled=False`` or a precomputed
+    ``annotation_schedule``.
     """
     if policy not in ("dynamic", "dynamic_load_aware"):
         raise ValueError(f"unsupported events policy {policy!r}: the static "
@@ -1087,6 +1124,11 @@ def run_events_compiled(
         raise NotImplementedError(
             "compiled event engine cannot trace a host load_probe callback; "
             "use fleet_load=FleetLoadModel(...) or the host loop")
+    if refresh is not None:
+        raise NotImplementedError(
+            "compiled event engine cannot run the online estimator refresh "
+            "(posterior updates are host-side observations); use the host "
+            "loop (compiled=False) or a precomputed annotation_schedule")
     pol = get_policy(admission)
     tpol = traced_admission(pol)  # raises for custom policy subclasses
     requests = np.asarray(requests)
@@ -1148,6 +1190,18 @@ def run_events_compiled(
             _empty_summary(stats), stats)
 
     td = TrieDevice.build(trie, ann, restrict_nodes)
+    swaps: list[tuple[float, TrieDevice]] = []
+    if annotation_schedule:
+        sched = sorted(annotation_schedule, key=lambda sa: float(sa[0]))
+        for i, (ts, swap_ann) in enumerate(sched):
+            ts = float(ts)
+            if not np.isfinite(ts) or ts < 0:
+                raise ValueError(
+                    f"annotation_schedule swap time {ts!r} must be finite "
+                    "and non-negative")
+            swap_td = TrieDevice.build(trie, swap_ann, restrict_nodes)
+            swap_td.version = i + 1
+            swaps.append((ts, swap_td))
     lat_shift = np.zeros(B)
     eff_cap = None
     if priorities:
@@ -1183,6 +1237,7 @@ def run_events_compiled(
         term_mask &= keep
     pol.bind(trie, ann, obj, term_mask)
     tpol = traced_admission(pol)  # re-distill with bound min_path_lat
+    explore_model = _explore_tables(trie, term_mask, B, explore)
     deadline_sheds = pol.shed_on_deadline and bool(
         np.isfinite(cap_req).any())
 
@@ -1240,7 +1295,7 @@ def run_events_compiled(
         ps=ps, load_aware=load_aware, deadline_sheds=deadline_sheds,
         pol=tpol, kind=obj.kind, kind_dg="min_cost",
         variant=_resolve_variant(plan_variant), n_bins=sketch.n_bins,
-        n_shards=n_shards)
+        n_shards=n_shards, explore=explore_model is not None)
     step = _build_step(cfg)
 
     from jax.experimental import enable_x64
@@ -1279,19 +1334,35 @@ def run_events_compiled(
             "mcost": jnp.asarray(min_cost),
             "edges": jnp.asarray(sketch.edges),
         }
+        if explore_model is not None:
+            cn["xpm"] = jnp.asarray(explore_model)
         st = _init_state(jnp, cfg, B, arrivals[order])
 
         arrs = arrivals[order]
         chunk = max(int(epoch), 1)
         pos = 0
+        si = 0
         while True:
-            pos = min(pos + chunk, B)
-            t_hi = np.inf if pos >= B else float(arrs[pos - 1])
-            st = step(st, cn, t_hi)
+            pos2 = min(pos + chunk, B)
+            t_arr_hi = np.inf if pos2 >= B else float(arrs[pos2 - 1])
+            if si < len(swaps) and swaps[si][0] < t_arr_hi:
+                # annotation-version swap: run the current program up to
+                # the swap time (events at t <= t_swap stay under the old
+                # annotations — same rule as the host loop), then
+                # substitute the new TrieDevice operand.  t_hi and the
+                # annotation columns are traced operands, so the swap
+                # compiles ZERO new programs.
+                st = step(st, cn, float(swaps[si][0]))
+                cn = {**cn, "td": swaps[si][1]}
+                si += 1
+                continue
+            st = step(st, cn, t_arr_hi)
+            pos = pos2
             if pos >= B:
                 # arrivals exhausted: one final unbounded epoch drains
                 # every remaining completion/deadline event
                 break
+        stats.annotation_swaps = si
         n_done = int(st["don"])
         if n_done != B:
             raise RuntimeError(
@@ -1306,6 +1377,7 @@ def run_events_compiled(
         stats.downgraded = int(st["dgc"])
         stats.preemptions = int(st["pre"])
         stats.resumed = int(st["res"])
+        stats.explored = int(st["xpc"])
         stats.peak_occupancy = {
             e: int(v) for e, v in zip(engines, np.asarray(st["po"]))}
         sketch.merge_counts(np.asarray(st["hist"]), edges=sketch.edges)
@@ -1422,6 +1494,7 @@ def _init_state(jnp, cfg: _EngineConfig, B: int, arrs_sorted: np.ndarray):
         "cw": (jnp.asarray(0.0, f64), jnp.asarray(0.0, f64),
                jnp.asarray(0.0, f64)),
         "hist": jnp.zeros(cfg.n_bins, i64),
+        "xpc": jnp.asarray(0, i64),
     }
     if cfg.priorities:
         st.update({

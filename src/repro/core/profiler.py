@@ -71,6 +71,38 @@ class ProfileResult:
         c[c == 0] = 1.0
         return self.stage_lat_sum / c
 
+    def stage_success_stats(self, trie) -> tuple[np.ndarray, np.ndarray]:
+        """(D, M) conditional success mean and direct-observation count,
+        aggregated from the per-node ``obs`` columns by (invocation
+        depth, model) group.
+
+        This is the prior table for the online accuracy posteriors
+        (`repro.core.estimators.OnlineEstimators.from_profile`): each
+        cell averages the direct conditional outcomes of every trie node
+        invoking model m at position d.  Cells with no observations fall
+        back to the depth mean, then the global mean, then 0.5 — the
+        same fallback ladder the offline estimators use per node."""
+        D = int(trie.template.max_depth)
+        M = int(trie.template.n_models)
+        succ = np.zeros((D, M))
+        cnt = np.zeros((D, M))
+        mask = self.obs >= 0
+        col_cnt = mask.sum(axis=0)
+        col_succ = np.where(mask, self.obs, 0).sum(axis=0)
+        for u in range(1, trie.n_nodes):
+            d = int(trie.depth[u]) - 1
+            m = int(trie.model[u])
+            succ[d, m] += col_succ[u]
+            cnt[d, m] += col_cnt[u]
+        mean = np.divide(succ, np.maximum(cnt, 1.0))
+        have = cnt > 0
+        g = mean[have].mean() if have.any() else 0.5
+        for d in range(D):
+            row_have = have[d]
+            d_mean = mean[d, row_have].mean() if row_have.any() else g
+            mean[d, ~row_have] = d_mean
+        return mean, cnt
+
 
 class CheckpointStore:
     """(request, node) -> executed stage outcome, with hit statistics.

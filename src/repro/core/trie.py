@@ -232,6 +232,16 @@ class TrieAnnotations:
     cost: np.ndarray
     lat: np.ndarray
 
+    def scaled(self, acc: float = 1.0, cost: float = 1.0,
+               lat: float = 1.0) -> "TrieAnnotations":
+        """A copy with each column multiplied by the given factor — the
+        standard way tests and benchmarks synthesize drifted annotation
+        versions for ``annotation_schedule`` swaps.  Positive factors
+        preserve root->leaf monotonicity; keep the ``acc`` factor <= 1 so
+        accuracies stay probabilities."""
+        return TrieAnnotations(acc=self.acc * acc, cost=self.cost * cost,
+                               lat=self.lat * lat)
+
     def check_monotone(self, trie: Trie, atol: float = 1e-9) -> bool:
         """True when acc/cost/lat are monotone non-decreasing along every
         root->node edge (within ``atol``) — the property the planner's

@@ -57,6 +57,24 @@ def fit_slowdown_curve(model: EngineLoadModel,
     return lv, mu, (float(a), float(b))
 
 
+def step_slowdown(at_t: float, factor: float, engine: str | None = None):
+    """Piecewise-constant drift schedule for
+    `repro.core.runtime.make_workload_executor`: stage latency on
+    ``engine`` (every engine when None) multiplies by ``factor`` from
+    virtual time ``at_t`` onward.  The canonical engine-slowdown drift
+    scenario (`benchmarks/drift.py`, the online-estimator refresh tests)
+    — a step the offline annotations cannot see but the latency
+    posteriors track."""
+    if factor <= 0:
+        raise ValueError(f"slowdown factor must be positive, got {factor}")
+
+    def fn(e: str, t_now: float) -> float:
+        return factor if t_now >= at_t and (engine is None or e == engine) \
+            else 1.0
+
+    return fn
+
+
 @dataclasses.dataclass
 class LoadTrace:
     """Time-varying background load per engine: piecewise-constant number
@@ -525,10 +543,16 @@ def traced_engine_rates(occ, conc):
 
     ``occ`` is the (E,) active-job count (float), ``conc`` the (E,) engine
     concurrency.  Idle engines come out at rate 1.0 exactly like the host
-    (whose loop skips them)."""
-    import jax.numpy as jnp
+    (whose loop skips them).
 
-    return 1.0 / jnp.maximum(1.0, occ / conc)
+    The barrier materializes the reciprocal with its own rounding, as the
+    host does: XLA's algebraic simplifier otherwise folds a downstream
+    ``dt * rate`` into ``dt / slowdown`` (one rounding instead of two),
+    drifting the calendar 1 ULP off the host on non-dyadic trajectories."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    return lax.optimization_barrier(1.0 / jnp.maximum(1.0, occ / conc))
 
 
 def traced_job_rates(job_engine, weight, active, rates, weighted):
@@ -609,8 +633,17 @@ def traced_advance(remaining, t_last, t, job_engine, weight, active,
     rates = traced_engine_rates(occ, conc)
     jr = traced_job_rates(job_engine, weight, active, rates, weighted)
     do = (dt > 0.0) & active.any()
-    remaining = jnp.where(do & active, remaining - dt * jr, remaining)
-    return remaining, jnp.maximum(t_last, t)
+    # the maximum() pins the host's two-rounding op order: a bare
+    # ``remaining - dt * jr`` gets contracted to an FMA (one rounding)
+    # by LLVM codegen — neither `lax.optimization_barrier` nor a select
+    # survives that lowering — putting the drained work 1 ULP off the
+    # host calendar whenever dt * jr is inexact; the dyadic oracle grids
+    # never catch it, real trajectories do.  max(p, 0) is exact identity
+    # here (dt > 0 under ``do`` and rates are non-negative), and inactive
+    # lanes subtract an exact 0.0 (IEEE: x - 0.0 == x), matching the
+    # host's masked in-place update.
+    drained = jnp.where(do & active, jnp.maximum(dt * jr, 0.0), 0.0)
+    return remaining - drained, jnp.maximum(t_last, t)
 
 
 @dataclasses.dataclass

@@ -25,6 +25,17 @@ float comparisons exact:
   so these scenarios carry no deadlines (nothing compares against the
   float32 planner) and exercise weighted sharing + preemption; the oracle
   replays the same IEEE drain operations at the same event timestamps.
+
+The **drift lane** (ISSUE 8) adds scheduled annotation-version swaps:
+`Scenario.drift` carries ``(t_swap, per-stage latency steps)`` pairs on
+the same binary grid, `run_subject` turns them into an
+``annotation_schedule`` for the real engines, and the oracle re-derives
+its ``cum`` planning table at the same strictly-past-``t_swap``
+boundaries — events at ``t <= t_swap`` plan under the old version.  The
+admission gate's min-path scalar stays frozen at version 0, mirroring
+the engines (bound feasibility scalars never refresh on swap).  Chain
+tries make bandit exploration structurally a no-op (one admissible
+model per depth), so the oracle needs no exploration logic.
 """
 from __future__ import annotations
 
@@ -66,6 +77,10 @@ class Scenario:
     classes: np.ndarray | None    # (n,) in {0: interactive, 1: batch}
     class_caps: tuple             # per-class deadline (None = obj fallback)
     preempt: bool = True
+    # scheduled annotation-version swaps: ((t_swap, ann_step_v), ...)
+    # sorted by time, every t_swap strictly before the last arrival and
+    # every ann_step_v a (depth,) array on the 1/8 grid
+    drift: tuple = ()
 
 
 def random_scenario(seed: int) -> Scenario:
@@ -105,6 +120,44 @@ def random_scenario(seed: int) -> Scenario:
                     arrivals, work, succ, cost, ann_step,
                     lat_cap=lat_cap, admission=admission, concurrency=None,
                     classes=classes, class_caps=tuple(caps), preempt=preempt)
+
+
+def random_drift_scenario(seed: int) -> Scenario:
+    """A `random_scenario` draw with 1-3 scheduled annotation-version
+    swaps attached.  Swap times sit on the 1/8 grid strictly before the
+    last arrival, so every swap is applied by BOTH engines (the host
+    applies a swap only when a later event exists; the compiled engine
+    applies all remaining swaps before its final drain epoch) and the
+    ``annotation_swaps`` counters agree.  Degenerate draws (all arrivals
+    at t=0) come back drift-free."""
+    sc = random_scenario(seed)
+    rng = np.random.default_rng(seed + 987_654)
+    hi = int(round(float(sc.arrivals.max()) * 8))  # arrivals are /8 grid
+    if hi < 2:
+        return sc
+    n_swaps = int(rng.integers(1, 4))
+    ts = np.unique(rng.integers(1, hi, size=n_swaps)) / 8.0
+    drift = tuple((float(t), rng.integers(2, 17, size=sc.depth) / 8.0)
+                  for t in ts)
+    return dataclasses.replace(sc, drift=drift)
+
+
+def drift_schedule(sc: Scenario, trie) -> list | None:
+    """`Scenario.drift` rendered as the engines' ``annotation_schedule``
+    argument: each swap's per-stage latency steps become a full chain-trie
+    annotation set via the same cumulative construction as
+    `_chain_setup` (acc/cost columns unchanged)."""
+    if not sc.drift:
+        return None
+    out = []
+    for ts, step in sc.drift:
+        cum = np.concatenate([[0.0], np.cumsum(np.asarray(step))])
+        out.append((float(ts), TrieAnnotations(
+            acc=trie.depth.astype(np.float64) * 0.125,
+            cost=np.zeros(trie.n_nodes),
+            lat=cum[trie.depth.astype(np.int64)],
+        )))
+    return out
 
 
 def _chain_setup(sc: Scenario):
@@ -172,6 +225,7 @@ def run_subject(sc: Scenario, engine: str = "host",
         arrivals=sc.arrivals, capacity=sc.capacity,
         admission=sc.admission, classes=sc.classes,
         class_specs=class_specs_of(sc), preempt=sc.preempt,
+        annotation_schedule=drift_schedule(sc, trie),
         compiled=(engine == "compiled"), devices=devices, **kw)
 
 
@@ -183,7 +237,10 @@ def run_oracle(sc: Scenario) -> list[dict]:
     per request: outcome, success, stages, cost, done_t, slo, preempts."""
     n, D, C = sc.n_requests, sc.depth, sc.capacity
     cum = np.concatenate([[0.0], np.cumsum(sc.ann_step)])
-    min_path = float(cum[1])
+    min_path = float(cum[1])   # admission scalar: frozen at version 0
+    drift_q = sorted(((float(ts), np.concatenate([[0.0],
+                                                  np.cumsum(np.asarray(s))]))
+                      for ts, s in sc.drift), key=lambda p: p[0])
     base_cap = sc.lat_cap if sc.lat_cap is not None else np.inf
     if sc.classes is not None:
         caps = np.array([sc.class_caps[k] if sc.class_caps[k] is not None
@@ -305,6 +362,12 @@ def run_oracle(sc: Scenario) -> list[dict]:
         if not np.isfinite(t):
             assert not queue and all(s["slot"] is None for s in st)
             break
+        # annotation-version swaps: events at t <= t_swap plan under the
+        # old cum table; the first event strictly past it sees the new
+        # one (the engines' rule, applied to the planner only — the
+        # admission min-path scalar above stays at version 0)
+        while drift_q and t > drift_q[0][0]:
+            cum = drift_q.pop(0)[1]
         advance(t)
         need: list[int] = []
 
@@ -482,6 +545,8 @@ def assert_scenario_matches(sc: Scenario, engine: str = "host",
     """Run subject and oracle on ``sc`` and assert they agree."""
     res, stats = run_subject(sc, engine=engine, devices=devices)
     ref = run_oracle(sc)
+    assert stats.annotation_swaps == len(sc.drift), \
+        (stats.annotation_swaps, sc.drift)
     comp_subject = sorted(range(sc.n_requests),
                           key=lambda i: (round(stats.done_t[i], 6), i))
     comp_oracle = sorted(range(sc.n_requests),

@@ -1,10 +1,22 @@
 """Estimator correctness: MNAR bias signs, decomposition consistency,
-paper Table-1 ordering."""
+paper Table-1 ordering — plus the ISSUE 8 online-posterior properties
+(merge order-insensitivity, monotone decay, bitwise prior recovery at
+zero observations, exact state round-trips, versioned publication)."""
+import json
+
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.estimators import ESTIMATORS, _compose, annotate
+from repro.core.estimators import (
+    ESTIMATORS,
+    BetaPosterior,
+    GaussianPosterior,
+    OnlineEstimators,
+    TrieAnnotator,
+    _compose,
+    annotate,
+)
 from repro.core.profiler import profile_cascade
 from repro.core.trie import Trie
 from repro.core.workflow import ModelSpec, make_refinement_workflow
@@ -79,3 +91,169 @@ def test_vinelm_monotone_annotations():
     ann = annotate(trie, prof, "vinelm")
     assert ann.check_monotone(trie)
     assert np.all(ann.acc >= 0) and np.all(ann.acc <= 1)
+
+
+# ----------------------------------------------------------------------
+# ISSUE 8: online posterior properties
+# ----------------------------------------------------------------------
+def _feed(post, xs):
+    for x in xs:
+        post.observe(x)
+    return post
+
+
+@given(data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_posterior_merge_order_insensitive(data):
+    """Splitting one observation stream across two evidence streams and
+    merging must be exactly commutative — bitwise identical state both
+    ways, for the Beta counter pair and the canonically-ordered Welford
+    merge alike."""
+    prior = data.draw(st.floats(0.05, 0.95))
+    strength = data.draw(st.floats(0.5, 16.0))
+    flips = data.draw(st.lists(st.booleans(), min_size=0, max_size=30))
+    vals = data.draw(st.lists(
+        st.floats(0.0, 8.0, allow_nan=False), min_size=0, max_size=30))
+    cut_f = data.draw(st.integers(0, len(flips)))
+    cut_v = data.draw(st.integers(0, len(vals)))
+
+    ba = _feed(BetaPosterior(prior, strength), flips[:cut_f])
+    bb = _feed(BetaPosterior(prior, strength), flips[cut_f:])
+    assert ba.merge(bb).state() == bb.merge(ba).state()
+
+    ga = _feed(GaussianPosterior(prior, strength), vals[:cut_v])
+    gb = _feed(GaussianPosterior(prior, strength), vals[cut_v:])
+    m1, m2 = ga.merge(gb), gb.merge(ga)
+    assert m1.state() == m2.state()
+    assert m1.mean() == m2.mean()  # bitwise, not approx
+
+
+def test_posterior_merge_rejects_different_priors():
+    with pytest.raises(ValueError, match="prior"):
+        BetaPosterior(0.5, 4.0).merge(BetaPosterior(0.6, 4.0))
+    with pytest.raises(ValueError, match="prior"):
+        GaussianPosterior(1.0, 4.0).merge(GaussianPosterior(1.0, 2.0))
+
+
+@given(data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_decay_moves_posterior_monotonically_toward_prior(data):
+    """Exponential forgetting: as gamma shrinks, the evidence weight
+    shrinks and the posterior mean moves monotonically toward the
+    offline prior — reaching it EXACTLY (bitwise) at gamma = 0."""
+    prior = data.draw(st.floats(0.05, 0.95))
+    strength = data.draw(st.floats(0.5, 16.0))
+    flips = data.draw(st.lists(st.booleans(), min_size=1, max_size=30))
+    vals = data.draw(st.lists(
+        st.floats(0.0, 8.0, allow_nan=False), min_size=1, max_size=30))
+    gammas = sorted(data.draw(st.lists(
+        st.floats(0.0, 1.0), min_size=2, max_size=6)), reverse=True)
+    for post, obs in ((BetaPosterior(prior, strength), flips),
+                      (GaussianPosterior(prior, strength), vals)):
+        _feed(post, obs)
+        gaps = []
+        for g in gammas:
+            fresh = type(post).from_state(post.state())
+            fresh.decay(g)
+            gaps.append(abs(fresh.mean() - prior))
+        assert all(a >= b - 1e-15 for a, b in zip(gaps, gaps[1:])), \
+            (gammas, gaps)
+        dead = type(post).from_state(post.state())
+        dead.decay(0.0)
+        assert dead.mean() == prior  # bitwise
+        with pytest.raises(ValueError, match="decay"):
+            post.decay(1.5)
+
+
+def test_zero_observation_posterior_is_offline_prior_bitwise():
+    """An idle refresh loop must not perturb the offline annotations:
+    with zero online observations every posterior mean equals its
+    offline prior BITWISE (the prior-plus-correction form guarantees a
+    ±0.0 correction term), and the annotator's published tables are
+    monotone like any offline annotation set."""
+    trie, wl = _setup(n_models=3, n_q=200)
+    prof = profile_cascade(wl, trie, 0.05, seed=3)
+    est = OnlineEstimators.from_profile(trie, prof)
+    D, M = est.shape
+    assert (D, M) == (trie.template.max_depth, trie.template.n_models)
+    for d in range(D):
+        for m in range(M):
+            assert est.acc[d][m].mean() == est.acc[d][m].prior
+            assert est.cost[d][m].mean() == est.cost[d][m].prior
+            assert est.lat[d][m].mean() == est.lat[d][m].prior
+    ann = TrieAnnotator(trie, est).annotations()
+    assert ann.check_monotone(trie)
+    assert np.all(ann.acc >= 0) and np.all(ann.acc <= 1)
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_estimator_state_round_trips_exactly(seed):
+    """`state()` -> JSON -> `from_state` is the identity: every
+    posterior cell, the observation counter, and every derived table
+    come back bitwise equal."""
+    rng = np.random.default_rng(seed)
+    trie, wl = _setup(n_models=3, n_q=120, seed=seed % 5)
+    prof = profile_cascade(wl, trie, 0.05, seed=seed % 7)
+    est = OnlineEstimators.from_profile(trie, prof)
+    D, M = est.shape
+    for _ in range(int(rng.integers(0, 40))):
+        est.observe(int(rng.integers(0, D)), int(rng.integers(0, M)),
+                    bool(rng.random() < 0.5), float(rng.random()),
+                    float(rng.random() * 4))
+    if rng.random() < 0.5:
+        est.decay_all(float(rng.uniform(0.2, 1.0)))
+    back = OnlineEstimators.from_state(json.loads(json.dumps(est.state())))
+    assert back.observations == est.observations
+    assert back.state() == est.state()
+    np.testing.assert_array_equal(back.q_table(), est.q_table())
+    np.testing.assert_array_equal(back.cost_table(), est.cost_table())
+    np.testing.assert_array_equal(back.lat_table(), est.lat_table())
+
+
+def test_observations_shift_posterior_tables():
+    """Online evidence actually moves the tables: a run of failures
+    drags a cell's accuracy below its prior; slow executions raise the
+    latency posterior above its prior."""
+    trie, wl = _setup(n_models=3, n_q=200)
+    prof = profile_cascade(wl, trie, 0.05, seed=4)
+    est = OnlineEstimators.from_profile(trie, prof)
+    q0, l0 = est.q_table(), est.lat_table()
+    for _ in range(50):
+        est.observe(0, 1, False, 0.01, l0[0, 1] * 4.0 + 1.0)
+    assert est.observations == 50
+    assert est.q_table()[0, 1] < q0[0, 1]
+    assert est.lat_table()[0, 1] > l0[0, 1]
+    # untouched cells stay bitwise at their priors
+    q1 = est.q_table()
+    assert q1[0, 0] == q0[0, 0] and q1[-1, -1] == q0[-1, -1]
+
+
+def test_annotator_publishes_versioned_devices_and_supersedes():
+    """`publish` bumps the version, donates the superseded device's
+    annotation buffers, and any stale reader fails loudly through
+    `check_live` with an error naming the version transition."""
+    trie, wl = _setup(n_models=3, n_q=200)
+    prof = profile_cascade(wl, trie, 0.05, seed=5)
+    annot = TrieAnnotator(trie, OnlineEstimators.from_profile(trie, prof))
+    td1 = annot.publish()
+    assert td1.version == 1
+    td1.check_live()
+    annot.estimators.observe(0, 0, False, 0.1, 2.0)
+    td2 = annot.publish()
+    assert td2.version == 2 and td2.superseded_by is None
+    assert td1.superseded_by == 2
+    with pytest.raises(RuntimeError, match="version"):
+        td1.check_live()
+    td2.check_live()
+    # identical structure: the swap never retraces (leaf signatures)
+    assert td1.acc.shape == td2.acc.shape
+    assert td1.lat.dtype == td2.lat.dtype
+
+
+def test_annotator_rejects_mismatched_table_shape():
+    trie, wl = _setup(n_models=3, n_q=120)
+    bad = OnlineEstimators.from_tables(
+        np.full((2, 2), 0.5), np.zeros((2, 2)), np.ones((2, 2)))
+    with pytest.raises(ValueError, match="shape"):
+        TrieAnnotator(trie, bad)

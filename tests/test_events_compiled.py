@@ -225,3 +225,14 @@ def test_compiled_rejects_host_only_features():
         run_events(trie, ann, obj, reqs, execu, arrivals=arrivals,
                    compiled=True, policy="dynamic_load_aware",
                    fleet_load=DuckLoad())
+
+    # the online estimator refresh loop needs per-completion host
+    # observations — host lane only (a precomputed annotation_schedule
+    # is the compiled-lane equivalent)
+    from repro.core.estimators import OnlineEstimators, RefreshConfig
+    D, M = trie.template.max_depth, trie.template.n_models
+    est = OnlineEstimators.from_tables(
+        np.full((D, M), 0.5), np.full((D, M), 0.01), np.ones((D, M)))
+    with pytest.raises(NotImplementedError, match="refresh"):
+        run_events(trie, ann, obj, reqs, execu, arrivals=arrivals,
+                   compiled=True, refresh=RefreshConfig(est))

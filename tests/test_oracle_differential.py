@@ -16,11 +16,15 @@ event loop) and ``engine="compiled"`` (the jitted epoch-batched engine,
 bit-compatible with the oracle, which transitively pins the compiled
 engine to the host loop.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 from oracle_sim import (
     Scenario,
     assert_scenario_matches,
+    drift_schedule,
+    random_drift_scenario,
     random_scenario,
     run_oracle,
     run_subject,
@@ -83,6 +87,72 @@ def test_handcrafted_preemption_scenario(engine):
     assert st2.done_t.tolist() == pytest.approx([2.0, 3.0])
 
 
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("seed", range(20))
+def test_drift_scenarios_match_oracle(seed, engine):
+    """Scheduled annotation-version swaps mid-run: both engines must
+    still match the oracle request-for-request, with every swap applied
+    (`assert_scenario_matches` also pins the ``annotation_swaps``
+    counter to the drift schedule length)."""
+    assert_scenario_matches(random_drift_scenario(seed), engine=engine)
+
+
+def test_drift_sweep_is_not_trivial():
+    """The drift sweep must actually re-plan differently somewhere:
+    across the seeds above, at least one request's disposition (outcome
+    or stage count) changes versus the frozen-annotation replay."""
+    changed = 0
+    for seed in range(20):
+        sc = random_drift_scenario(seed)
+        if not sc.drift:
+            continue
+        base = run_oracle(dataclasses.replace(sc, drift=()))
+        ref = run_oracle(sc)
+        changed += sum(a["outcome"] != b["outcome"]
+                       or a["stages"] != b["stages"]
+                       for a, b in zip(base, ref))
+    assert changed > 0, "annotation drift never changed a disposition"
+
+
+def test_drift_swaps_mid_epoch_bit_compatible():
+    """Force every swap to land mid-epoch-stream (epoch width 1: one
+    arrival per compiled program invocation) and across wider widths:
+    results must stay bit-identical to the host loop regardless of how
+    the epoch chunking interleaves with the swap boundaries."""
+    sc = random_drift_scenario(10)
+    assert len(sc.drift) >= 1
+    _, base_stats = baseline = run_subject(sc, engine="host")
+    for epoch in (1, 2, sc.n_requests, 4096):
+        res, stats = run_subject_epoch(sc, epoch)
+        assert [r.outcome for r in res] == \
+            [r.outcome for r in baseline[0]]
+        assert stats.done_t.tolist() == base_stats.done_t.tolist()
+        assert stats.annotation_swaps == len(sc.drift)
+
+
+def test_no_retrace_across_annotation_swaps():
+    """ISSUE 8 acceptance: an annotation-version swap is a pure buffer
+    substitution.  After warmup, re-running a multi-swap drift scenario
+    adds ZERO compiled programs in both the epoch-batched engine and the
+    resident planner caches."""
+    from repro.core.controller_jax import fleet_planner_cache_size
+    from repro.core.events_compiled import compiled_engine_cache_size
+
+    sc = random_drift_scenario(10)
+    assert len(sc.drift) >= 1
+    run_subject(sc, engine="compiled")   # warmup (compiles the programs)
+    run_subject(sc, engine="host")
+    e0, p0 = compiled_engine_cache_size(), fleet_planner_cache_size()
+    _, cstats = run_subject(sc, engine="compiled")
+    _, hstats = run_subject(sc, engine="host")
+    assert cstats.annotation_swaps == len(sc.drift)
+    assert hstats.annotation_swaps == len(sc.drift)
+    assert compiled_engine_cache_size() == e0, \
+        "annotation swap retraced the compiled engine"
+    assert fleet_planner_cache_size() == p0, \
+        "annotation swap retraced the resident planner"
+
+
 def test_compiled_engine_no_retrace_across_epoch_widths():
     """The epoch width is a host-side chunking knob: every width must
     reuse the same compiled program (the epoch boundary enters the step
@@ -130,6 +200,7 @@ def run_subject_epoch(sc, epoch):
         arrivals=sc.arrivals, capacity=sc.capacity,
         admission=sc.admission, classes=sc.classes,
         class_specs=class_specs_of(sc), preempt=sc.preempt,
+        annotation_schedule=drift_schedule(sc, trie),
         compiled=True, epoch=epoch, **kw)
 
 

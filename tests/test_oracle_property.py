@@ -20,7 +20,12 @@ import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
-from oracle_sim import Scenario, assert_scenario_matches, random_scenario
+from oracle_sim import (
+    Scenario,
+    assert_scenario_matches,
+    random_drift_scenario,
+    random_scenario,
+)
 
 from repro.core.controller import Objective
 from repro.core.events import run_events
@@ -59,6 +64,26 @@ def test_fuzz_scenarios_match_oracle_compiled(seed, pre):
     sc = random_scenario(seed)
     assert_scenario_matches(Scenario(**{**sc.__dict__, "preempt": pre}),
                             engine="compiled")
+
+
+@given(seed=st.integers(0, 10**6), pre=st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_fuzz_drift_scenarios_match_oracle(seed, pre):
+    """Fuzz with forced annotation-version swaps (`random_drift_scenario`
+    attaches 1-3 mid-run swaps): the engine must keep matching the oracle
+    across version boundaries, preemption forced both ways."""
+    sc = random_drift_scenario(seed)
+    assert_scenario_matches(Scenario(**{**sc.__dict__, "preempt": pre}))
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_fuzz_drift_scenarios_match_oracle_compiled(seed):
+    """Bounded compiled-lane fuzz with forced swaps (each new
+    (config, cohort-shape) pair pays an XLA compile; the swap itself
+    never does — that is the no-retrace acceptance pin in
+    `test_oracle_differential.py`)."""
+    assert_scenario_matches(random_drift_scenario(seed), engine="compiled")
 
 
 # ----------------------------------------------------------------------

@@ -28,7 +28,12 @@ import sys
 import jax
 import numpy as np
 import pytest
-from oracle_sim import assert_scenario_matches, random_scenario, run_subject
+from oracle_sim import (
+    assert_scenario_matches,
+    random_drift_scenario,
+    random_scenario,
+    run_subject,
+)
 
 from repro.core.controller import Objective
 from repro.core.controller_jax import (
@@ -146,6 +151,17 @@ def test_sharded_oracle_sweep(seed, devices):
     """The deterministic differential-oracle sweep, re-run sharded."""
     assert_scenario_matches(random_scenario(seed), engine="compiled",
                             devices=devices)
+
+
+@multidevice
+@pytest.mark.parametrize("seed", range(0, 20, 4))
+def test_sharded_drift_sweep(seed):
+    """ISSUE 8: the drift differential sweep (forced annotation-version
+    swaps mid-run) over the lane-sharded control plane at 2 virtual
+    devices — a version swap must stay a pure buffer substitution on
+    every shard, bit-compatible with the oracle."""
+    assert_scenario_matches(random_drift_scenario(seed), engine="compiled",
+                            devices=2)
 
 
 @multidevice
