@@ -55,6 +55,13 @@ from repro.core.trie import Trie, TrieAnnotations
 SERVED = "served"      # ran to success / exhausted depth / planner stop
 REJECTED = "rejected"  # turned away before any stage executed
 SHED = "shed"          # aborted mid-flight (>=1 stage executed or in service)
+FAILED = "failed"      # killed by the fault model (retries exhausted, or a
+#                        fault-touched request whose budget then died)
+
+#: the closed set of ``ExecutionResult.outcome`` values — every runtime
+#: emits members of this tuple and `repro.core.runtime.summarize` keys its
+#: disposition rates off it (tests assert membership)
+OUTCOMES = (SERVED, REJECTED, SHED, FAILED)
 
 
 def _subtree_reductions(trie: Trie, ann: TrieAnnotations,
@@ -138,6 +145,14 @@ class AdmissionPolicy:
         into the planner's delta_e row (load-aware serving only; called
         once per replan).  The default is a no-op."""
         return delay_row
+
+    def note_displaced(self, work: float) -> None:
+        """Fault-model hook: the event loop reports unloaded work knocked
+        off an engine calendar by an outage (positive when checkpointed
+        stages are requeued, negative once they redispatch or terminate).
+        Displaced work is load the calendar no longer carries but that is
+        still owed — predictive gating folds it into the planner anchor
+        (`PredictiveGate.note_displaced`); the base policy ignores it."""
 
     def classify_infeasible(self, n_executed_stages: int) -> str:
         """Outcome label for a request the planner finds infeasible at
@@ -323,6 +338,10 @@ class PredictiveGate(FeasibilityGate):
             raise ValueError("backlog_delay must be >= 0")
         self.discount = float(discount)
         self.backlog_delay = float(backlog_delay)
+        # unloaded work outages knocked off the calendar and not yet
+        # redispatched (repro.core.faults): owed load the drain forecast
+        # cannot see — folded into forecast_delay_row below
+        self._displaced = 0.0
         # optional online calibration of the frozen-rate projection: the
         # runtime's wait forecast is scaled by the posterior-mean
         # realized/projected service ratio (exactly 1.0 until fed, so a
@@ -368,8 +387,18 @@ class PredictiveGate(FeasibilityGate):
         if self.backlog_delay == 0.0:
             return delay_row
         drain = sim.backlog_drain_times(t)
-        return np.maximum(delay_row,
-                          self.backlog_delay * drain).astype(delay_row.dtype)
+        row = np.maximum(delay_row, self.backlog_delay * drain)
+        if self._displaced > 0.0 and row.size:
+            # outage-displaced work is off the calendar but still owed;
+            # until it redispatches it presses on the whole fleet — spread
+            # it evenly so the planner keeps pricing the failure-inflated
+            # load instead of the post-outage instantaneous occupancy
+            row = row + self.backlog_delay * self._displaced / row.size
+        return row.astype(delay_row.dtype)
+
+    def note_displaced(self, work: float) -> None:
+        """Track outage-displaced unloaded work (see base docstring)."""
+        self._displaced = max(self._displaced + float(work), 0.0)
 
 
 class CostAwareShed(FeasibilityGate):

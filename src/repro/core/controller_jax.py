@@ -222,30 +222,31 @@ class TrieDevice:
 
 
 def _dispatch_plan(td: TrieDevice, prefixes, elapsed_lat, elapsed_cost,
-                   engine_delays, acc_floor, cost_cap, lat_cap,
+                   engine_delays, blocked, acc_floor, cost_cap, lat_cap,
                    *, kind, variant):
     return kernel_ops.trie_plan(
         td.terminal, td.depth, td.acc, td.cost, td.lat, td.subtree_size,
         td.path_models, td.path_counts, td.engine_of_model,
         prefixes, elapsed_lat, elapsed_cost, engine_delays,
-        acc_floor, cost_cap, lat_cap, kind=kind, variant=variant)
+        acc_floor, cost_cap, lat_cap, kind=kind, variant=variant,
+        blocked_depth=blocked)
 
 
 @partial(jax.jit, static_argnames=("kind", "variant"))
 def _plan_shared_delays(td, prefixes, elapsed_lat, elapsed_cost,
-                        engine_delays, acc_floor, cost_cap, lat_cap,
-                        *, kind, variant):
+                        engine_delays, blocked, acc_floor, cost_cap,
+                        lat_cap, *, kind, variant):
     delays = jnp.broadcast_to(
         engine_delays[None, :], (prefixes.shape[0], engine_delays.shape[0]))
     tgt, _ = _dispatch_plan(td, prefixes, elapsed_lat, elapsed_cost, delays,
-                            acc_floor, cost_cap, lat_cap,
+                            blocked, acc_floor, cost_cap, lat_cap,
                             kind=kind, variant=variant)
     return tgt
 
 
 @partial(jax.jit, static_argnames=("kind", "variant"))
 def _fleet_step(td, prefixes, elapsed_lat, elapsed_cost, engine_delays,
-                acc_floor, cost_cap, lat_cap, *, kind, variant):
+                blocked, acc_floor, cost_cap, lat_cap, *, kind, variant):
     """One lockstep replan for a whole fleet: targets AND first steps.
 
     `engine_delays` is (B, E) — per-request live delay vectors, so a
@@ -255,10 +256,15 @@ def _fleet_step(td, prefixes, elapsed_lat, elapsed_cost, engine_delays,
     the model chosen at invocation position d on the root->v path, and the
     next step from a depth-d prefix toward v is exactly that entry (fused
     into the tiled pass under the "fused"/"pallas" variants).
+
+    ``blocked`` is the (N,) engine-availability mask rendered as a node
+    column (`blocked_depth`; all-zeros = every engine up) — a traced
+    operand like the annotation columns, so outage/recovery mask flips
+    are pure value changes with ZERO new compiled programs.
     """
     return _dispatch_plan(td, prefixes, elapsed_lat, elapsed_cost,
-                          engine_delays, acc_floor, cost_cap, lat_cap,
-                          kind=kind, variant=variant)
+                          engine_delays, blocked, acc_floor, cost_cap,
+                          lat_cap, kind=kind, variant=variant)
 
 
 # ----------------------------------------------------------------------
@@ -278,14 +284,15 @@ def _apply_slot_updates(u, el, ec, idx, new_u, new_el, new_ec):
 
 
 @partial(jax.jit, static_argnames=("kind", "variant"))
-def _resident_plan(td, u, el, ec, delay_row, acc_floor, cost_cap, lat_cap,
-                   *, kind, variant):
+def _resident_plan(td, u, el, ec, delay_row, blocked, acc_floor, cost_cap,
+                   lat_cap, *, kind, variant):
     """Replan over the device-resident slot arrays with one shared (E,)
-    delay row (the only per-replan host->device tensor)."""
+    delay row and one shared (N,) availability mask (the only per-replan
+    host->device tensors)."""
     delays = jnp.broadcast_to(
         delay_row[None, :], (u.shape[0], delay_row.shape[0]))
-    return _dispatch_plan(td, u, el, ec, delays, acc_floor, cost_cap,
-                          lat_cap, kind=kind, variant=variant)
+    return _dispatch_plan(td, u, el, ec, delays, blocked, acc_floor,
+                          cost_cap, lat_cap, kind=kind, variant=variant)
 
 
 # ----------------------------------------------------------------------
@@ -348,15 +355,16 @@ def _sharded_plan(mesh, kind: str, variant: str):
     from repro.dist.sharding import lane_spec
     lane, rep = lane_spec(), PartitionSpec()
 
-    def plan(td, u, el, ec, delay_row, acc_floor, cost_cap, lat_cap):
+    def plan(td, u, el, ec, delay_row, blocked, acc_floor, cost_cap,
+             lat_cap):
         delays = jnp.broadcast_to(
             delay_row[None, :], (u.shape[0], delay_row.shape[0]))
-        return _dispatch_plan(td, u, el, ec, delays, acc_floor, cost_cap,
-                              lat_cap, kind=kind, variant=variant)
+        return _dispatch_plan(td, u, el, ec, delays, blocked, acc_floor,
+                              cost_cap, lat_cap, kind=kind, variant=variant)
 
     fn = jax.jit(shard_map(
         plan, mesh=mesh,
-        in_specs=(rep, lane, lane, lane, rep, rep, rep, rep),
+        in_specs=(rep, lane, lane, lane, rep, rep, rep, rep, rep),
         out_specs=(lane, lane), check_rep=False))
     _SHARDED_JITS[key] = fn
     return fn
@@ -380,7 +388,7 @@ def _sharded_plan_coupled(mesh, kind: str, variant: str):
     from repro.dist.sharding import LANE_AXIS, lane_spec
     lane, rep = lane_spec(), PartitionSpec()
 
-    def plan(td, u, el, ec, park, w, conc, ms, hasm,
+    def plan(td, u, el, ec, park, w, blocked, conc, ms, hasm,
              acc_floor, cost_cap, lat_cap):
         E = conc.shape[0]
         act = park >= 0
@@ -392,14 +400,14 @@ def _sharded_plan_coupled(mesh, kind: str, variant: str):
             hasm, (jnp.maximum(1.0, (occ + 1.0) / conc) - 1.0) * ms,
             0.0).astype(jnp.float32)
         delays = jnp.broadcast_to(row[None, :], (u.shape[0], E))
-        tgt, nxt = _dispatch_plan(td, u, el, ec, delays, acc_floor,
-                                  cost_cap, lat_cap, kind=kind,
+        tgt, nxt = _dispatch_plan(td, u, el, ec, delays, blocked,
+                                  acc_floor, cost_cap, lat_cap, kind=kind,
                                   variant=variant)
         return tgt, nxt, row
 
     fn = jax.jit(shard_map(
         plan, mesh=mesh,
-        in_specs=(rep, lane, lane, lane, lane, lane,
+        in_specs=(rep, lane, lane, lane, lane, lane, rep,
                   rep, rep, rep, rep, rep, rep),
         out_specs=(lane, lane, rep), check_rep=False))
     _SHARDED_JITS[key] = fn
@@ -456,6 +464,10 @@ class ResidentPlanner:
         self.variant = _resolve_variant(variant)
         self._td = td
         self._kind = obj.kind
+        # all-engines-up availability mask: the (N,) blocked_depth operand
+        # every replan is fed when the caller passes no fault mask — a real
+        # array (not None) so fault transitions are pure value changes
+        self._bd0 = jnp.zeros_like(td.depth)
         if lat_cap is not None:
             obj = dataclasses.replace(obj, lat_cap=float(lat_cap))
         self._scalars = _objective_scalars(obj)
@@ -627,23 +639,29 @@ class ResidentPlanner:
             self._park, self._w = self._scatter2(
                 (self._park, self._w), idx, (pk, wv))
 
-    def replan(self, delay_row) -> tuple[np.ndarray, np.ndarray]:
+    def replan(self, delay_row,
+               blocked=None) -> tuple[np.ndarray, np.ndarray]:
         """One fused replan over all capacity lanes; returns host
         (targets, next_models).  ``delay_row`` is the (E,) shared delta_e
-        vector for this instant."""
+        vector for this instant; ``blocked`` is the (N,) ``blocked_depth``
+        availability mask (None = every engine up) — a traced operand, so
+        outage/recovery flips never retrace."""
         self._check_live()
         row = np.asarray(delay_row, dtype=np.float32)
+        bd = self._bd0 if blocked is None \
+            else jnp.asarray(np.asarray(blocked, dtype=np.float32))
         if self.mesh is None:
             tgt, nxt = _resident_plan(
-                self._td, self._u, self._el, self._ec, row,
+                self._td, self._u, self._el, self._ec, row, bd,
                 *self._scalars, kind=self._kind, variant=self.variant)
         else:
             tgt, nxt = self._plan_fn(
-                self._td, self._u, self._el, self._ec, row, *self._scalars)
+                self._td, self._u, self._el, self._ec, row, bd,
+                *self._scalars)
         C = self.capacity
         return np.asarray(tgt)[:C], np.asarray(nxt)[:C]
 
-    def replan_coupled(self, conc, ms, hasm):
+    def replan_coupled(self, conc, ms, hasm, blocked=None):
         """Load-coupled sharded replan: derives the per-engine delay row
         from the resident occupancy columns (`update_loads`) with exactly
         one `psum`, then plans every lane against it.  ``conc``/``ms``/
@@ -654,9 +672,11 @@ class ResidentPlanner:
             raise RuntimeError("replan_coupled requires a lane mesh "
                                "(make_resident_planner(..., mesh=))")
         self._check_live()
+        bd = self._bd0 if blocked is None \
+            else jnp.asarray(np.asarray(blocked, dtype=np.float32))
         tgt, nxt, row = self._plan_coupled_fn(
             self._td, self._u, self._el, self._ec, self._park, self._w,
-            np.asarray(conc, dtype=np.float32),
+            bd, np.asarray(conc, dtype=np.float32),
             np.asarray(ms, dtype=np.float32),
             np.asarray(hasm, dtype=bool), *self._scalars)
         C = self.capacity
@@ -664,7 +684,8 @@ class ResidentPlanner:
 
 
 def traced_fleet_plan(td: TrieDevice, prefixes, elapsed_lat, elapsed_cost,
-                      delay_row, scalars, *, kind: str, variant: str):
+                      delay_row, scalars, *, kind: str, variant: str,
+                      blocked=None):
     """Planner call for use INSIDE an already-traced computation.
 
     The compiled event engine (`repro.core.events_compiled`) invokes the
@@ -678,12 +699,19 @@ def traced_fleet_plan(td: TrieDevice, prefixes, elapsed_lat, elapsed_cost,
     ``jax.experimental.enable_x64`` scope the kernel arithmetic stays
     float32 end-to-end, bit-matching the host planner's programs.
 
+    ``blocked`` is the (N,) float32 ``blocked_depth`` availability mask
+    (None = every engine up); inside the compiled engine it is an epoch
+    state column, so mask flips at fault boundaries are traced value
+    changes, not new programs.
+
     Returns ``(targets, next_models)`` as traced int32 lanes.
     """
+    if blocked is None:
+        blocked = jnp.zeros_like(td.depth)
     delays = jnp.broadcast_to(
         delay_row[None, :], (prefixes.shape[0], delay_row.shape[0]))
     return _dispatch_plan(td, prefixes, elapsed_lat, elapsed_cost, delays,
-                          *scalars, kind=kind, variant=variant)
+                          blocked, *scalars, kind=kind, variant=variant)
 
 
 def objective_scalars(obj: Objective):
@@ -754,10 +782,13 @@ def make_batched_planner(td: TrieDevice, obj: Objective,
     are traced operands, not compile-time constants."""
     scalars = _objective_scalars(obj)
     variant = _resolve_variant(variant)
+    bd0 = jnp.zeros_like(td.depth)
 
-    def plan(prefixes, elapsed_lat, elapsed_cost, engine_delays):
+    def plan(prefixes, elapsed_lat, elapsed_cost, engine_delays,
+             blocked=None):
         return _plan_shared_delays(
             td, prefixes, elapsed_lat, elapsed_cost, engine_delays,
+            bd0 if blocked is None else blocked,
             *scalars, kind=obj.kind, variant=variant)
 
     return plan
@@ -770,10 +801,13 @@ def make_fleet_planner(td: TrieDevice, obj: Objective,
     `engine_delays` has shape (B, E): one live delay vector per request."""
     scalars = _objective_scalars(obj)
     variant = _resolve_variant(variant)
+    bd0 = jnp.zeros_like(td.depth)
 
-    def step(prefixes, elapsed_lat, elapsed_cost, engine_delays):
+    def step(prefixes, elapsed_lat, elapsed_cost, engine_delays,
+             blocked=None):
         return _fleet_step(
             td, prefixes, elapsed_lat, elapsed_cost, engine_delays,
+            bd0 if blocked is None else blocked,
             *scalars, kind=obj.kind, variant=variant)
 
     return step
@@ -796,8 +830,10 @@ def make_admission_probe(td: TrieDevice, obj: Objective,
     lanes; this standalone wrapper serves external admission gates."""
     scalars = _objective_scalars(obj)
     variant = _resolve_variant(variant)
+    bd0 = jnp.zeros_like(td.depth)
 
-    def feasible(prefixes, elapsed_lat, elapsed_cost, engine_delays):
+    def feasible(prefixes, elapsed_lat, elapsed_cost, engine_delays,
+                 blocked=None):
         # canonicalize dtypes BEFORE the jit boundary: a float64 operand
         # (numpy's default) would otherwise trace a new specialization and
         # void the zero-compile guarantee this probe exists to provide
@@ -807,6 +843,8 @@ def make_admission_probe(td: TrieDevice, obj: Objective,
             np.asarray(elapsed_lat, dtype=np.float32),
             np.asarray(elapsed_cost, dtype=np.float32),
             np.asarray(engine_delays, dtype=np.float32),
+            bd0 if blocked is None
+            else jnp.asarray(np.asarray(blocked, dtype=np.float32)),
             *scalars, kind=obj.kind, variant=variant)
         return np.asarray(tgt) >= 0
 

@@ -92,6 +92,7 @@ from typing import Callable
 import numpy as np
 
 from repro.core.admission import (
+    FAILED,
     REJECTED,
     SERVED,
     SHED,
@@ -104,6 +105,11 @@ from repro.core.controller_jax import (
     make_resident_planner,
     next_model_for,
     trie_engines,
+)
+from repro.core.faults import (
+    FaultSchedule,
+    blocked_depth_table,
+    validate_increasing,
 )
 from repro.core.runtime import ExecutionResult, StageExecutor
 from repro.core.trie import Trie, TrieAnnotations
@@ -128,6 +134,14 @@ class EventStats:
     explored: int = 0               # exploration-lane dispatch overrides
     annotation_swaps: int = 0       # scheduled annotation-version swaps
     refreshes: int = 0              # online-estimator republish+swap events
+    # fault-injection telemetry (repro.core.faults; all zero without one)
+    engine_outages: int = 0         # engine-down transitions applied
+    engine_recoveries: int = 0      # engine-up transitions applied
+    checkpointed: int = 0           # in-service stages checkpointed by outages
+    stage_failures: int = 0         # injected stage-failure draws that hit
+    timeouts: int = 0               # stages aborted by the timeout model
+    fault_retries: int = 0          # backoff retries scheduled after aborts
+    failed: int = 0                 # requests terminally failed ("failed")
     replan_s: list = dataclasses.field(default_factory=list)
     planned_per_replan: list = dataclasses.field(default_factory=list)
     peak_occupancy: dict = dataclasses.field(default_factory=dict)
@@ -243,6 +257,7 @@ def run_events(
     annotation_schedule=None,
     refresh=None,
     explore=None,
+    faults: FaultSchedule | None = None,
     compiled: bool = False,
     devices: int | None = None,
     **compiled_kwargs,
@@ -297,6 +312,25 @@ def run_events(
     other.  Admission-policy feasibility bounds stay bound to the
     *initial* annotations across swaps (they are frozen scalars in the
     compiled engine's static config — see docs/EVENT_ENGINE.md).
+
+    **Fault injection** (ISSUE 9): ``faults`` takes a
+    `repro.core.faults.FaultSchedule` — a deterministic, replayable fault
+    model.  Engine *outages* checkpoint every in-service stage on the
+    dead engine at its realized trie node (the preemption pause buffer),
+    requeue the victims at their class priority, and mask the engine out
+    of the planner through a traced blocked-depth operand (a pure buffer
+    substitution, zero new compiled programs); recovery flips the mask
+    back.  Seeded *stage failures* (a pure function of the seed, drawn
+    before the loop runs like the exploration lane) and *timeouts*
+    (``timeout_k`` x the annotation latency forecast) abort the stage and
+    retry under capped exponential backoff charged against the request's
+    latency budget — the re-root replan naturally routes the retry
+    through whatever model/engine the planner now prefers.  A request
+    that exhausts ``max_retries`` at one stage, or whose deadline dies
+    after any fault touched it, reports ``outcome="failed"``.
+    ``recovery="restart"`` is the naive baseline: outage victims restart
+    from the trie root instead of their checkpoint (host loop only;
+    `benchmarks/chaos.py` measures the goodput gap).
     Results are returned in ``requests`` order; `total_lat` and the SLO
     check (against each request's own class deadline, when classes are
     given) are measured from each request's *arrival*, so admission-queue
@@ -321,6 +355,14 @@ def run_events(
         raise ValueError(f"unsupported events policy {policy!r}: the static "
                          "baseline plans once per request — use run_cohort's "
                          "scalar path")
+    if annotation_schedule is not None:
+        # swap epochs are applied in sequence order: a misordered schedule
+        # is a caller bug, not something to silently re-sort
+        validate_increasing([float(ts) for ts, _ in annotation_schedule],
+                            "annotation_schedule swap times")
+    if faults is not None and not isinstance(faults, FaultSchedule):
+        raise TypeError("faults must be a repro.core.faults.FaultSchedule, "
+                        f"got {type(faults).__name__}")
     if compiled:
         from repro.core.events_compiled import run_events_compiled
         return run_events_compiled(
@@ -331,7 +373,8 @@ def run_events(
             fleet_load=fleet_load, t_start=t_start,
             plan_variant=plan_variant,
             annotation_schedule=annotation_schedule, refresh=refresh,
-            explore=explore, devices=devices, **compiled_kwargs)
+            explore=explore, faults=faults, devices=devices,
+            **compiled_kwargs)
     if compiled_kwargs:
         raise TypeError(f"unexpected keyword arguments for the host event "
                         f"loop: {sorted(compiled_kwargs)} (compiled=True "
@@ -455,15 +498,35 @@ def run_events(
     deadline_sheds = pol.shed_on_deadline and bool(
         np.isfinite(cap_req).any())
 
+    # ---- fault injection (ISSUE 9) ----------------------------------
+    fs = faults
+    fault_events: list[tuple[float, int, bool]] = []
+    fe_ptr = 0
+    avail = np.ones(E, dtype=bool)        # per-engine availability
+    bd_col: np.ndarray | None = None      # planner blocked-depth operand
+    fdraws = None                         # (B, D, A) seeded failure draws
+    attempts = faulted = displaced_w = None
+    lat32f = None                         # float32 latency col (timeouts)
+    path_models_host = None
+    if fs is not None:
+        fault_events = fs.events(engines)
+        path_models_host = np.asarray(td.path_models)
+        if fs.stage_failure_rate > 0.0 or fs.failure_table is not None:
+            fdraws = fs.failure_draws(B, max_depth)
+        attempts = np.zeros((B, max_depth), dtype=np.int64)
+        faulted = np.zeros(B, dtype=bool)
+        displaced_w = np.zeros(B, dtype=np.float64)
+        if fs.timeout_k is not None:
+            lat32f = np.array(td.lat)
+
     # ---- online annotations: swaps / refresh / exploration ----------
-    sched: list[tuple[float, TrieAnnotations]] = []
-    if annotation_schedule is not None:
-        sched = sorted(((float(ts), a) for ts, a in annotation_schedule),
-                       key=lambda p: p[0])
-        for ts, _ in sched:
-            if not np.isfinite(ts) or ts < 0:
-                raise ValueError("annotation_schedule swap times must be "
-                                 f"finite and non-negative, got {ts}")
+    sched: list[tuple[float, TrieAnnotations]] = \
+        [] if annotation_schedule is None else \
+        [(float(ts), a) for ts, a in annotation_schedule]
+    for ts, _ in sched:
+        if not np.isfinite(ts) or ts < 0:
+            raise ValueError("annotation_schedule swap times must be "
+                             f"finite and non-negative, got {ts}")
     annotator = None
     if refresh is not None:
         from repro.core.estimators import TrieAnnotator
@@ -489,12 +552,15 @@ def run_events(
 
     def apply_device(new_td, new_ann) -> None:
         """Swap a re-annotated device into the planner (zero retrace)."""
-        nonlocal active_ann, cost32, lat32
+        nonlocal active_ann, cost32, lat32, lat32f
         planner.swap_device(new_td)
         active_ann = new_ann
         if explore_model is not None:
             cost32 = np.array(new_td.cost)
             lat32 = np.array(new_td.lat)
+        if lat32f is not None:
+            # timeout forecasts track the live annotation version
+            lat32f = np.array(new_td.lat)
 
     # vectorized processor-sharing calendar across all engines; numpy-only
     # module, but imported lazily so `repro.core` stays importable without
@@ -523,6 +589,8 @@ def run_events(
     stage_depth = np.full(C, -1, dtype=np.int64)   # dispatched stage's depth
     stage_cost_last = np.zeros(C)                  # dispatched stage's cost
     stage_work = np.zeros(C)                       # nominal (unloaded) work
+    retry_t = np.full(C, np.inf)    # backoff-hold release time (faults)
+    timeout_t = np.full(C, np.inf)  # in-service stage timeout (faults)
 
     # per-request outputs (aligned with ``requests``)
     success = np.zeros(B, dtype=bool)
@@ -559,29 +627,66 @@ def run_events(
         stage_model[slot] = -1
         downgraded[slot] = False
         deadline[slot] = np.inf
+        retry_t[slot] = np.inf
+        timeout_t[slot] = np.inf
         free_mask[slot] = True
+
+    def clear_displaced(i: int) -> None:
+        """Hand displaced-work credit back to the admission policy once
+        the checkpointed request redispatches or terminates."""
+        if fs is not None and displaced_w[i] > 0.0:
+            pol.note_displaced(-float(displaced_w[i]))
+            displaced_w[i] = 0.0
 
     def finish(i: int, slot: int, t: float) -> None:
         stats.done_t[i] = t
         total_cost[i] = elapsed_cost[slot]
+        clear_displaced(i)
         release_slot(slot)
 
     def shed(i: int, slot: int, t: float) -> None:
-        """Abort a request mid-flight; its engine share frees immediately."""
+        """Abort a request mid-flight; its engine share frees immediately.
+        A request any fault already touched reports "failed", not "shed":
+        the serving system, not the request's budget, is what gave out."""
         if stage_model[slot] >= 0:
             sim.cancel(slot, t)
-        stats.outcome[i] = SHED
-        stats.shed += 1
+        if fs is not None and faulted[i]:
+            stats.outcome[i] = FAILED
+            stats.failed += 1
+        else:
+            stats.outcome[i] = SHED
+            stats.shed += 1
         finish(i, slot, t)
 
     def shed_paused(i: int, t: float) -> None:
         """Shed a preempted request straight from the queue (its deadline
         died while paused); keeps the cost of its executed stages."""
         rec = paused.pop(i)
-        stats.outcome[i] = SHED
-        stats.shed += 1
+        if fs is not None and faulted[i]:
+            stats.outcome[i] = FAILED
+            stats.failed += 1
+        else:
+            stats.outcome[i] = SHED
+            stats.shed += 1
         stats.done_t[i] = t
         total_cost[i] = rec[4]
+        clear_displaced(i)
+
+    def fault_abort(i: int, slot: int, d: int, t: float) -> None:
+        """Charge one failed attempt at stage depth ``d``: hold the slot
+        for a backoff retry (the release rejoins the replan set, so the
+        re-root routes the retry wherever the planner now prefers) or
+        terminally fail the request once the retry budget is spent."""
+        faulted[i] = True
+        attempts[i, d] += 1
+        a = int(attempts[i, d])
+        if a > fs.max_retries:
+            stats.outcome[i] = FAILED
+            stats.failed += 1
+            finish(i, slot, t)
+        else:
+            stats.fault_retries += 1
+            retry_t[slot] = t + fs.backoff(a - 1)
 
     def suspend(i: int, slot: int, t: float) -> None:
         """Preempt: pause the slot's in-service stage keeping its
@@ -606,16 +711,23 @@ def run_events(
         u[slot] = pu
         elapsed_lat[slot] = t - arrivals[i]
         elapsed_cost[slot] = pec
-        stage_model[slot] = pm
-        stage_success[slot] = psucc
         downgraded[slot] = pdg
-        stage_depth[slot] = pd
-        stage_cost_last[slot] = psc
-        stage_work[slot] = pw
         if deadline_sheds:
             t_d = arrivals[i] + cap_req[i]
             if np.isfinite(t_d) and t_d > t:
                 deadline[slot] = t_d
+        if pm < 0:
+            # fault checkpoint (engine outage): there is no paused
+            # calendar entry to restore — the request joins this event's
+            # batched replan from its realized node, and the availability
+            # mask routes it around the dead engine
+            need_mask[slot] = True
+            return
+        stage_model[slot] = pm
+        stage_success[slot] = psucc
+        stage_depth[slot] = pd
+        stage_cost_last[slot] = psc
+        stage_work[slot] = pw
         sim.start(slot, int(engine_of_model[pm]), remw, t,
                   weight=float(weight_req[i]))
         stats.resumed += 1
@@ -637,6 +749,12 @@ def run_events(
     while True:
         t_arr = arrivals[order[arr_ptr]] if arr_ptr < B else np.inf
         t = min(t_arr, sim.next_completion(), float(deadline.min()))
+        if fs is not None:
+            # fault transitions, backoff releases and timeouts are
+            # scheduled events: they force their own clock ticks
+            if fe_ptr < len(fault_events):
+                t = min(t, fault_events[fe_ptr][0])
+            t = min(t, float(retry_t.min()), float(timeout_t.min()))
         if deadline_sheds and paused:
             # a preempted request's deadline must be a scheduled event too:
             # paused work sits in the queue, not the deadline column
@@ -674,6 +792,7 @@ def run_events(
             i = int(slot_owner[slot])
             m = int(stage_model[slot])
             stage_model[slot] = -1
+            timeout_t[slot] = np.inf  # completion beats timeout at the tie
             if annotator is not None:
                 # realized outcome -> posteriors; the latency posterior
                 # tracks the UNLOADED stage work (the executor's nominal
@@ -696,6 +815,82 @@ def run_events(
                 finish(i, slot, t)
             else:
                 need_mask[slot] = True
+
+        # 1t. timeout aborts: a stage still in service past its forecast-
+        #     derived budget (dispatch t + k x the annotation latency
+        #     forecast) is cancelled — the dispatch cost stays charged —
+        #     and retried under the backoff schedule.  Completions at the
+        #     same instant (step 1) win the tie.
+        if fs is not None and fs.timeout_k is not None:
+            for slot in np.nonzero(timeout_t <= t)[0]:
+                if stage_model[slot] < 0:
+                    timeout_t[slot] = np.inf
+                    continue
+                i = int(slot_owner[slot])
+                sim.cancel(int(slot), t)
+                stage_model[slot] = -1
+                timeout_t[slot] = np.inf
+                stats.timeouts += 1
+                fault_abort(i, int(slot), int(stage_depth[slot]), t)
+
+        # 1f. engine fault transitions at exactly t (downs before ups at
+        #     one instant — `FaultSchedule.events` orders them).  An
+        #     outage checkpoints every in-service stage on the dead
+        #     engine at its realized trie node into the preemption pause
+        #     buffer (stage model -1 = "replan on admit"), charges one
+        #     attempt, requeues the victim at its class priority, and
+        #     rebuilds the planner's blocked-depth operand; recovery
+        #     flips the mask back.  Fault times force their own clock
+        #     events, so transitions apply at t == fault time (unlike
+        #     annotation swaps' strictly-past rule).
+        if fs is not None:
+            while fe_ptr < len(fault_events) and \
+                    fault_events[fe_ptr][0] <= t:
+                _, ei, up = fault_events[fe_ptr]
+                fe_ptr += 1
+                avail[ei] = up
+                if up:
+                    stats.engine_recoveries += 1
+                else:
+                    stats.engine_outages += 1
+                    insvc = (slot_owner >= 0) & (stage_model >= 0)
+                    hit = insvc.copy()
+                    hit[insvc] = engine_of_model[stage_model[insvc]] == ei
+                    for slot in np.nonzero(hit)[0]:
+                        i = int(slot_owner[slot])
+                        remw = sim.preempt(int(slot), t)
+                        stats.checkpointed += 1
+                        faulted[i] = True
+                        d = int(stage_depth[slot])
+                        attempts[i, d] += 1
+                        if int(attempts[i, d]) > fs.max_retries:
+                            stats.outcome[i] = FAILED
+                            stats.failed += 1
+                            finish(i, int(slot), t)
+                            continue
+                        pu = 0 if fs.recovery == "restart" else int(u[slot])
+                        paused[i] = (pu, -1, False, 0.0,
+                                     float(elapsed_cost[slot]),
+                                     bool(downgraded[slot]), -1, 0.0, 0.0)
+                        displaced_w[i] = float(remw)
+                        pol.note_displaced(float(remw))
+                        release_slot(int(slot))
+                        push_pending(i)
+                    # preempted stages paused on the dead engine lose
+                    # their calendar resume too: charge an attempt and
+                    # convert the record to replan-on-admit
+                    for i, rec in list(paused.items()):
+                        if rec[1] < 0 or engine_of_model[rec[1]] != ei:
+                            continue
+                        faulted[i] = True
+                        attempts[i, int(rec[6])] += 1
+                        pu = 0 if fs.recovery == "restart" else int(rec[0])
+                        paused[i] = (pu, -1, False, 0.0, rec[4], rec[5],
+                                     -1, 0.0, 0.0)
+                down = ~avail
+                bd_col = (blocked_depth_table(
+                    path_models_host, engine_of_model, down)
+                    if down.any() else None)
 
         # 1b. deadline sheds.  (i) Certainty test: the processor-sharing
         #     rate never exceeds 1, so ``t + remaining unloaded work`` lower-
@@ -789,6 +984,14 @@ def run_events(
                     pos += 1
             pending = kept
             heapq.heapify(pending)
+
+        # 1r. backoff releases: held slots whose retry backoff expired
+        #     rejoin the replan set — the re-root naturally routes the
+        #     retry through whatever model/engine the planner now prefers
+        if fs is not None:
+            for slot in np.nonzero(retry_t <= t)[0]:
+                retry_t[slot] = np.inf
+                need_mask[slot] = True
 
         # 3-5. preempt / admit / replan / dispatch — repeated within this
         # event because a dispatch-time-infeasible request frees its slot
@@ -894,7 +1097,10 @@ def run_events(
             el32_arr = el_planner.astype(np.float32)
             ec32_arr = elapsed_cost[need].astype(np.float32)
             planner.update(need, u[need], el32_arr, ec32_arr)
-            tgts, nxts = planner.replan(delay_row)
+            # the blocked kwarg rides only on fault runs: duck-typed
+            # planner wrappers keep the one-argument replan signature
+            tgts, nxts = (planner.replan(delay_row) if bd_col is None
+                          else planner.replan(delay_row, blocked=bd_col))
             replan_s = time.perf_counter() - t0
             stats.replans += 1
             stats.replan_s.append(replan_s)
@@ -908,6 +1114,12 @@ def run_events(
                 nxts, tgts = nxts.copy(), tgts.copy()
                 for slot in need:
                     if not downgraded[slot]:
+                        continue
+                    if bd_col is not None:
+                        # during an outage the planner's availability-
+                        # masked lane already excludes the dead engine;
+                        # the host min-cost search cannot, so the
+                        # downgrade override resumes on recovery
                         continue
                     tgt = cheapest_feasible_target(
                         trie, active_ann, obj_for(int(slot_owner[slot])),
@@ -935,6 +1147,8 @@ def run_events(
                     em = int(explore_model[int(slot_owner[slot])])
                     if em < 0:
                         continue
+                    if fs is not None and not avail[engine_of_model[em]]:
+                        continue  # never explore onto a dead engine
                     v = int(trie.child[0, em])
                     if (el32_arr[k] + (lat32[v] - lat32[0]) <= sc_lat32
                             and ec32_arr[k] + (cost32[v] - cost32[0])
@@ -958,6 +1172,10 @@ def run_events(
                     # admission; one with realized work was shed mid-flight.
                     if int(tgts[slot]) < 0:
                         label = pol.classify_infeasible(len(models[i]))
+                        if fs is not None and faulted[i] and \
+                                label in (REJECTED, SHED):
+                            # a fault consumed the budget, not the request
+                            label = FAILED
                         if label == REJECTED:
                             stats.outcome[i] = REJECTED
                             stats.rejected += 1
@@ -965,9 +1183,20 @@ def run_events(
                         elif label == SHED:
                             stats.outcome[i] = SHED
                             stats.shed += 1
+                        elif label == FAILED:
+                            stats.outcome[i] = FAILED
+                            stats.failed += 1
                     finish(i, slot, t)
                     continue
                 d = int(trie.depth[u[slot]])
+                if fdraws is not None:
+                    a = int(attempts[i, d])
+                    if fdraws[i, d, min(a, fs.max_retries)]:
+                        # injected stage failure, detected at dispatch —
+                        # no cost is charged; hold for backoff or fail out
+                        stats.stage_failures += 1
+                        fault_abort(i, int(slot), d, t)
+                        continue
                 s, c, lat = executor(int(requests[i]), d, m, t_start + t)
                 elapsed_cost[slot] += c
                 stage_model[slot] = m
@@ -975,6 +1204,15 @@ def run_events(
                 stage_depth[slot] = d
                 stage_cost_last[slot] = c
                 stage_work[slot] = lat
+                if lat32f is not None:
+                    # timeout budget = k x the live posterior latency
+                    # forecast for this edge (float32 annotation delta,
+                    # widened to the f64 clock)
+                    v = int(trie.child[u[slot], m])
+                    fc = float(lat32f[v]) - float(lat32f[u[slot]])
+                    if fc > 0.0:
+                        timeout_t[slot] = t + fs.timeout_k * fc
+                clear_displaced(i)
                 stats.stage_versions[i].append(planner.device_version)
                 if priorities:
                     sim.start(int(slot), int(engine_of_model[m]), lat, t,

@@ -47,6 +47,20 @@ estimator ``refresh`` loop also stays host-side (posterior updates need
 per-completion service observations) — precomputed
 ``annotation_schedule`` swaps and the ``explore`` lane ARE supported and
 bit-compatible with the host loop.
+
+Fault injection (`repro.core.faults.FaultSchedule`, ISSUE 9) is
+supported for engine outages and seeded/forced stage failures with
+checkpointed recovery: fault transition times, the per-(request, depth,
+attempt) failure draws and the backoff table are traced operands, the
+availability mask is an epoch state column, and the planner's
+``blocked_depth`` node column is recomputed in-trace — outage/recovery
+flips compile ZERO new programs.  The host-only corners raise
+`NotImplementedError`: ``timeout_k`` (the forecast-armed cancellation is
+a host-side scheduler concept here), ``recovery="restart"`` (the naive
+baseline lane of `benchmarks/chaos.py`), and faults combined with
+predictive/cost-aware admission (their displaced-work forecast inflation
+and the downgrade lane's host-side min-cost search cannot see the
+availability mask).
 """
 from __future__ import annotations
 
@@ -57,6 +71,7 @@ from typing import Callable
 import numpy as np
 
 from repro.core.admission import (
+    FAILED,
     REJECTED,
     SERVED,
     SHED,
@@ -79,8 +94,9 @@ from repro.core.streaming import QuantileSketch, welford_merge
 from repro.core.trie import Trie, TrieAnnotations
 
 # outcome codes inside the traced state (host strings on the way out)
-_OC_SERVED, _OC_REJECTED, _OC_SHED = 0, 1, 2
-_OUTCOMES = {_OC_SERVED: SERVED, _OC_REJECTED: REJECTED, _OC_SHED: SHED}
+_OC_SERVED, _OC_REJECTED, _OC_SHED, _OC_FAILED = 0, 1, 2, 3
+_OUTCOMES = {_OC_SERVED: SERVED, _OC_REJECTED: REJECTED, _OC_SHED: SHED,
+             _OC_FAILED: FAILED}
 _CERT_SLACK = 1e-9   # deadline-shed certainty slack (events.py step 1b/2b)
 _DONE_TOL = 1e-9     # FleetEngineSim._DONE_TOL
 _SLO_TOL = 1e-9      # run_events' final SLO check tolerance
@@ -114,6 +130,13 @@ class _EngineConfig:
     n_bins: int            # streaming histogram bins (incl. under/overflow)
     n_shards: int = 1      # lane-axis mesh extent (1 = single device)
     explore: bool = False  # epsilon-greedy exploration lane (ISSUE 8)
+    # fault injection (ISSUE 9): outage transitions and/or stage-failure
+    # draws change the traced program; the schedule itself is operands
+    fault_outages: bool = False
+    fault_failures: bool = False
+    max_retries: int = 0   # retry budget (exhaustion compare is traced-free)
+    paused_cap: int = 0    # paused-buffer rows per class (C normally; B
+    #                        under outages, whose victims can stack past C)
 
 
 _ENGINE_CACHE: dict[_EngineConfig, Callable] = {}
@@ -148,7 +171,12 @@ def _build_step(cfg: _EngineConfig):
         traced_job_rates
 
     C, K, E, M = cfg.capacity, cfg.n_classes, cfg.n_engines, cfg.n_models
-    P = C  # simultaneously-paused per class is bounded by the slot count
+    P = cfg.paused_cap
+    # the paused buffer exists for priority preemption AND for outage
+    # checkpoints (stage model -1 = replan on admit), so every structural
+    # gate on its presence keys off this union, not cfg.priorities alone
+    paused_on = cfg.priorities or cfg.fault_outages
+    fault_any = cfg.fault_outages or cfg.fault_failures
     pol = cfg.pol
     i32 = jnp.int32
 
@@ -206,14 +234,17 @@ def _build_step(cfg: _EngineConfig):
 
     def release(st, mask):
         """Host `release_slot` over a (C,) mask: every per-slot column."""
-        return {**st,
-                "so": jnp.where(mask, -1, st["so"]),
-                "su": jnp.where(mask, 0, st["su"]),
-                "sec": jnp.where(mask, 0.0, st["sec"]),
-                "sm": jnp.where(mask, -1, st["sm"]),
-                "sdg": jnp.where(mask, False, st["sdg"]),
-                "sddl": jnp.where(mask, jnp.inf, st["sddl"]),
-                "sfree": st["sfree"] | mask}
+        out = {**st,
+               "so": jnp.where(mask, -1, st["so"]),
+               "su": jnp.where(mask, 0, st["su"]),
+               "sec": jnp.where(mask, 0.0, st["sec"]),
+               "sm": jnp.where(mask, -1, st["sm"]),
+               "sdg": jnp.where(mask, False, st["sdg"]),
+               "sddl": jnp.where(mask, jnp.inf, st["sddl"]),
+               "sfree": st["sfree"] | mask}
+        if cfg.fault_failures:
+            out["srt"] = jnp.where(mask, jnp.inf, st["srt"])
+        return out
 
     def sim_clear(st, mask):
         """`FleetEngineSim._clear` over a (C,) mask."""
@@ -273,7 +304,7 @@ def _build_step(cfg: _EngineConfig):
         fh = st["qh"][k]
         fresh_valid = fh < st["qt"][k]
         fresh_req = cn["members"][k, jnp.clip(fh, 0, cn["arr"].shape[0] - 1)]
-        if cfg.priorities:
+        if paused_on:
             has_p = st["pn"][k] > 0
             return (has_p | fresh_valid,
                     jnp.where(has_p, st["pb"][k, 0], fresh_req), has_p)
@@ -321,7 +352,7 @@ def _build_step(cfg: _EngineConfig):
         """Remove the merged head (class ``k_idx``, traced): paused front
         when present, else the fresh ring front."""
         onehot = jnp.arange(K) == k_idx
-        if cfg.priorities:
+        if paused_on:
             from_p = onehot & (st["pn"] > 0)
             shifted = jnp.concatenate(
                 [st["pb"][:, 1:], jnp.full((K, 1), -1, i32)], axis=1)
@@ -361,9 +392,21 @@ def _build_step(cfg: _EngineConfig):
             activep = iota < st["pn"][k]
             req = jnp.clip(row, 0, B - 1)
             doomed = activep & doom_fn(req)
-            st = record_terminal(st, cn, req, doomed, t,
-                                 jnp.full(P, _OC_SHED, i32), st["rpec"][req])
-            st["shd"] = st["shd"] + jnp.sum(jnp.where(doomed, 1, 0))
+            ocp = jnp.full(P, _OC_SHED, i32)
+            if fault_any:
+                # a fault-touched request dies "failed", not "shed"
+                flt = st["rfl"][req]
+                ocp = jnp.where(flt, _OC_FAILED, ocp)
+                st = record_terminal(st, cn, req, doomed, t, ocp,
+                                     st["rpec"][req])
+                st["ffc"] = st["ffc"] + jnp.sum(
+                    jnp.where(doomed & flt, 1, 0))
+                st["shd"] = st["shd"] + jnp.sum(
+                    jnp.where(doomed & ~flt, 1, 0))
+            else:
+                st = record_terminal(st, cn, req, doomed, t, ocp,
+                                     st["rpec"][req])
+                st["shd"] = st["shd"] + jnp.sum(jnp.where(doomed, 1, 0))
             st["rpp"] = scat_set(st["rpp"], req, False, doomed)
             keep = activep & ~doomed
             tgt = jnp.where(keep, jnp.cumsum(keep) - 1, P)
@@ -379,6 +422,25 @@ def _build_step(cfg: _EngineConfig):
             return jnp.isfinite(ddl) & (
                 (t >= ddl) | (t + st["rprm"][req] > ddl + _CERT_SLACK))
         return doom
+
+    def shed_oc(st, ownc):
+        """(C,) outcome codes for a shed site: "failed" when any fault
+        already touched the slot's owner (host `shed`), "shed" otherwise."""
+        oc = jnp.full(C, _OC_SHED, i32)
+        if fault_any:
+            oc = jnp.where(st["rfl"][ownc], _OC_FAILED, oc)
+        return oc
+
+    def count_sheds(st, mask, ownc):
+        """Mirror `shed_oc`'s split into the shd/ffc counters."""
+        st = dict(st)
+        if fault_any:
+            flt = st["rfl"][ownc]
+            st["ffc"] = st["ffc"] + jnp.sum(jnp.where(mask & flt, 1, 0))
+            st["shd"] = st["shd"] + jnp.sum(jnp.where(mask & ~flt, 1, 0))
+        else:
+            st["shd"] = st["shd"] + jnp.sum(jnp.where(mask, 1, 0))
+        return st
 
     # ------------------------------------------------------------------
     # event phases (the numbers mirror events.py's comments)
@@ -415,19 +477,129 @@ def _build_step(cfg: _EngineConfig):
         ddl = cn["arr"][ownc] + cn["cap"][ownc]
         doomed = insvc & ((t >= ddl) | (t + rem > ddl + _CERT_SLACK))
         st = record_terminal(st, cn, st["so"], doomed, t,
-                             jnp.full(C, _OC_SHED, i32), st["sec"])
+                             shed_oc(st, ownc), st["sec"])
         st = dict(st)
-        st["shd"] = st["shd"] + jnp.sum(jnp.where(doomed, 1, 0))
+        st = count_sheds(st, doomed, ownc)
         st = sim_clear(st, doomed)
         st = release(st, doomed)
-        # (ii) backstop: the deadline column is a scheduled event
+        # (ii) backstop: the deadline column is a scheduled event (it also
+        # catches slots held in a fault-retry backoff, whose stage column
+        # is idle but whose deadline keeps ticking)
         mask2 = st["sddl"] <= t
+        ownc2 = jnp.clip(st["so"], 0, B - 1)
         st["snd"] = st["snd"] & ~mask2
         st = record_terminal(st, cn, st["so"], mask2, t,
-                             jnp.full(C, _OC_SHED, i32), st["sec"])
-        st["shd"] = st["shd"] + jnp.sum(jnp.where(mask2, 1, 0))
+                             shed_oc(st, ownc2), st["sec"])
+        st = count_sheds(st, mask2, ownc2)
         st = sim_clear(st, mask2 & (st["sm"] >= 0))
         return release(st, mask2)
+
+    def phase_faults(st, cn, t):
+        """Host step 1f: engine fault transitions at exactly t (their
+        times force their own clock events, so transitions apply at
+        t == fault time — unlike annotation swaps' strictly-past rule;
+        downs before ups at one instant, per `FaultSchedule.events`).
+        A down transition checkpoints every in-service stage on the dead
+        engine into the paused buffer with stage model -1 ("replan on
+        admit"), charging one retry attempt; an exhausted budget fails
+        the request terminally.  Preempted stages whose paused calendar
+        entry sat on the dead engine convert to replan-on-admit with the
+        attempt charged but no exhaustion check (the host's lenient
+        rule).  The availability mask ``av`` feeds the in-trace
+        blocked-depth recompute at the next replan."""
+        if not cfg.fault_outages:
+            return st
+        B = cn["arr"].shape[0]
+        F = cn["ftt"].shape[0] - 1  # trailing +inf pad
+
+        def cond(s):
+            return cn["ftt"][jnp.clip(s["fi"], 0, F)] <= t
+
+        def body(s):
+            cur = jnp.clip(s["fi"], 0, F)
+            ei = cn["fte"][cur]
+            up = cn["ftu"][cur]
+            s = dict(s)
+            s["fi"] = s["fi"] + 1
+            s["av"] = s["av"].at[ei].set(up)
+            s["frc"] = s["frc"] + jnp.where(up, 1, 0)
+            s["foc"] = s["foc"] + jnp.where(up, 0, 1)
+
+            def hit_mask(s2):
+                insvc = (s2["so"] >= 0) & (s2["sm"] >= 0)
+                return insvc & (cn["eom"][jnp.clip(s2["sm"], 0, M - 1)]
+                                == ei)
+
+            def vbody(s2):
+                # victims checkpoint one at a time in ascending slot
+                # order (paused_insert is a sequential buffer mutation —
+                # same order as the host's nonzero() sweep)
+                hit = hit_mask(s2)
+                slot = jnp.argmax(hit)
+                onehot_c = jnp.arange(C) == slot
+                i = s2["so"][slot]
+                d = cn["depth"][s2["su"][slot]]
+                ec = s2["sec"][slot]
+                dg = s2["sdg"][slot]
+                uu = s2["su"][slot]
+                s2 = dict(s2)
+                s2["fck"] = s2["fck"] + 1
+                s2["rfl"] = s2["rfl"].at[i].set(True)
+                s2["rpat"] = s2["rpat"].at[i, d].add(1)
+                exhausted = s2["rpat"][i, d] > cfg.max_retries
+                s2 = sim_clear(s2, onehot_c)
+
+                def fail_out(ss):
+                    ss = record_terminal(
+                        ss, cn, jnp.full(1, i, i32), jnp.full(1, True), t,
+                        jnp.full(1, _OC_FAILED, i32), jnp.full(1, ec))
+                    ss = dict(ss)
+                    ss["ffc"] = ss["ffc"] + 1
+                    return ss
+
+                def checkpoint(ss):
+                    ss = dict(ss)
+                    ss["rpu"] = ss["rpu"].at[i].set(uu)
+                    ss["rpm"] = ss["rpm"].at[i].set(-1)
+                    ss["rpok"] = ss["rpok"].at[i].set(False)
+                    ss["rprm"] = ss["rprm"].at[i].set(0.0)
+                    ss["rpec"] = ss["rpec"].at[i].set(ec)
+                    ss["rpdg"] = ss["rpdg"].at[i].set(dg)
+                    return paused_insert(ss, cn, i, cn["cls"][i])
+
+                s2 = lax.cond(exhausted, fail_out, checkpoint, s2)
+                return release(s2, onehot_c)
+
+            def on_down(s2):
+                s2 = lax.while_loop(lambda ss: hit_mask(ss).any(),
+                                    vbody, s2)
+                if cfg.priorities:
+                    conv = s2["rpp"] & (s2["rpm"] >= 0) & (
+                        cn["eom"][jnp.clip(s2["rpm"], 0, M - 1)] == ei)
+                    dconv = jnp.clip(cn["depth"][s2["rpu"]], 0,
+                                     cfg.max_depth - 1)
+                    idx = jnp.arange(B)
+                    s2 = dict(s2)
+                    s2["rfl"] = s2["rfl"] | conv
+                    s2["rpat"] = s2["rpat"].at[
+                        jnp.where(conv, idx, B), dconv].add(1, mode="drop")
+                    s2["rpm"] = jnp.where(conv, -1, s2["rpm"])
+                    s2["rprm"] = jnp.where(conv, 0.0, s2["rprm"])
+                return s2
+
+            return lax.cond(up, lambda ss: ss, on_down, s)
+
+        return lax.while_loop(cond, body, st)
+
+    def phase_retry_release(st, cn, t):
+        """Host step 1r: slots whose retry backoff expired rejoin the
+        replan set — the re-root routes the retry wherever the planner
+        now prefers (including around a still-down engine)."""
+        if not cfg.fault_failures:
+            return st
+        rel = st["srt"] <= t
+        return {**st, "srt": jnp.where(rel, jnp.inf, st["srt"]),
+                "snd": st["snd"] | rel}
 
     def phase_arrivals(st, cn, t):
         B = cn["arr"].shape[0]
@@ -448,7 +620,7 @@ def _build_step(cfg: _EngineConfig):
             return st
         if not pol.wants_forecast:
             # paused entries die only by deadline (shed, not reject)
-            if cfg.priorities and cfg.deadline_sheds:
+            if paused_on and cfg.deadline_sheds:
                 st = shed_paused_rows(st, cn, t, paused_doom(st, cn, t))
             if not pol.gates:
                 return st
@@ -681,19 +853,26 @@ def _build_step(cfg: _EngineConfig):
             # fresh admission and paused resume, composed with masks
             # (each writes the union of the host branches' columns; the
             # non-taken branch writes the value the host left in place)
-            if cfg.priorities:
+            if paused_on:
                 isp = s["rpp"][i]
+                # outage checkpoints carry stage model -1: restore the
+                # realized prefix and budgets, then REPLAN instead of
+                # resuming a calendar entry (host `resume`, pm < 0)
+                isrp = (isp & (s["rpm"][i] < 0)) if cfg.fault_outages \
+                    else jnp.asarray(False)
+                isrs = isp & ~isrp
                 s["su"] = jnp.where(onehot_c,
                                     jnp.where(isp, s["rpu"][i], 0), s["su"])
                 s["sec"] = jnp.where(onehot_c,
                                      jnp.where(isp, s["rpec"][i], 0.0),
                                      s["sec"])
-                s["sm"] = jnp.where(onehot_c & isp, s["rpm"][i], s["sm"])
+                s["sm"] = jnp.where(onehot_c & isrs, s["rpm"][i], s["sm"])
                 s["sok"] = jnp.where(onehot_c & isp, s["rpok"][i], s["sok"])
                 s["sdg"] = jnp.where(onehot_c,
                                      isp & s["rpdg"][i], s["sdg"])
             else:
                 isp = jnp.asarray(False)
+                isrp = isrs = jnp.asarray(False)
                 s["su"] = jnp.where(onehot_c, 0, s["su"])
                 s["sec"] = jnp.where(onehot_c, 0.0, s["sec"])
                 s["sdg"] = jnp.where(onehot_c, False, s["sdg"])
@@ -702,32 +881,33 @@ def _build_step(cfg: _EngineConfig):
                 s["sddl"] = jnp.where(
                     onehot_c & jnp.isfinite(t_d) & (t_d > t),
                     t_d, s["sddl"])
-            if cfg.priorities:
+            if paused_on:
                 s["rpp"] = s["rpp"].at[i].set(False)
                 # resume: restart the paused stage on the calendar with
-                # the checkpointed remaining work (no replan)
+                # the checkpointed remaining work (no replan); replan-on-
+                # admit checkpoints skip the calendar entirely
                 w = cn["wreq"][i]
                 eng = cn["eom"][jnp.clip(s["rpm"][i], 0, M - 1)]
-                s["je"] = jnp.where(onehot_c & isp, eng, s["je"])
+                s["je"] = jnp.where(onehot_c & isrs, eng, s["je"])
                 if cfg.ps:
-                    s["jrm"] = jnp.where(onehot_c & isp,
+                    s["jrm"] = jnp.where(onehot_c & isrs,
                                          s["rprm"][i], s["jrm"])
                 else:
-                    s["jtc"] = jnp.where(onehot_c & isp,
+                    s["jtc"] = jnp.where(onehot_c & isrs,
                                          t + s["rprm"][i], s["jtc"])
-                    s["jwk"] = jnp.where(onehot_c & isp,
+                    s["jwk"] = jnp.where(onehot_c & isrs,
                                          s["rprm"][i], s["jwk"])
-                s["jw"] = jnp.where(onehot_c & isp, w, s["jw"])
-                s["wtd"] = s["wtd"] | (isp & (w != 1.0))
-                s["jsq"] = jnp.where(onehot_c & isp, s["ns"], s["jsq"])
-                s["ns"] = s["ns"] + jnp.where(isp, 1, 0)
-                s["res"] = s["res"] + jnp.where(isp, 1, 0)
-                s = lax.cond(isp, lambda ss: peak_update(ss, cn),
+                s["jw"] = jnp.where(onehot_c & isrs, w, s["jw"])
+                s["wtd"] = s["wtd"] | (isrs & (w != 1.0))
+                s["jsq"] = jnp.where(onehot_c & isrs, s["ns"], s["jsq"])
+                s["ns"] = s["ns"] + jnp.where(isrs, 1, 0)
+                s["res"] = s["res"] + jnp.where(isrs, 1, 0)
+                s = lax.cond(isrs, lambda ss: peak_update(ss, cn),
                              lambda ss: ss, s)
             s["rad"] = jnp.where(isp, s["rad"],
                                  s["rad"].at[i].set(t))
             s["adm"] = s["adm"] + jnp.where(isp, 0, 1)
-            s["snd"] = s["snd"] | (onehot_c & ~isp)
+            s["snd"] = s["snd"] | (onehot_c & (~isp | isrp))
             return s
 
         return lax.while_loop(cond, body, st)
@@ -774,6 +954,21 @@ def _build_step(cfg: _EngineConfig):
                 delay_row = jnp.maximum(
                     delay_row.astype(st["sec"].dtype),
                     pol.backlog_delay * drain).astype(jnp.float32)
+        if cfg.fault_outages:
+            # blocked-depth column from the live availability mask: the
+            # planner admits target v iff bd[v] <= depth[u], i.e. every
+            # stage strictly past the realized node runs on an up engine
+            # (host blocked_depth_table, recomputed per fault transition;
+            # here recomputed in-trace each replan — the mask is a traced
+            # operand, so outages cause ZERO new planner programs)
+            pmn = cn["td"].path_models
+            deadp = (pmn >= 0) & ~st["av"][
+                cn["eom"][jnp.clip(pmn, 0, M - 1)]]
+            posn = jnp.arange(pmn.shape[1])[None, :]
+            bd = jnp.max(jnp.where(deadp, posn + 1, 0),
+                         axis=1, initial=0).astype(jnp.float32)
+        else:
+            bd = None
         need = st["snd"]
         if cfg.n_shards > 1:
             # Sharded control plane: every device keeps the full replicated
@@ -812,7 +1007,8 @@ def _build_step(cfg: _EngineConfig):
             ec1 = lax.dynamic_slice_in_dim(ec32, i, 1)
             t1, n1 = traced_fleet_plan(cn["td"], pre1, el1, ec1,
                                        delay_row, cn["sc"],
-                                       kind=cfg.kind, variant=cfg.variant)
+                                       kind=cfg.kind, variant=cfg.variant,
+                                       blocked=bd)
             if pol.max_occupancy is not None and pol.downgrade:
                 dg1 = lax.dynamic_slice_in_dim(st["sdg"], i, 1)[0]
                 t1, n1 = lax.cond(
@@ -855,6 +1051,10 @@ def _build_step(cfg: _EngineConfig):
                      <= cn["sc"][2])
                   & (ec32 + (cn["td"].cost[xvc] - cn["td"].cost[0])
                      <= cn["sc"][1]))
+            if cfg.fault_outages:
+                # host 4c skips the explore override when the explore
+                # model's engine is down
+                ok = ok & st["av"][cn["eom"][jnp.clip(xm, 0, M - 1)]]
             nxt = jnp.where(ok, xm, nxt)
             st["xpc"] = st["xpc"] + jnp.sum(jnp.where(ok, 1, 0))
         stop = need & (nxt < 0)
@@ -864,6 +1064,15 @@ def _build_step(cfg: _EngineConfig):
             started = cn["depth"][st["su"]] > 0
             shed_m = infeas & started
             rej_m = infeas & ~started
+            if fault_any:
+                # a fault-touched request that becomes infeasible is a
+                # FAILURE, not a shed/reject (host classify conversion)
+                flt = st["rfl"][ownc]
+                fail_m = infeas & flt
+                shed_m = shed_m & ~flt
+                rej_m = rej_m & ~flt
+                oc = jnp.where(fail_m, _OC_FAILED, oc)
+                st["ffc"] = st["ffc"] + jnp.sum(jnp.where(fail_m, 1, 0))
             oc = jnp.where(shed_m, _OC_SHED, oc)
             oc = jnp.where(rej_m, _OC_REJECTED, oc)
             st["shd"] = st["shd"] + jnp.sum(jnp.where(shed_m, 1, 0))
@@ -872,6 +1081,34 @@ def _build_step(cfg: _EngineConfig):
             st["adm"] = st["adm"] - n_rej
         st = record_terminal(st, cn, st["so"], stop, t, oc, st["sec"])
         start_m = need & (nxt >= 0)
+        if cfg.fault_failures:
+            # seeded stage-failure draws, indexed per (request, depth,
+            # attempt) and consulted BEFORE the executor charges cost
+            # (host dispatch gate).  A drawn failure bumps the attempt
+            # counter; exhaustion fails the request terminally, otherwise
+            # the slot is held for t + backoff(attempt) and replanned.
+            mr = cfg.max_retries
+            d0 = cn["depth"][st["su"]]
+            d0c = jnp.clip(d0, 0, cfg.max_depth - 1)
+            a0 = st["rpat"][ownc, d0c]
+            draw = start_m & cn["fdr"][ownc, d0c,
+                                       jnp.clip(a0, 0, mr)]
+            scat = jnp.where(draw, ownc, B)
+            st["rpat"] = st["rpat"].at[scat, d0c].add(1, mode="drop")
+            st["rfl"] = st["rfl"].at[scat].set(True, mode="drop")
+            a1 = a0 + 1
+            exh = draw & (a1 > mr)
+            retry = draw & ~exh
+            st["fsc"] = st["fsc"] + jnp.sum(jnp.where(draw, 1, 0))
+            st["frt"] = st["frt"] + jnp.sum(jnp.where(retry, 1, 0))
+            st["ffc"] = st["ffc"] + jnp.sum(jnp.where(exh, 1, 0))
+            nb = cn["fbo"].shape[0]
+            st["srt"] = jnp.where(
+                retry, t + cn["fbo"][jnp.clip(a0, 0, nb - 1)], st["srt"])
+            st = record_terminal(st, cn, st["so"], exh, t,
+                                 jnp.full(C, _OC_FAILED, i32), st["sec"])
+            st = release(st, exh)
+            start_m = start_m & ~draw
         d = cn["depth"][st["su"]]
         row = cn["row"][ownc]
         nxtc = jnp.clip(nxt, 0, M - 1)
@@ -954,7 +1191,12 @@ def _build_step(cfg: _EngineConfig):
                           cn["arrs"][jnp.clip(st["ap"], 0, B - 1)], jnp.inf)
         tn = jnp.minimum(t_arr, next_completion(st, cn))
         tn = jnp.minimum(tn, jnp.min(st["sddl"]))
-        if cfg.priorities and cfg.deadline_sheds:
+        if cfg.fault_outages:
+            F = cn["ftt"].shape[0] - 1
+            tn = jnp.minimum(tn, cn["ftt"][jnp.clip(st["fi"], 0, F)])
+        if cfg.fault_failures:
+            tn = jnp.minimum(tn, jnp.min(st["srt"]))
+        if paused_on and cfg.deadline_sheds:
             req = jnp.clip(st["pb"], 0, B - 1)
             activep = jnp.arange(P)[None, :] < st["pn"][:, None]
             pddl = jnp.where(activep,
@@ -971,9 +1213,13 @@ def _build_step(cfg: _EngineConfig):
                                      st["jw"], act, cn["conc"], st["wtd"])
             st = {**st, "jrm": jrm, "tl": tl}
         st = phase_completions(st, cn, t)
+        if cfg.fault_outages:
+            st = phase_faults(st, cn, t)
         st = phase_deadline_sheds(st, cn, t)
         st = phase_arrivals(st, cn, t)
         st = phase_queue_rejections(st, cn, t)
+        if cfg.fault_failures:
+            st = phase_retry_release(st, cn, t)
 
         # 3-5 cycle: preempt -> admit/resume -> replan -> dispatch,
         # repeated while freed slots can absorb queued arrivals
@@ -1079,6 +1325,7 @@ def run_events_compiled(
     annotation_schedule=None,
     refresh=None,
     explore=None,
+    faults=None,
     epoch: int = DEFAULT_EPOCH,
     stream: bool = False,
     devices: int | None = None,
@@ -1115,6 +1362,17 @@ def run_events_compiled(
     posterior loop) needs host-side service observations and raises
     `NotImplementedError` here — use ``compiled=False`` or a precomputed
     ``annotation_schedule``.
+
+    ``faults`` takes the same `repro.core.faults.FaultSchedule` as the
+    host loop and is bit-compatible with it on the chaos differential:
+    outage transitions become traced (time, engine, up) operand columns
+    whose availability mask feeds the planner's blocked-depth operand
+    (ZERO new compiled programs per outage), victims checkpoint into the
+    paused buffer as replan-on-admit entries, and seeded stage-failure
+    draws gate dispatch with capped exponential backoff.  Unsupported
+    here (use the host loop): ``timeout_k`` (needs host-side latency
+    forecasts), ``recovery="restart"``, and combining faults with
+    forecast/occupancy admission policies.
     """
     if policy not in ("dynamic", "dynamic_load_aware"):
         raise ValueError(f"unsupported events policy {policy!r}: the static "
@@ -1131,6 +1389,26 @@ def run_events_compiled(
             "loop (compiled=False) or a precomputed annotation_schedule")
     pol = get_policy(admission)
     tpol = traced_admission(pol)  # raises for custom policy subclasses
+    fault_outages = faults is not None and bool(faults.outages)
+    fault_failures = faults is not None and (
+        faults.stage_failure_rate > 0.0 or faults.failure_table is not None)
+    if faults is not None:
+        if faults.timeout_k is not None:
+            raise NotImplementedError(
+                "compiled event engine cannot trace the stage-timeout model "
+                "(timeout_k needs the host loop's live latency forecasts); "
+                "use compiled=False")
+        if faults.recovery != "checkpoint":
+            raise NotImplementedError(
+                f"compiled event engine only supports recovery='checkpoint' "
+                f"(got {faults.recovery!r}); restart-from-root is a host-loop "
+                "baseline for benchmarks/chaos.py")
+        if (fault_outages or fault_failures) and (
+                pol.wants_forecast or pol.max_occupancy is not None):
+            raise NotImplementedError(
+                "compiled event engine does not combine fault injection with "
+                "forecast- or occupancy-gated admission policies; use the "
+                "host loop (compiled=False)")
     requests = np.asarray(requests)
     B = int(requests.shape[0])
     if arrivals is None:
@@ -1295,7 +1573,13 @@ def run_events_compiled(
         ps=ps, load_aware=load_aware, deadline_sheds=deadline_sheds,
         pol=tpol, kind=obj.kind, kind_dg="min_cost",
         variant=_resolve_variant(plan_variant), n_bins=sketch.n_bins,
-        n_shards=n_shards, explore=explore_model is not None)
+        n_shards=n_shards, explore=explore_model is not None,
+        fault_outages=fault_outages, fault_failures=fault_failures,
+        max_retries=int(faults.max_retries) if faults is not None else 0,
+        # outage victims can stack past C across repeated outages, so the
+        # paused buffer is sized B under fault injection (shapes already
+        # carry B-sized columns — no retrace cost)
+        paused_cap=B if fault_outages else (C if priorities else 0))
     step = _build_step(cfg)
 
     from jax.experimental import enable_x64
@@ -1336,6 +1620,21 @@ def run_events_compiled(
         }
         if explore_model is not None:
             cn["xpm"] = jnp.asarray(explore_model)
+        if fault_outages:
+            # transition columns, padded with one sentinel row so the
+            # traced cursor clip reads (inf, engine 0, up) past the end
+            fev = faults.events(engines)
+            cn["ftt"] = jnp.asarray(
+                np.array([t for t, _, _ in fev] + [np.inf]))
+            cn["fte"] = jnp.asarray(
+                np.array([ei for _, ei, _ in fev] + [0], dtype=np.int32))
+            cn["ftu"] = jnp.asarray(
+                np.array([up for _, _, up in fev] + [True], dtype=bool))
+        if fault_failures:
+            cn["fdr"] = jnp.asarray(faults.failure_draws(B, max_depth))
+            cn["fbo"] = jnp.asarray(
+                np.array([faults.backoff(a)
+                          for a in range(int(faults.max_retries) + 1)]))
         st = _init_state(jnp, cfg, B, arrivals[order])
 
         arrs = arrivals[order]
@@ -1378,6 +1677,15 @@ def run_events_compiled(
         stats.preemptions = int(st["pre"])
         stats.resumed = int(st["res"])
         stats.explored = int(st["xpc"])
+        if fault_outages:
+            stats.engine_outages = int(st["foc"])
+            stats.engine_recoveries = int(st["frc"])
+            stats.checkpointed = int(st["fck"])
+        if fault_failures:
+            stats.stage_failures = int(st["fsc"])
+            stats.fault_retries = int(st["frt"])
+        if fault_outages or fault_failures:
+            stats.failed = int(st["ffc"])
         stats.peak_occupancy = {
             e: int(v) for e, v in zip(engines, np.asarray(st["po"]))}
         sketch.merge_counts(np.asarray(st["hist"]), edges=sketch.edges)
@@ -1390,10 +1698,11 @@ def run_events_compiled(
                 "n_requests": B,
                 "events": stats.events,
                 "replans": stats.replans,
-                "served": B - stats.rejected - stats.shed,
+                "served": B - stats.rejected - stats.shed - stats.failed,
                 "succeeded": int(jnp.sum(st["rsc"])),
                 "rejected": stats.rejected,
                 "shed": stats.shed,
+                "failed": stats.failed,
                 "slo_violations": int(st["slo"]),
                 "latency": _wf(st["lw"]),
                 "cost": _wf(st["cw"]),
@@ -1442,7 +1751,8 @@ def _empty_summary(stats: EventStats) -> dict:
     from repro.core.streaming import welford_finalize, welford_init
     z = welford_finalize(welford_init())
     return {"n_requests": 0, "events": 0, "replans": 0, "served": 0,
-            "succeeded": 0, "rejected": 0, "shed": 0, "slo_violations": 0,
+            "succeeded": 0, "rejected": 0, "shed": 0, "failed": 0,
+            "slo_violations": 0,
             "latency": z, "cost": z, "latency_p50": float("nan"),
             "latency_p95": float("nan"), "latency_p99": float("nan"),
             "sketch": QuantileSketch.log_spaced().state()}
@@ -1451,7 +1761,7 @@ def _empty_summary(stats: EventStats) -> dict:
 def _init_state(jnp, cfg: _EngineConfig, B: int, arrs_sorted: np.ndarray):
     """Device state pytree at t=0 (first event = first arrival)."""
     C, K, E = cfg.capacity, cfg.n_classes, cfg.n_engines
-    P = C
+    P = cfg.paused_cap
     i32, i64, f64 = jnp.int32, jnp.int64, jnp.float64
     st = {
         "tn": jnp.asarray(float(arrs_sorted[0]), f64),
@@ -1496,7 +1806,7 @@ def _init_state(jnp, cfg: _EngineConfig, B: int, arrs_sorted: np.ndarray):
         "hist": jnp.zeros(cfg.n_bins, i64),
         "xpc": jnp.asarray(0, i64),
     }
-    if cfg.priorities:
+    if cfg.priorities or cfg.fault_outages:
         st.update({
             "pb": jnp.full((K, P), -1, i32),
             "pn": jnp.zeros(K, i32),
@@ -1507,6 +1817,26 @@ def _init_state(jnp, cfg: _EngineConfig, B: int, arrs_sorted: np.ndarray):
             "rpec": jnp.zeros(B, f64),
             "rpdg": jnp.zeros(B, bool),
             "rpp": jnp.zeros(B, bool),
+        })
+    if cfg.fault_outages or cfg.fault_failures:
+        st.update({
+            "rfl": jnp.zeros(B, bool),
+            "rpat": jnp.zeros((B, cfg.max_depth), i64),
+            "ffc": jnp.asarray(0, i64),
+        })
+    if cfg.fault_outages:
+        st.update({
+            "av": jnp.ones(E, bool),
+            "fi": jnp.asarray(0, i32),
+            "foc": jnp.asarray(0, i64),
+            "frc": jnp.asarray(0, i64),
+            "fck": jnp.asarray(0, i64),
+        })
+    if cfg.fault_failures:
+        st.update({
+            "srt": jnp.full(C, jnp.inf, f64),
+            "fsc": jnp.asarray(0, i64),
+            "frt": jnp.asarray(0, i64),
         })
     if cfg.pol.wants_forecast:
         st["dead"] = jnp.zeros(B, bool)
@@ -1525,7 +1855,7 @@ def merge_stream_summaries(a: dict, b: dict) -> dict:
     incompatible histograms would corrupt every reported quantile."""
     out = dict(a)
     for key in ("n_requests", "events", "replans", "served", "succeeded",
-                "rejected", "shed", "slo_violations"):
+                "rejected", "shed", "failed", "slo_violations"):
         out[key] = a[key] + b[key]
     for key in ("latency", "cost"):
         wa = (a[key]["count"], a[key]["mean"], a[key]["var"] * a[key]["count"])

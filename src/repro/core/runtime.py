@@ -15,8 +15,13 @@ from typing import Callable
 
 import numpy as np
 
+from repro.core.admission import FAILED, OUTCOMES, REJECTED, SHED
 from repro.core.controller import Objective, OnlineController
 from repro.core.trie import Trie, TrieAnnotations
+
+__all__ = ["ExecutionResult", "OUTCOMES", "StageExecutor",
+           "make_workload_executor", "run_request", "run_cohort",
+           "summarize", "summarize_by_class"]
 
 
 @dataclasses.dataclass
@@ -188,7 +193,7 @@ def run_cohort(
 
 _SUMMARY_KEYS = ("accuracy", "goodput", "mean_cost", "mean_lat", "p99_lat",
                  "slo_violation_rate", "mean_replan_overhead_s", "mean_stages",
-                 "reject_rate", "shed_rate")
+                 "reject_rate", "shed_rate", "failed_rate")
 
 
 def summarize(results: list[ExecutionResult]) -> dict:
@@ -212,9 +217,10 @@ def summarize(results: list[ExecutionResult]) -> dict:
         "slo_violation_rate": sum(r.slo_violated for r in results) / n,
         "mean_replan_overhead_s": float(np.mean([r.replan_overhead_s for r in results])),
         "mean_stages": float(np.mean([r.n_stages for r in results])),
-        # admission-control dispositions (always 0.0 on closed-cohort paths)
-        "reject_rate": sum(r.outcome == "rejected" for r in results) / n,
-        "shed_rate": sum(r.outcome == "shed" for r in results) / n,
+        # admission/fault dispositions (always 0.0 on closed-cohort paths)
+        "reject_rate": sum(r.outcome == REJECTED for r in results) / n,
+        "shed_rate": sum(r.outcome == SHED for r in results) / n,
+        "failed_rate": sum(r.outcome == FAILED for r in results) / n,
     }
 
 

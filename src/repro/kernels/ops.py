@@ -139,7 +139,8 @@ TRIE_PLAN_VARIANTS = ("dense", "fused", "pallas")
 def trie_plan(terminal, depth, acc, cost, lat, subtree_size, path_models,
               path_counts, engine_of_model, prefixes, elapsed_lat,
               elapsed_cost, engine_delays, acc_floor, cost_cap, lat_cap,
-              *, kind, variant="fused", use_pallas=False):
+              *, kind, variant="fused", use_pallas=False,
+              blocked_depth=None):
     """Fused fleet replan -> (targets, next_models), both (B,) int32.
 
     The VineLM control-plane hot path (`controller_jax._fleet_step` routes
@@ -156,7 +157,15 @@ def trie_plan(terminal, depth, acc, cost, lat, subtree_size, path_models,
 
     All three pick the identical node (exact float32 key comparisons, same
     tie-breaking as the host ``select_path``); inference-only, no vjp.
+
+    ``blocked_depth`` (N,) float32 is the engine-availability mask as a
+    node column (fault-tolerant serving): a candidate ``v`` is admissible
+    from prefix ``u`` only when ``blocked_depth[v] <= depth[u]``.  ``None``
+    (or all-zeros) means every engine is up — identical plans to the
+    pre-fault contract.
     """
+    if blocked_depth is None:
+        blocked_depth = jnp.zeros_like(terminal)
     if use_pallas:
         variant = "pallas"
     if variant == "pallas":
@@ -164,17 +173,18 @@ def trie_plan(terminal, depth, acc, cost, lat, subtree_size, path_models,
             terminal, depth, acc, cost, lat, subtree_size, path_models,
             path_counts, engine_of_model, prefixes, elapsed_lat,
             elapsed_cost, engine_delays, acc_floor, cost_cap, lat_cap,
-            kind=kind, interpret=_INTERPRET)
+            kind=kind, blocked_depth=blocked_depth, interpret=_INTERPRET)
     if variant == "fused":
         return fleet_plan_blocked(
             terminal, depth, acc, cost, lat, subtree_size, path_models,
             path_counts, engine_of_model, prefixes, elapsed_lat,
             elapsed_cost, engine_delays, acc_floor, cost_cap, lat_cap,
-            kind=kind)
+            kind=kind, blocked_depth=blocked_depth)
     if variant != "dense":
         raise ValueError(
             f"unknown trie_plan variant {variant!r}: {TRIE_PLAN_VARIANTS}")
     return ref.fleet_plan(
         terminal, depth, acc, cost, lat, subtree_size, path_models,
         engine_of_model, prefixes, elapsed_lat, elapsed_cost,
-        engine_delays, acc_floor, cost_cap, lat_cap, kind=kind)
+        engine_delays, acc_floor, cost_cap, lat_cap, kind=kind,
+        blocked_depth=blocked_depth)

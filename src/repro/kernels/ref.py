@@ -195,6 +195,7 @@ def fleet_plan(
     lat_cap: jnp.ndarray,          # ()  (+_PLAN_BIG if absent)
     *,
     kind: str,
+    blocked_depth: jnp.ndarray | None = None,  # (N,) float32, 0 = clean
 ):
     """Dense masked-reduction oracle of the fused trie-replan kernel.
 
@@ -205,9 +206,19 @@ def fleet_plan(
     dispatch variant benchmarked in `benchmarks/table3_overhead.py`.
     Returns (targets, next_models), both (B,) int32 with -1 = infeasible /
     stop here.
+
+    ``blocked_depth[v]`` is the availability mask rendered as a node
+    column: 1 + the deepest stage position on v's root path whose engine
+    is currently down, 0 when the whole path is up.  A candidate is
+    admissible from prefix ``u`` only when every *new* stage runs on a
+    live engine — exactly ``blocked_depth[v] <= depth[u]`` (stages at or
+    before the realized prefix already happened; checkpointed recovery
+    keeps them).  All-zeros (every engine up) is a no-op mask.
     """
     n = acc.shape[0]
     idx = jnp.arange(n, dtype=jnp.int32)
+    bd = (jnp.zeros_like(depth) if blocked_depth is None
+          else blocked_depth.astype(depth.dtype))
 
     def select(u, el, ec, ed):
         per_model = ed[engine_of_model]                              # (M,)
@@ -219,6 +230,7 @@ def fleet_plan(
         d_lat = (lat - lat[u]) + (delay - delay[u])
         d_cost = cost - cost[u]
         feas = (terminal > 0.5) & (idx >= lo) & (idx < hi)
+        feas &= bd <= depth[u]
         feas &= d_lat <= (lat_cap - el) + 1e-6
         # cost budgets are expectation-based plan-level constraints (§3.3):
         # absolute C(v) <= cap, not re-conditioned on realized spend.  The

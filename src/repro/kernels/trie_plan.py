@@ -83,8 +83,8 @@ def request_stats(depth, cost, lat, subtree_size, path_counts,
 
 
 def _tile_lexmin_update(carry, idx0, term_t, depth_t, acc_t, cost_t, lat_t,
-                        counts_t, pm_t, lo, hi, du, lat_u, cost_u, delay_u,
-                        thr, pmd, cap_eff, floor_eff, *, kind):
+                        counts_t, pm_t, bd_t, lo, hi, du, lat_u, cost_u,
+                        delay_u, thr, pmd, cap_eff, floor_eff, *, kind):
     """Merge one node tile into the per-request running lexicographic minima.
 
     ``carry`` = (bk1, bk2, bk3, bidx, bnxt), each (B,): the best key triple
@@ -92,6 +92,11 @@ def _tile_lexmin_update(carry, idx0, term_t, depth_t, acc_t, cost_t, lat_t,
     when that node became the incumbent.  Pure jnp — executed identically by
     the Pallas kernel body and the XLA mirror's fori-loop, so the two paths
     cannot drift.
+
+    ``bd_t`` is the availability mask as a node column (``blocked_depth``:
+    1 + deepest dead-engine stage position on the node's root path, 0 when
+    clean); a candidate survives only if ``bd_t <= depth[u]`` — no *new*
+    stage may sit on a down engine.  All-zeros means every engine is up.
     """
     bk1, bk2, bk3, bidx, bnxt = carry
     tile = term_t.shape[0]
@@ -105,6 +110,7 @@ def _tile_lexmin_update(carry, idx0, term_t, depth_t, acc_t, cost_t, lat_t,
     d_cost = cost_t[None, :] - cost_u[:, None]
     feas = (term_t[None, :] > 0.5)
     feas &= (gidx >= lo[:, None]) & (gidx < hi[:, None])
+    feas &= bd_t[None, :] <= du[:, None].astype(jnp.float32)
     feas &= d_lat <= thr[:, None]
     feas &= cost_t[None, :] <= cap_eff
     if kind == "min_cost":
@@ -163,9 +169,9 @@ def finalize(carry, lo):
 
 
 def _trie_plan_kernel(scal_ref, term_ref, depth_ref, acc_ref, cost_ref,
-                      lat_ref, counts_ref, pm_ref, lo_ref, hi_ref, du_ref,
-                      latu_ref, costu_ref, delayu_ref, thr_ref, pmd_ref,
-                      tgt_ref, nxt_ref,
+                      lat_ref, counts_ref, pm_ref, bd_ref, lo_ref, hi_ref,
+                      du_ref, latu_ref, costu_ref, delayu_ref, thr_ref,
+                      pmd_ref, tgt_ref, nxt_ref,
                       bk1_ref, bk2_ref, bk3_ref, bidx_ref, bnxt_ref,
                       *, kind, block_nodes):
     n = pl.program_id(0)
@@ -186,7 +192,7 @@ def _trie_plan_kernel(scal_ref, term_ref, depth_ref, acc_ref, cost_ref,
     carry = _tile_lexmin_update(
         carry, n * block_nodes,
         term_ref[...], depth_ref[...], acc_ref[...], cost_ref[...],
-        lat_ref[...], counts_ref[...], pm_ref[...],
+        lat_ref[...], counts_ref[...], pm_ref[...], bd_ref[...],
         lo_ref[...], hi_ref[...], du_ref[...], latu_ref[...],
         costu_ref[...], delayu_ref[...], thr_ref[...], pmd_ref[...],
         scal_ref[0], scal_ref[1], kind=kind)
@@ -210,6 +216,7 @@ def trie_plan_pallas(
     engine_delays, acc_floor, cost_cap, lat_cap,
     *,
     kind: str,
+    blocked_depth=None,
     block_nodes: int = DEFAULT_BLOCK_NODES,
     block_lanes: int = DEFAULT_BLOCK_LANES,
     interpret: bool = True,
@@ -218,8 +225,12 @@ def trie_plan_pallas(
 
     Same contract as `ref.fleet_plan`; `elapsed_cost` is accepted for
     signature parity (cost budgets are expectation-based, see select_path).
+    ``blocked_depth`` (N,) is the engine-availability mask as a node
+    column (see `_tile_lexmin_update`); ``None`` means every engine up.
     """
     del elapsed_cost
+    if blocked_depth is None:
+        blocked_depth = jnp.zeros_like(terminal)
     n = terminal.shape[0]
     bsz = prefixes.shape[0]
     block_nodes = min(block_nodes, max(pl.cdiv(n, 8) * 8, 8))
@@ -243,6 +254,7 @@ def trie_plan_pallas(
          (block_nodes, path_counts.shape[1])),
         (_pad_to(path_models.astype(f32), n_pad, -1.0),
          (block_nodes, path_models.shape[1])),
+        (_pad_to(blocked_depth.astype(f32), n_pad, 0.0), (block_nodes,)),
     ]
     # padded lanes get hi=0 (empty interval -> infeasible -> tgt -1)
     lane_ops = [

@@ -29,13 +29,18 @@ def fleet_plan_blocked(
     engine_delays, acc_floor, cost_cap, lat_cap,
     *,
     kind: str,
+    blocked_depth=None,
     block_nodes: int = DEFAULT_BLOCK_NODES,
 ):
     """Fused fleet replan: (targets, next_models), both (B,) int32.
 
-    Same contract as `ref.fleet_plan` / `trie_plan.trie_plan_pallas`.
+    Same contract as `ref.fleet_plan` / `trie_plan.trie_plan_pallas`;
+    ``blocked_depth`` (N,) is the engine-availability mask as a node
+    column (see `_tile_lexmin_update`), ``None`` = every engine up.
     """
     del elapsed_cost
+    if blocked_depth is None:
+        blocked_depth = jnp.zeros_like(terminal)
     n = terminal.shape[0]
     bsz = prefixes.shape[0]
     # small tries fit one tile: skip the loop machinery entirely (the
@@ -58,6 +63,7 @@ def fleet_plan_blocked(
     lat_p = _pad_to(lat.astype(f32), n_pad, 0.0)
     counts_p = _pad_to(path_counts.astype(f32), n_pad, 0.0)
     pm_p = _pad_to(path_models.astype(f32), n_pad, -1.0)
+    bd_p = _pad_to(blocked_depth.astype(f32), n_pad, 0.0)
 
     carry0 = (
         jnp.full((bsz,), BIG, f32),
@@ -76,7 +82,7 @@ def fleet_plan_blocked(
         return _tile_lexmin_update(
             carry, s, tile(term_p), tile(depth_p), tile(acc_p),
             tile(cost_p), tile(lat_p), tile(counts_p), tile(pm_p),
-            lo, hi, du, lat_u, cost_u, delay_u, thr, pmd,
+            tile(bd_p), lo, hi, du, lat_u, cost_u, delay_u, thr, pmd,
             cap_eff, floor_eff, kind=kind)
 
     if n_tiles == 1:

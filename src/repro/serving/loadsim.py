@@ -431,17 +431,29 @@ class FleetEngineSim:
             self._clear(int(slot))
         return out
 
+    def _require_in_service(self, slot: int, op: str) -> None:
+        """Double-cancel/preempt guard: an idle slot here means the stage
+        already completed, was cancelled, or was preempted — acting on it
+        again would silently corrupt a *different* request's calendar row
+        once the slot is reused, so it is a caller bookkeeping bug, not a
+        no-op."""
+        if self.job_engine[slot] < 0:
+            raise ValueError(
+                f"{op}(slot={slot}): slot is idle — its stage already "
+                f"completed, was cancelled, or was preempted; a second "
+                f"{op} indicates stale slot bookkeeping in the caller")
+
     def cancel(self, slot: int, t: float) -> bool:
         """Abort ``slot`` at ``t``: survivors first drain at the pre-cancel
-        shared rate, then its engine share is released.  False if idle."""
-        if self.job_engine[slot] < 0:
-            return False
+        shared rate, then its engine share is released.  Raises
+        ``ValueError`` when the slot is idle (see `_require_in_service`)."""
+        self._require_in_service(slot, "cancel")
         if self._slowdown is not None:
             self._advance(t)
         self._clear(slot)
         return True
 
-    def preempt(self, slot: int, t: float) -> float | None:
+    def preempt(self, slot: int, t: float) -> float:
         """Pause ``slot``'s in-service stage at ``t`` and release its
         engine share (survivors first drain at the pre-preemption rates).
 
@@ -449,9 +461,9 @@ class FleetEngineSim:
         the checkpointed stage later with ``start(slot', engine,
         remaining, t')``, so preempted work is conserved exactly: the sum
         of drained and remaining work always equals the work injected.
-        None when the slot is idle (nothing to preempt)."""
-        if self.job_engine[slot] < 0:
-            return None
+        Raises ``ValueError`` when the slot is idle (already completed /
+        cancelled / paused — see `_require_in_service`)."""
+        self._require_in_service(slot, "preempt")
         if self._slowdown is None:
             rem = max(float(self._t_complete[slot]) - t, 0.0)
         else:

@@ -26,6 +26,21 @@ float comparisons exact:
   float32 planner) and exercise weighted sharing + preemption; the oracle
   replays the same IEEE drain operations at the same event timestamps.
 
+The **chaos lane** (ISSUE 9) adds deterministic fault injection on the
+same grid: `Scenario.outages` carries ``(engine, t_down, t_up)`` windows
+and `Scenario.failure_table` forced per-(request, stage) failed-attempt
+counts, rendered for the real engines as a
+`repro.core.faults.FaultSchedule`.  The oracle replays the identical
+semantics per request: an outage aborts in-service stages on the dead
+engine (one attempt charged; the victim requeues at its class priority
+and replans from its realized prefix on admission), planning excludes
+any target needing a *new* stage on a down engine, forced stage
+failures hold the slot for the dyadic backoff grid
+``min(0.25 * 2**a, 2.0)``, and a request that exhausts its retries — or
+whose deadline dies after any fault touched it — reports ``"failed"``.
+Timeouts and ``recovery="restart"`` stay host-only and out of the
+differential surface.
+
 The **drift lane** (ISSUE 8) adds scheduled annotation-version swaps:
 `Scenario.drift` carries ``(t_swap, per-stage latency steps)`` pairs on
 the same binary grid, `run_subject` turns them into an
@@ -55,6 +70,14 @@ PLAN_SLACK = 1e-6    # device planner's latency-feasibility slack
 CERT_SLACK = 1e-9    # certainty-bound slack in events.py
 DONE_TOL = 1e-9      # FleetEngineSim remaining-work completion tolerance
 CLASS_WEIGHTS = (4.0, 1.0)  # interactive, batch (powers of two: exact)
+# chaos-lane retry budget + backoff grid, mirroring FaultSchedule's
+# dyadic defaults (0.25 * 2**a capped at 2.0 — exact on the 1/8 grid)
+FAULT_MAX_RETRIES = 2
+BACKOFF_BASE, BACKOFF_FACTOR, BACKOFF_CAP = 0.25, 2.0, 2.0
+
+
+def _backoff(attempt: int) -> float:
+    return min(BACKOFF_BASE * BACKOFF_FACTOR ** int(attempt), BACKOFF_CAP)
 
 
 @dataclasses.dataclass
@@ -81,6 +104,12 @@ class Scenario:
     # sorted by time, every t_swap strictly before the last arrival and
     # every ann_step_v a (depth,) array on the 1/8 grid
     drift: tuple = ()
+    # chaos lane: ((engine_idx, t_down, t_up), ...) outage windows on the
+    # 1/8 grid (at most one window per engine keeps them non-overlapping)
+    outages: tuple = ()
+    # forced failed-attempt counts, (n, depth) int in [0, 3]: the first c
+    # dispatch attempts of that (request, stage) fail (3 = exhaustion)
+    failure_table: np.ndarray | None = None
 
 
 def random_scenario(seed: int) -> Scenario:
@@ -142,6 +171,37 @@ def random_drift_scenario(seed: int) -> Scenario:
     return dataclasses.replace(sc, drift=drift)
 
 
+def random_chaos_scenario(seed: int) -> Scenario:
+    """A `random_scenario` draw with engine outages and forced stage
+    failures attached (and sometimes drift on top).  Predictive draws
+    fall back to feasibility — the displaced-work forecast inflation is
+    outside the oracle's surface — and timeouts/restart recovery stay
+    host-only, so the chaos differential covers exactly what both real
+    engines implement."""
+    sc = random_scenario(seed)
+    if sc.admission == "predictive":
+        sc = dataclasses.replace(sc, admission="feasibility")
+    rng = np.random.default_rng(seed + 424_242)
+    hi = int(round(float(sc.arrivals.max()) * 8))
+    outages = []
+    for e in range(sc.n_engines):
+        if rng.random() < 0.75:
+            td8 = int(rng.integers(0, hi + 9))
+            dur8 = int(rng.integers(1, 33))
+            outages.append((e, td8 / 8.0, (td8 + dur8) / 8.0))
+    ft = None
+    if rng.random() < 0.6:
+        ft = rng.integers(0, FAULT_MAX_RETRIES + 2,
+                          size=(sc.n_requests, sc.depth))
+    sc = dataclasses.replace(sc, outages=tuple(outages), failure_table=ft)
+    if hi >= 2 and rng.random() < 0.3:
+        ts = np.unique(rng.integers(1, hi, size=2)) / 8.0
+        sc = dataclasses.replace(sc, drift=tuple(
+            (float(t), rng.integers(2, 17, size=sc.depth) / 8.0)
+            for t in ts))
+    return sc
+
+
 def drift_schedule(sc: Scenario, trie) -> list | None:
     """`Scenario.drift` rendered as the engines' ``annotation_schedule``
     argument: each swap's per-stage latency steps become a full chain-trie
@@ -193,6 +253,22 @@ def class_specs_of(sc: Scenario):
                      weight=CLASS_WEIGHTS[1]))
 
 
+def fault_schedule_of(sc: Scenario):
+    """`Scenario` chaos fields rendered as the engines' ``faults``
+    argument (None when the scenario injects nothing) — the shared grid
+    constants keep every backoff hold on the dyadic clock the bitwise
+    differential relies on."""
+    if not sc.outages and sc.failure_table is None:
+        return None
+    from repro.core.faults import FaultSchedule
+    return FaultSchedule(outages=sc.outages,
+                         failure_table=sc.failure_table,
+                         max_retries=FAULT_MAX_RETRIES,
+                         backoff_base=BACKOFF_BASE,
+                         backoff_factor=BACKOFF_FACTOR,
+                         backoff_cap=BACKOFF_CAP)
+
+
 def run_subject(sc: Scenario, engine: str = "host",
                 devices: int | None = None):
     """Replay the scenario through the real `run_events` engine; returns
@@ -218,6 +294,9 @@ def run_subject(sc: Scenario, engine: str = "host",
                   fleet_load=FleetLoadModel(
                       engines=engines,
                       mean_service_s={e: 1.0 for e in engines}))
+    fs = fault_schedule_of(sc)
+    if fs is not None:
+        kw["faults"] = fs
     if engine not in ("host", "compiled"):
         raise ValueError(f"unknown engine {engine!r}")
     return run_events(
@@ -254,12 +333,27 @@ def run_oracle(sc: Scenario) -> list[dict]:
     deadline_sheds = shedding and bool(np.isfinite(cap_req).any())
     ps = sc.concurrency is not None
     weighted = sc.classes is not None
+    # chaos lane: engine availability + resolved fault transitions (downs
+    # before ups at one instant), forced failure counts, attempt ledger
+    chaos = bool(sc.outages) or sc.failure_table is not None
+    avail = np.ones(sc.n_engines, dtype=bool)
+    fev = sorted(
+        [ev for e, tdn, tup in sc.outages
+         for ev in ((float(tdn), int(e), False),
+                    (float(tup), int(e), True))],
+        key=lambda ev: (ev[0], ev[1], ev[2]))
+    fptr = 0
+    ftab = (None if sc.failure_table is None
+            else np.asarray(sc.failure_table, dtype=np.int64))
+    attempts = np.zeros((n, D), dtype=np.int64)
+    faulted = np.zeros(n, dtype=bool)
 
     order = np.argsort(sc.arrivals, kind="stable")
     seq_of = np.empty(n, dtype=np.int64)
     seq_of[order] = np.arange(n)
     st = [dict(d=0, stages=0, cost=0.0, success=False, outcome="served",
-               done=None, slot=None, stage=None, paused=None, preempts=0)
+               done=None, slot=None, stage=None, paused=None, preempts=0,
+               retry=None)
           for _ in range(n)]
     free = list(range(C))
     queue: list[int] = []          # kept sorted by (-weight, arrival seq)
@@ -341,20 +435,45 @@ def run_oracle(sc: Scenario) -> list[dict]:
     def plan_target(i, t):
         """Deepest feasible terminal depth from the realized prefix, or
         None when no terminal fits the remaining budget (the chain-trie
-        image of the planner's max-acc deepest-feasible rule)."""
+        image of the planner's max-acc deepest-feasible rule).  Under an
+        outage a target is also out if any NEW stage position (at or past
+        the realized prefix) runs on a down engine — stages the prefix
+        already realized are checkpointed and stay (the blocked-depth
+        rule `bd[v] <= depth[u]`)."""
         d, cap = st[i]["d"], cap_req[i]
         lo = max(d, 1)
         feas = [v for v in range(lo, D + 1)
-                if not np.isfinite(cap)
-                or cum[v] - cum[d] <= cap - (t - sc.arrivals[i]) + PLAN_SLACK]
+                if (not np.isfinite(cap)
+                    or cum[v] - cum[d]
+                    <= cap - (t - sc.arrivals[i]) + PLAN_SLACK)
+                and all(avail[sc.engine_of_depth[p]] for p in range(d, v))]
         return max(feas) if feas else None
+
+    def fault_abort(i, t):
+        """One failed dispatch attempt at the current stage position:
+        hold the slot for the backoff, or fail out on exhaustion."""
+        d = st[i]["d"]
+        faulted[i] = True
+        attempts[i, d] += 1
+        if attempts[i, d] > FAULT_MAX_RETRIES:
+            finish(i, t, outcome="failed")
+        else:
+            st[i]["retry"] = t + _backoff(int(attempts[i, d]) - 1)
 
     while True:
         t_arr = sc.arrivals[order[ptr]] if ptr < n else np.inf
         t = min(t_arr, next_completion())
+        if chaos:
+            # fault transitions and backoff releases force clock events
+            if fptr < len(fev):
+                t = min(t, fev[fptr][0])
+            for i in range(n):
+                if st[i]["retry"] is not None:
+                    t = min(t, st[i]["retry"])
         if deadline_sheds:
-            for i in running():
-                if np.isfinite(cap_req[i]):
+            for i in range(n):
+                # every slot holder: in-service stages AND backoff holds
+                if st[i]["slot"] is not None and np.isfinite(cap_req[i]):
                     t = min(t, sc.arrivals[i] + cap_req[i])
             for i in queue:
                 if st[i]["paused"] is not None and np.isfinite(cap_req[i]):
@@ -389,19 +508,69 @@ def run_oracle(sc: Scenario) -> list[dict]:
             else:
                 need.append(i)
 
+        # 1f. fault transitions at exactly t (downs before ups): an
+        #     outage aborts every in-service stage on the dead engine —
+        #     one attempt charged at the current stage position; the
+        #     victim requeues as a "replan on admit" paused record (or
+        #     fails out on exhaustion) — and converts any paused stage
+        #     checkpointed on that engine to replan-on-admit too
+        if chaos:
+            while fptr < len(fev) and fev[fptr][0] <= t:
+                _, ei, up = fev[fptr]
+                fptr += 1
+                avail[ei] = up
+                if up:
+                    continue
+                for i in list(running()):
+                    if st[i]["stage"]["engine"] != ei:
+                        continue
+                    d = st[i]["d"]
+                    faulted[i] = True
+                    attempts[i, d] += 1
+                    st[i]["stage"] = None
+                    if attempts[i, d] > FAULT_MAX_RETRIES:
+                        finish(i, t, outcome="failed")
+                        continue
+                    st[i]["paused"] = dict(rem=0.0, engine=None, ok=None,
+                                           replan=True)
+                    free.append(st[i]["slot"])
+                    st[i]["slot"] = None
+                    queue.append(i)
+                    queue.sort(key=qkey)
+                for i in range(n):
+                    p = st[i]["paused"]
+                    if p is None or p.get("replan") or p["engine"] != ei:
+                        continue
+                    faulted[i] = True
+                    attempts[i, st[i]["d"]] += 1
+                    st[i]["paused"] = dict(rem=0.0, engine=None, ok=None,
+                                           replan=True)
+
         # 1b. deadline sheds: certainty bound + scheduled deadline, for
-        #     in-service stages and just-completed (mid-replan) requests
+        #     in-service stages, backoff holds, and just-completed
+        #     (mid-replan) requests; fault-touched requests die "failed"
         if deadline_sheds:
             for i in list(running()):
                 ddl = sc.arrivals[i] + cap_req[i]
                 if np.isfinite(ddl) and (
                         t >= ddl or t + remaining(i, t) > ddl + CERT_SLACK):
-                    finish(i, t, outcome="shed")
+                    finish(i, t, outcome="failed" if chaos and faulted[i]
+                           else "shed")
+            if chaos:
+                for i in range(n):
+                    if st[i]["slot"] is None or st[i]["retry"] is None:
+                        continue
+                    ddl = sc.arrivals[i] + cap_req[i]
+                    if np.isfinite(ddl) and t >= ddl:
+                        st[i]["retry"] = None
+                        finish(i, t, outcome="failed" if faulted[i]
+                               else "shed")
             for i in list(need):
                 ddl = sc.arrivals[i] + cap_req[i]
                 if np.isfinite(ddl) and t >= ddl:
                     need.remove(i)
-                    finish(i, t, outcome="shed")
+                    finish(i, t, outcome="failed" if chaos and faulted[i]
+                           else "shed")
 
         # 2. arrivals join the priority queue
         while ptr < n and sc.arrivals[order[ptr]] <= t:
@@ -428,7 +597,8 @@ def run_oracle(sc: Scenario) -> list[dict]:
                     if deadline_sheds and np.isfinite(ddl) and (
                             t >= ddl
                             or t + st[i]["paused"]["rem"] > ddl + CERT_SLACK):
-                        st[i]["outcome"] = "shed"
+                        st[i]["outcome"] = ("failed" if chaos and faulted[i]
+                                            else "shed")
                         st[i]["done"] = t
                         st[i]["paused"] = None
                     else:
@@ -451,6 +621,14 @@ def run_oracle(sc: Scenario) -> list[dict]:
                     kept.append(i)
                     pos += 1
             queue = kept
+
+        # 1r. backoff releases: held slots whose retry expired rejoin
+        #     the replan set
+        if chaos:
+            for i in range(n):
+                if st[i]["retry"] is not None and st[i]["retry"] <= t:
+                    st[i]["retry"] = None
+                    need.append(i)
 
         # 3. preempt / admit+resume / plan+dispatch loop
         def preemptable():
@@ -487,6 +665,11 @@ def run_oracle(sc: Scenario) -> list[dict]:
                 if st[i]["paused"] is not None:  # resume the paused stage
                     p = st[i]["paused"]
                     st[i]["paused"] = None
+                    if p.get("replan"):
+                        # fault checkpoint: replan from the realized
+                        # prefix in this event's dispatch pass
+                        need.append(i)
+                        continue
                     if ps:
                         advance(t)
                     st[i]["stage"] = dict(engine=p["engine"], ok=p["ok"],
@@ -503,13 +686,22 @@ def run_oracle(sc: Scenario) -> list[dict]:
                 v = plan_target(i, t)
                 if v is None:
                     if shedding:
-                        st[i]["outcome"] = ("shed" if st[i]["stages"] > 0
-                                            else "rejected")
+                        st[i]["outcome"] = (
+                            "failed" if chaos and faulted[i]
+                            else "shed" if st[i]["stages"] > 0
+                            else "rejected")
                     finish(i, t)
                 elif v == st[i]["d"]:
                     finish(i, t)  # "stop here": the prefix is the plan
                 else:
                     d = st[i]["d"]
+                    if ftab is not None and \
+                            min(int(attempts[i, d]),
+                                FAULT_MAX_RETRIES) < ftab[i, d]:
+                        # forced stage failure at dispatch: no cost
+                        # charged, slot held for the backoff
+                        fault_abort(i, t)
+                        continue
                     if ps:
                         advance(t)
                     st[i]["stage"] = dict(engine=int(sc.engine_of_depth[d]),
@@ -547,6 +739,10 @@ def assert_scenario_matches(sc: Scenario, engine: str = "host",
     ref = run_oracle(sc)
     assert stats.annotation_swaps == len(sc.drift), \
         (stats.annotation_swaps, sc.drift)
+    assert stats.engine_outages == len(sc.outages)
+    assert stats.engine_recoveries == len(sc.outages)
+    assert stats.failed == sum(o["outcome"] == "failed" for o in ref), \
+        (stats.failed, [o["outcome"] for o in ref])
     comp_subject = sorted(range(sc.n_requests),
                           key=lambda i: (round(stats.done_t[i], 6), i))
     comp_oracle = sorted(range(sc.n_requests),

@@ -1,0 +1,313 @@
+"""Unit tests for the fault-injection subsystem (ISSUE 9 satellites).
+
+`repro.core.faults` itself (schedule validation naming offenders, the
+seeded draw tables, blocked-depth node column, backoff grid, state
+round-trip), the `FleetEngineSim` double-cancel/preempt guards, the
+OUTCOMES consolidation, and the compiled engine's NotImplementedError
+fences for the fault options it cannot trace.  The fault *semantics*
+(checkpointed recovery, retry/backoff timing, failed outcomes) are pinned
+against the oracle in `test_oracle_differential.py` and against fixed
+goldens in `test_golden.py`; this module covers the API contracts.
+"""
+import numpy as np
+import pytest
+
+from repro.core.faults import (
+    FaultSchedule,
+    blocked_depth_table,
+    validate_increasing,
+)
+from repro.serving.loadsim import FleetEngineSim
+
+
+# ----------------------------------------------------------------------
+# validate_increasing (shared with run_events' annotation_schedule check)
+# ----------------------------------------------------------------------
+def test_validate_increasing_accepts_sorted():
+    validate_increasing([], "x")
+    validate_increasing([1.0], "x")
+    validate_increasing([0.0, 0.5, 2.0], "x")
+
+
+def test_validate_increasing_names_offenders():
+    with pytest.raises(ValueError, match=r"swap times.*1\.0.*2\.0"):
+        validate_increasing([0.0, 2.0, 1.0], "swap times")
+    with pytest.raises(ValueError, match="ties"):
+        validate_increasing([1.0, 1.0], "ties")
+
+
+def test_run_events_validates_annotation_schedule_order():
+    """The entry check runs before any work: a misordered schedule must
+    raise immediately, naming the offending swap times."""
+    from fleetlib import random_setup
+
+    from repro.core.controller import Objective
+    from repro.core.events import run_events
+    from repro.core.runtime import make_workload_executor
+
+    _, trie, wl, ann = random_setup(0)
+    with pytest.raises(ValueError, match="annotation_schedule"):
+        run_events(trie, ann, Objective("max_acc"), np.arange(2),
+                   make_workload_executor(wl),
+                   annotation_schedule=[(2.0, ann), (1.0, ann)])
+
+
+# ----------------------------------------------------------------------
+# FaultSchedule validation
+# ----------------------------------------------------------------------
+def test_outage_validation_names_offenders():
+    with pytest.raises(ValueError, match=r"\(engine, t_down, t_up\)"):
+        FaultSchedule(outages=((0, 1.0),))
+    with pytest.raises(ValueError, match="finite and non-negative"):
+        FaultSchedule(outages=((0, -1.0, 2.0),))
+    with pytest.raises(ValueError, match="strictly after"):
+        FaultSchedule(outages=((0, 2.0, 2.0),))
+    with pytest.raises(ValueError, match="must be finite"):
+        FaultSchedule(outages=((0, 2.0, np.inf),))
+    # per-engine overlap names both offending intervals and the engine
+    with pytest.raises(ValueError, match=r"engine 0.*non-overlapping"):
+        FaultSchedule(outages=((0, 0.0, 2.0), (0, 1.0, 3.0)))
+    # same intervals on DIFFERENT engines are fine
+    FaultSchedule(outages=((0, 0.0, 2.0), (1, 1.0, 3.0)))
+
+
+def test_scalar_field_validation():
+    with pytest.raises(ValueError, match="stage_failure_rate"):
+        FaultSchedule(stage_failure_rate=1.5)
+    with pytest.raises(ValueError, match="max_retries"):
+        FaultSchedule(max_retries=-1)
+    with pytest.raises(ValueError, match="backoff_base"):
+        FaultSchedule(backoff_base=-0.5)
+    with pytest.raises(ValueError, match="timeout_k"):
+        FaultSchedule(timeout_k=0.0)
+    with pytest.raises(ValueError, match="recovery"):
+        FaultSchedule(recovery="reboot")
+    with pytest.raises(ValueError, match="failure_table"):
+        FaultSchedule(failure_table=np.zeros(3))
+
+
+def test_injects_property():
+    assert not FaultSchedule().injects
+    assert FaultSchedule(outages=((0, 0.0, 1.0),)).injects
+    assert FaultSchedule(stage_failure_rate=0.1).injects
+    assert FaultSchedule(failure_table=np.zeros((2, 3))).injects
+    assert FaultSchedule(timeout_k=3.0).injects
+
+
+def test_events_resolution_and_ordering():
+    fs = FaultSchedule(outages=(("b", 1.0, 3.0), (0, 3.0, 5.0)))
+    ev = fs.events(["a", "b"])
+    # downs sort before ups at one timestamp (False < True)
+    assert ev == [(1.0, 1, False), (3.0, 0, False), (3.0, 1, True),
+                  (5.0, 0, True)]
+    with pytest.raises(ValueError, match="not in fleet"):
+        fs.events(["a"])
+    with pytest.raises(ValueError, match="out of range"):
+        FaultSchedule(outages=((7, 0.0, 1.0),)).events(["a", "b"])
+
+
+def test_failure_draws_deterministic_and_table_override():
+    fs = FaultSchedule(stage_failure_rate=0.5, seed=3, max_retries=2)
+    d1 = fs.failure_draws(10, 4)
+    d2 = fs.failure_draws(10, 4)
+    assert d1.shape == (10, 4, 3) and d1.dtype == bool
+    np.testing.assert_array_equal(d1, d2)
+    assert d1.any() and not d1.all()
+    # int counts mean "first c attempts fail"
+    ft = np.array([[0, 2], [3, 1]])
+    fd = FaultSchedule(failure_table=ft, max_retries=2).failure_draws(2, 2)
+    np.testing.assert_array_equal(
+        fd[0, 1], [True, True, False])
+    np.testing.assert_array_equal(fd[1, 0], [True, True, True])
+    np.testing.assert_array_equal(fd[0, 0], [False, False, False])
+    with pytest.raises(ValueError, match="shape"):
+        FaultSchedule(failure_table=ft).failure_draws(3, 2)
+
+
+def test_backoff_grid_is_capped_dyadic():
+    fs = FaultSchedule(backoff_base=0.25, backoff_factor=2.0,
+                       backoff_cap=2.0, max_retries=5)
+    assert [fs.backoff(a) for a in range(5)] == [0.25, 0.5, 1.0, 2.0, 2.0]
+
+
+def test_state_round_trip():
+    ft = np.array([[1, 0], [2, 1]])
+    fs = FaultSchedule(outages=((0, 0.5, 2.0), ("gpu", 1.0, 4.0)),
+                       stage_failure_rate=0.3, seed=11, max_retries=3,
+                       backoff_base=0.5, timeout_k=4.0,
+                       failure_table=ft)
+    back = FaultSchedule.from_state(fs.to_state())
+    assert back.outages == fs.outages
+    assert back.stage_failure_rate == fs.stage_failure_rate
+    assert (back.seed, back.max_retries, back.timeout_k) == (11, 3, 4.0)
+    np.testing.assert_array_equal(back.failure_table, ft)
+    np.testing.assert_array_equal(back.failure_draws(2, 2),
+                                  fs.failure_draws(2, 2))
+    # JSON-safe: survives an actual serialization cycle
+    import json
+    again = FaultSchedule.from_state(json.loads(json.dumps(fs.to_state())))
+    assert again.outages == fs.outages
+
+
+# ----------------------------------------------------------------------
+# blocked_depth_table
+# ----------------------------------------------------------------------
+def test_blocked_depth_table_masks_down_engines():
+    # chain of 4 nodes: path models per node (-1 padded), models 0,1,2 on
+    # engines 0,1,0
+    pm = np.array([[-1, -1, -1],
+                   [0, -1, -1],
+                   [0, 1, -1],
+                   [0, 1, 2]])
+    eom = np.array([0, 1, 0])
+    up = np.zeros(2, dtype=bool)
+    bd = blocked_depth_table(pm, eom, up)
+    assert bd.dtype == np.float32
+    np.testing.assert_array_equal(bd, [0, 0, 0, 0])
+    # engine 1 down: nodes whose path crosses model 1 (position 2) block
+    bd = blocked_depth_table(pm, eom, np.array([False, True]))
+    np.testing.assert_array_equal(bd, [0, 0, 2, 2])
+    # engine 0 down: deepest down-engine stage wins (model 2 at pos 3)
+    bd = blocked_depth_table(pm, eom, np.array([True, False]))
+    np.testing.assert_array_equal(bd, [0, 1, 1, 3])
+    # semantics: a request checkpointed AT depth d may resume iff
+    # bd[target] <= d — the already-realized prefix is never re-run
+    assert bd[3] <= 3.0 and not bd[3] <= 2.0
+
+
+# ----------------------------------------------------------------------
+# FleetEngineSim guards (satellite b)
+# ----------------------------------------------------------------------
+def _sim(**kw):
+    return FleetEngineSim(["e0", "e1"], 3, **kw)
+
+
+@pytest.mark.parametrize("op", ["cancel", "preempt"])
+def test_idle_slot_guard(op):
+    sim = _sim()
+    with pytest.raises(ValueError, match=f"{op}.*idle"):
+        getattr(sim, op)(1, 0.0)
+
+
+@pytest.mark.parametrize("op", ["cancel", "preempt"])
+def test_double_cancel_and_preempt_guard(op):
+    sim = _sim()
+    sim.start(0, 0, 2.0, 0.0)
+    getattr(sim, op)(0, 1.0)
+    with pytest.raises(ValueError, match="stale slot bookkeeping"):
+        getattr(sim, op)(0, 1.5)
+
+
+def test_cancel_after_completion_guard():
+    sim = _sim()
+    sim.start(0, 0, 1.0, 0.0)
+    assert sim.pop_completed(1.0) == [(0, 1.0)]
+    with pytest.raises(ValueError, match="idle"):
+        sim.cancel(0, 1.5)
+    # the slot is reusable after the guard fires
+    sim.start(0, 1, 1.0, 2.0)
+    assert sim.preempt(0, 2.5) == pytest.approx(0.5)
+
+
+def test_guards_under_processor_sharing():
+    sim = _sim(slowdown=lambda e, n: max(1.0, n / 1.0))
+    sim.start(0, 0, 2.0, 0.0)
+    rem = sim.preempt(0, 1.0)
+    assert rem == pytest.approx(1.0)
+    with pytest.raises(ValueError, match="preempt"):
+        sim.preempt(0, 1.0)
+    # resume conserves the remainder exactly: 1.0s of realized service
+    # finishes the stage (pop_completed returns realized seconds)
+    sim.start(0, 0, rem, 2.0)
+    assert sim.pop_completed(3.0) == [(0, 1.0)]
+
+
+# ----------------------------------------------------------------------
+# OUTCOMES consolidation (satellite c)
+# ----------------------------------------------------------------------
+def test_outcomes_tuple_membership():
+    from repro.core.admission import FAILED, OUTCOMES, REJECTED, SERVED, SHED
+    from repro.core import runtime
+    from repro.core.events_compiled import _OUTCOMES
+
+    assert OUTCOMES == (SERVED, REJECTED, SHED, FAILED)
+    assert runtime.OUTCOMES is OUTCOMES
+    # the compiled engine's integer outcome codes decode into the same
+    # canonical tuple, in the same order
+    assert tuple(_OUTCOMES[i] for i in range(len(OUTCOMES))) == OUTCOMES
+    # summarize exposes one rate per non-served outcome
+    from repro.core.runtime import ExecutionResult, summarize
+    res = [ExecutionResult(success=False, total_cost=0.0, total_lat=1.0,
+                           models=[], n_stages=0, replan_overhead_s=0.0,
+                           slo_violated=False, outcome=o)
+           for o in OUTCOMES]
+    s = summarize(res)
+    assert (s["reject_rate"], s["shed_rate"], s["failed_rate"]) == \
+        (0.25, 0.25, 0.25)
+
+
+# ----------------------------------------------------------------------
+# compiled-lane fences (satellite d)
+# ----------------------------------------------------------------------
+def _fence_setup():
+    from oracle_sim import _chain_setup, random_scenario
+
+    sc = random_scenario(0)
+    _, trie, ann, _ = _chain_setup(sc)
+
+    def executor(q, d, m, t):
+        return True, float(sc.cost[q, d]), float(sc.work[q, d])
+
+    return sc, trie, ann, executor
+
+
+def _run_compiled(sc, trie, ann, executor, **kw):
+    from repro.core.controller import Objective
+    from repro.core.events_compiled import run_events_compiled
+
+    return run_events_compiled(
+        trie, ann, Objective("max_acc", lat_cap=sc.lat_cap),
+        np.arange(sc.n_requests), executor,
+        arrivals=sc.arrivals, capacity=sc.capacity, **kw)
+
+
+def test_compiled_fences_timeout_and_restart():
+    sc, trie, ann, executor = _fence_setup()
+    with pytest.raises(NotImplementedError, match="timeout"):
+        _run_compiled(sc, trie, ann, executor,
+                      faults=FaultSchedule(timeout_k=3.0))
+    with pytest.raises(NotImplementedError, match="restart"):
+        _run_compiled(sc, trie, ann, executor,
+                      faults=FaultSchedule(outages=((0, 0.0, 1.0),),
+                                           recovery="restart"))
+
+
+def test_compiled_fences_faults_with_gated_policies():
+    sc, trie, ann, executor = _fence_setup()
+    fs = FaultSchedule(outages=((0, 0.5, 1.0),))
+    with pytest.raises(NotImplementedError, match="occupancy"):
+        _run_compiled(sc, trie, ann, executor, faults=fs,
+                      admission="cost_aware")
+    with pytest.raises(NotImplementedError, match="forecast"):
+        _run_compiled(sc, trie, ann, executor, faults=fs,
+                      admission="predictive")
+    # a no-op schedule (injects nothing) must NOT trip the fences
+    _run_compiled(sc, trie, ann, executor, faults=FaultSchedule(),
+                  admission="feasibility")
+
+
+def test_host_loop_rejects_unknown_recovery_combo():
+    """restart recovery works on the host loop (the chaos benchmark's
+    baseline); timeouts too — neither raises there."""
+    from repro.core.events import run_events
+    from repro.core.controller import Objective
+
+    sc, trie, ann, executor = _fence_setup()
+    for fs in (FaultSchedule(outages=((0, 0.5, 1.0),),
+                             recovery="restart"),
+               FaultSchedule(timeout_k=10.0)):
+        res, stats = run_events(
+            trie, ann, Objective("max_acc", lat_cap=sc.lat_cap),
+            np.arange(sc.n_requests), executor,
+            arrivals=sc.arrivals, capacity=sc.capacity, faults=fs)
+        assert len(res) == sc.n_requests

@@ -209,7 +209,7 @@ def test_fleet_empty_cohort():
     assert set(s) == {"accuracy", "goodput", "mean_cost", "mean_lat",
                       "p99_lat", "slo_violation_rate",
                       "mean_replan_overhead_s", "mean_stages",
-                      "reject_rate", "shed_rate"}
+                      "reject_rate", "shed_rate", "failed_rate"}
     assert all(v == 0.0 for v in s.values())
 
 

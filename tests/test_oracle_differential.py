@@ -24,6 +24,8 @@ from oracle_sim import (
     Scenario,
     assert_scenario_matches,
     drift_schedule,
+    fault_schedule_of,
+    random_chaos_scenario,
     random_drift_scenario,
     random_scenario,
     run_oracle,
@@ -95,6 +97,73 @@ def test_drift_scenarios_match_oracle(seed, engine):
     (`assert_scenario_matches` also pins the ``annotation_swaps``
     counter to the drift schedule length)."""
     assert_scenario_matches(random_drift_scenario(seed), engine=engine)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("seed", range(30))
+def test_chaos_scenarios_match_oracle(seed, engine):
+    """Engine outages + forced stage failures (sometimes with annotation
+    drift on top): both engines must match the oracle request-for-request
+    — outcomes including ``failed``, retry-shifted completion times, and
+    the outage/recovery counters (pinned inside
+    `assert_scenario_matches`)."""
+    assert_scenario_matches(random_chaos_scenario(seed), engine=engine)
+
+
+def test_chaos_sweep_is_not_trivial():
+    """The chaos sweep must actually exercise the failure model: across
+    the seeds above there are outages, checkpointed preemptions, drawn
+    stage failures, successful retries, AND terminally failed requests."""
+    seen = {"outages": 0, "checkpointed": 0, "stage_failures": 0,
+            "fault_retries": 0, "failed": 0}
+    for seed in range(30):
+        sc = random_chaos_scenario(seed)
+        _, stats = run_subject(sc, engine="host")
+        seen["outages"] += stats.engine_outages
+        seen["checkpointed"] += stats.checkpointed
+        seen["stage_failures"] += stats.stage_failures
+        seen["fault_retries"] += stats.fault_retries
+        seen["failed"] += stats.failed
+    assert all(v > 0 for v in seen.values()), seen
+
+
+def test_chaos_mid_epoch_bit_compatible():
+    """Outage transitions landing mid-epoch-stream: at every epoch width
+    (1 arrival per compiled invocation up to one giant epoch) the
+    compiled engine must stay bit-identical to the host loop — the
+    transition times force their own clock events regardless of how the
+    host chunks arrivals."""
+    for seed in (0, 4, 5):
+        sc = random_chaos_scenario(seed)
+        assert sc.outages or sc.failure_table is not None
+        base, base_stats = run_subject(sc, engine="host")
+        for epoch in (1, 2, sc.n_requests, 4096):
+            res, stats = run_subject_epoch(sc, epoch)
+            assert [r.outcome for r in res] == [r.outcome for r in base]
+            assert stats.done_t.tolist() == base_stats.done_t.tolist()
+            assert stats.engine_outages == base_stats.engine_outages
+            assert stats.failed == base_stats.failed
+
+
+def test_no_retrace_under_faults():
+    """ISSUE 9 acceptance: fault injection is pure traced-operand data.
+    After warmup, re-running a chaos scenario (outages + failures) adds
+    ZERO compiled programs to the epoch engine and resident planner
+    caches — the availability mask enters the planner as the
+    blocked-depth operand, never as a new program."""
+    from repro.core.controller_jax import fleet_planner_cache_size
+    from repro.core.events_compiled import compiled_engine_cache_size
+
+    sc = random_chaos_scenario(4)
+    assert sc.outages and sc.failure_table is not None
+    run_subject(sc, engine="compiled")   # warmup (compiles the programs)
+    e0, p0 = compiled_engine_cache_size(), fleet_planner_cache_size()
+    _, cstats = run_subject(sc, engine="compiled")
+    assert cstats.engine_outages == len(sc.outages)
+    assert compiled_engine_cache_size() == e0, \
+        "fault injection retraced the compiled engine"
+    assert fleet_planner_cache_size() == p0, \
+        "fault injection retraced the resident planner"
 
 
 def test_drift_sweep_is_not_trivial():
@@ -194,6 +263,9 @@ def run_subject_epoch(sc, epoch):
                   fleet_load=FleetLoadModel(
                       engines=engines,
                       mean_service_s={e: 1.0 for e in engines}))
+    fs = fault_schedule_of(sc)
+    if fs is not None:
+        kw["faults"] = fs
     return run_events(
         trie, ann, Objective("max_acc", lat_cap=sc.lat_cap),
         np.arange(sc.n_requests), executor,

@@ -23,6 +23,7 @@ from hypothesis import strategies as st
 from oracle_sim import (
     Scenario,
     assert_scenario_matches,
+    random_chaos_scenario,
     random_drift_scenario,
     random_scenario,
 )
@@ -84,6 +85,26 @@ def test_fuzz_drift_scenarios_match_oracle_compiled(seed):
     never does — that is the no-retrace acceptance pin in
     `test_oracle_differential.py`)."""
     assert_scenario_matches(random_drift_scenario(seed), engine="compiled")
+
+
+@given(seed=st.integers(0, 10**6), pre=st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_fuzz_chaos_scenarios_match_oracle(seed, pre):
+    """Fuzz with engine outages + forced stage failures attached
+    (`random_chaos_scenario`): checkpointed recovery, retry/backoff and
+    terminal failures must keep matching the oracle request-for-request,
+    preemption forced both ways."""
+    sc = random_chaos_scenario(seed)
+    assert_scenario_matches(Scenario(**{**sc.__dict__, "preempt": pre}))
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_fuzz_chaos_scenarios_match_oracle_compiled(seed):
+    """Bounded compiled-lane chaos fuzz (each new (config, cohort-shape)
+    pair pays an XLA compile; the outage transitions themselves never do
+    — that is the no-retrace pin in `test_oracle_differential.py`)."""
+    assert_scenario_matches(random_chaos_scenario(seed), engine="compiled")
 
 
 # ----------------------------------------------------------------------

@@ -92,7 +92,8 @@ def test_preempt_unit_rate_conserves_work():
     sim.start(0, 0, 2.0, t=0.0)
     rem = sim.preempt(0, 0.5)
     assert rem == pytest.approx(1.5)
-    assert sim.preempt(0, 0.5) is None  # already idle
+    with pytest.raises(ValueError, match="already"):
+        sim.preempt(0, 0.5)  # double-preempt is a bookkeeping bug
     sim.start(0, 0, rem, t=3.0)  # resume later
     assert sim.next_completion() == pytest.approx(4.5)
     assert sim.pop_completed(4.5) == [(0, rem)]

@@ -30,6 +30,7 @@ import numpy as np
 import pytest
 from oracle_sim import (
     assert_scenario_matches,
+    random_chaos_scenario,
     random_drift_scenario,
     random_scenario,
     run_subject,
@@ -150,6 +151,19 @@ def test_sharded_engine_bitwise_identical_priorities(devices):
 def test_sharded_oracle_sweep(seed, devices):
     """The deterministic differential-oracle sweep, re-run sharded."""
     assert_scenario_matches(random_scenario(seed), engine="compiled",
+                            devices=devices)
+
+
+@multidevice
+@pytest.mark.parametrize("devices", DEVICE_COUNTS)
+@pytest.mark.parametrize("seed", range(0, 30, 6))
+def test_sharded_chaos_sweep(seed, devices):
+    """ISSUE 9: the chaos differential sweep (engine outages + forced
+    stage failures) over the lane-sharded control plane — fault
+    transitions and the blocked-depth planner operand must replicate
+    identically on every shard, bit-compatible with the oracle at any
+    device count."""
+    assert_scenario_matches(random_chaos_scenario(seed), engine="compiled",
                             devices=devices)
 
 

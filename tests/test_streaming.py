@@ -187,7 +187,8 @@ def _summary_of(lats, costs):
     n = len(lats)
     return {
         "n_requests": n, "events": n, "replans": n, "served": n,
-        "succeeded": n, "rejected": 0, "shed": 0, "slo_violations": 0,
+        "succeeded": n, "rejected": 0, "shed": 0, "failed": 0,
+        "slo_violations": 0,
         "latency": welford_finalize(wl), "cost": welford_finalize(wc),
         "latency_p50": sk.quantile(0.5), "latency_p95": sk.quantile(0.95),
         "latency_p99": sk.quantile(0.99), "sketch": sk.state(),
