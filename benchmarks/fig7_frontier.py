@@ -1,17 +1,37 @@
 """Paper Fig. 7: accuracy delta of VineLM over the best Murakkab-style
 workflow-level configuration at equal cost SLO, for all three workflows,
-with full and sparse (2%) profiling."""
+with full and sparse (2%) profiling.
+
+Runnable both as ``python -m benchmarks.fig7_frontier`` and standalone
+as ``python benchmarks/fig7_frontier.py`` (the bootstrap below puts the
+repo root and ``src/`` on sys.path for the latter)."""
 from __future__ import annotations
 
+import os
+import sys
 import time
 
-import numpy as np
+if __package__ in (None, ""):
+    # standalone invocation (`python benchmarks/fig7_frontier.py`): the
+    # interpreter put benchmarks/ itself on sys.path, so neither the
+    # `benchmarks` package nor `repro` (under src/) resolves — bootstrap
+    # the repo root and src/ before the imports below
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_ROOT, os.path.join(_ROOT, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
 
-from benchmarks.common import exact_ann, profile, save_report, workload
-from repro.core.controller import Objective
-from repro.core.estimators import annotate
-from repro.core.murakkab import murakkab_nodes
-from repro.core.runtime import make_workload_executor, run_cohort, summarize
+import numpy as np  # noqa: E402
+
+from benchmarks.common import exact_ann, profile, save_report, workload  # noqa: E402
+from repro.core.controller import Objective  # noqa: E402
+from repro.core.estimators import annotate  # noqa: E402
+from repro.core.murakkab import murakkab_nodes  # noqa: E402
+from repro.core.runtime import (  # noqa: E402
+    make_workload_executor,
+    run_cohort,
+    summarize,
+)
 
 N_REQ = {"nl2sql_8": 350, "nl2sql_2": 350, "mathqa_4": 200}
 
@@ -59,6 +79,12 @@ def run(sparse_coverage: float = 0.02):
 
 
 if __name__ == "__main__":
+    if "--imports-only" in sys.argv[1:]:
+        # standalone-bootstrap smoke hook (tests/test_bench_entrypoints):
+        # reaching here proves `python benchmarks/fig7_frontier.py`
+        # resolved every import without running the full frontier sweep
+        print("imports-ok")
+        raise SystemExit(0)
     out = run()
     for r in out["rows"]:
         print(f"{r['workflow']:9s} cap=${r['cost_cap']:.4f} "

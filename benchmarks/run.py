@@ -14,10 +14,11 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (admission, fig7_frontier, fig8_mae, fig9_policy,
-                            fig10_slo, fleet_throughput, open_arrival,
-                            priority, roofline, table1_errors,
-                            table2_profiling_cost, table3_overhead)
+    from benchmarks import (admission, chaos, drift, fig7_frontier, fig8_mae,
+                            fig9_policy, fig10_slo, fleet_throughput,
+                            open_arrival, priority, roofline, table1_errors,
+                            table2_profiling_cost, table3_overhead,
+                            token_calendar, trace_replay)
 
     benches = [
         ("fig8_mae", fig8_mae.run),
@@ -32,6 +33,15 @@ def main() -> None:
         ("admission", admission.run),
         ("priority", priority.run),
         ("roofline", roofline.run),
+        # the event-engine trajectory benchmarks (registered with
+        # --tiny-equivalent sizes so the harness stays CI-runnable; the
+        # full sweeps remain behind each module's standalone entrypoint)
+        ("trace_replay", trace_replay.run),
+        ("drift", lambda: drift.run(wf="nl2sql_2", n_requests=48,
+                                    capacity=16, interval=1.0)),
+        ("chaos", lambda: chaos.run(wf="nl2sql_2", n_requests=48,
+                                    rate=3.0, capacity=10)),
+        ("token_calendar", lambda: token_calendar.run(tiny=True)),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -143,7 +143,13 @@ class AdmissionPolicy:
                            t: float) -> np.ndarray:
         """Hook for predictive policies to fold an engine-backlog forecast
         into the planner's delta_e row (load-aware serving only; called
-        once per replan).  The default is a no-op."""
+        once per replan).  The default is a no-op.
+
+        The backlog read off ``sim`` is calendar-native: scalar work
+        under the PS model, batch-1 seconds under the token calendar
+        (ISSUE 10) — the drain-time quotient ``backlog / rate`` stays
+        correct in both because the sim's job rates are in the same
+        unit."""
         return delay_row
 
     def note_displaced(self, work: float) -> None:

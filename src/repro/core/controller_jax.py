@@ -83,7 +83,14 @@ def _resolve_variant(variant: str | None) -> str:
 
 def trie_engines(template) -> list[str]:
     """Canonical (sorted) engine order used for delay vectors everywhere a
-    dense per-engine array stands in for the controller's delta_e dict."""
+    dense per-engine array stands in for the controller's delta_e dict.
+
+    The delay row's semantics are source-agnostic: under the scalar
+    `FleetLoadModel` each entry is ``(slowdown - 1) * mean_service_s``;
+    under the token calendar (`TokenWorkModel`, ISSUE 10) the slowdown is
+    the continuous-batching decode-step ratio ``(n/b) * (step(b)/step(1))``
+    at the engine's live sequence count — the planner consumes both
+    identically as projected queueing seconds per stage."""
     return sorted({m.engine for m in template.models})
 
 

@@ -576,7 +576,18 @@ class OnlineEstimators:
         self.acc = acc      # (D, M) nested lists of BetaPosterior
         self.cost = cost    # (D, M) nested lists of GaussianPosterior
         self.lat = lat      # (D, M) nested lists of GaussianPosterior
+        # per-token latency posteriors (token work model, ISSUE 10):
+        # created lazily on the first `observe(..., tokens=)` so legacy
+        # scalar-work runs carry no extra state and their snapshots /
+        # merges stay bitwise identical
+        self.lat_tok = None  # (D, M) nested lists of GaussianPosterior
         self.observations = 0
+
+    def _ensure_lat_tok(self) -> None:
+        if self.lat_tok is None:
+            D, M = self.shape
+            self.lat_tok = [[GaussianPosterior(0.0, 1.0)
+                             for _ in range(M)] for _ in range(D)]
 
     @property
     def shape(self) -> tuple[int, int]:
@@ -629,16 +640,29 @@ class OnlineEstimators:
         return acc
 
     def observe(self, depth: int, model: int, success: bool,
-                cost: float, lat: float) -> None:
-        """Fold one realized stage execution into all three posteriors."""
+                cost: float, lat: float, tokens: float | None = None) -> None:
+        """Fold one realized stage execution into all three posteriors.
+
+        ``tokens`` (token work model) additionally folds ``lat /
+        tokens`` — seconds of unloaded service per token — into the
+        per-token latency posterior, so drift refresh under
+        ``work_model="tokens"`` distinguishes throughput drift (the
+        engine got slower per token) from stage-size drift (stages got
+        longer).  The stage-latency posterior is fed either way, so the
+        `lat_table` the annotator publishes is unaffected."""
         self.acc[depth][model].observe(bool(success))
         self.cost[depth][model].observe(float(cost))
         self.lat[depth][model].observe(float(lat))
+        if tokens is not None and tokens > 0.0:
+            self._ensure_lat_tok()
+            self.lat_tok[depth][model].observe(float(lat) / float(tokens))
         self.observations += 1
 
     def decay_all(self, gamma: float) -> None:
         """Apply exponential forgetting to every posterior cell."""
-        for table in (self.acc, self.cost, self.lat):
+        tables = (self.acc, self.cost, self.lat) if self.lat_tok is None \
+            else (self.acc, self.cost, self.lat, self.lat_tok)
+        for table in tables:
             for row in table:
                 for p in row:
                     p.decay(gamma)
@@ -657,6 +681,15 @@ class OnlineEstimators:
              for d in range(D)],
             [[self.lat[d][m].merge(other.lat[d][m]) for m in range(M)]
              for d in range(D)])
+        if self.lat_tok is not None or other.lat_tok is not None:
+            a, b = self, other
+            if a.lat_tok is None or b.lat_tok is None:
+                src = a.lat_tok if a.lat_tok is not None else b.lat_tok
+                out.lat_tok = [[dataclasses.replace(p) for p in row]
+                               for row in src]
+            else:
+                out.lat_tok = [[a.lat_tok[d][m].merge(b.lat_tok[d][m])
+                                for m in range(M)] for d in range(D)]
         out.observations = self.observations + other.observations
         return out
 
@@ -676,15 +709,29 @@ class OnlineEstimators:
         return np.maximum([[p.mean() for p in row] for row in self.lat],
                           0.0)
 
+    def lat_per_token_table(self) -> np.ndarray | None:
+        """(D, M) posterior seconds-per-token means, floored at 0 — or
+        None when no token-mode observation ever arrived."""
+        if self.lat_tok is None:
+            return None
+        return np.maximum([[p.mean() for p in row] for row in self.lat_tok],
+                          0.0)
+
     def state(self) -> dict:
         """JSON-able snapshot of every posterior cell; `from_state`
-        round-trips it exactly."""
-        return {
+        round-trips it exactly.  The per-token table appears only when
+        token-mode observations exist, so legacy snapshots are
+        byte-identical to pre-token versions."""
+        out = {
             "observations": self.observations,
             "acc": [[p.state() for p in row] for row in self.acc],
             "cost": [[p.state() for p in row] for row in self.cost],
             "lat": [[p.state() for p in row] for row in self.lat],
         }
+        if self.lat_tok is not None:
+            out["lat_tok"] = [[p.state() for p in row]
+                              for row in self.lat_tok]
+        return out
 
     @classmethod
     def from_state(cls, state: dict) -> "OnlineEstimators":
@@ -696,6 +743,9 @@ class OnlineEstimators:
              for row in state["cost"]],
             [[GaussianPosterior.from_state(s) for s in row]
              for row in state["lat"]])
+        if "lat_tok" in state:
+            out.lat_tok = [[GaussianPosterior.from_state(s) for s in row]
+                           for row in state["lat_tok"]]
         out.observations = state["observations"]
         return out
 

@@ -252,6 +252,7 @@ def run_events(
     restrict_nodes: np.ndarray | None = None,
     load_probe: Callable[[float], dict[str, float]] | None = None,
     fleet_load=None,
+    work_model=None,
     t_start: float = 0.0,
     plan_variant: str | None = None,
     annotation_schedule=None,
@@ -350,6 +351,22 @@ def run_events(
     and the host loop shards the resident planner's slot columns —
     either way dispositions and summaries are bit-identical at any
     device count (docs/EVENT_ENGINE.md, "Sharding").
+
+    **Token-level engine model** (ISSUE 10): ``work_model`` takes a
+    `repro.serving.loadsim.TokenWorkModel` — each dispatched stage's
+    unloaded work becomes ``prefill_tokens x prefill_tok_s +
+    decode_tokens x decode_step_s(1)`` (from ``work_model.stage_tokens``,
+    a pure function like the executor), and the engine calendar drains
+    it at the continuous-batching token rate (weight-read amortization,
+    per-sequence KV reads, KV-capacity cap) instead of the abstract
+    processor-sharing rate.  The planner's delta_e row, the predictive
+    gate's wait forecasts, the deadline certainty bound, and preemption
+    checkpoints all account remaining work through the same token
+    calendar.  Mutually exclusive with ``fleet_load`` (the scalar lane,
+    ``work_model="scalar"`` in the docs' terms, is unchanged — all
+    existing golden pins hold).  The executor's latency return is
+    ignored for calendar purposes under tokens (realized wall time comes
+    from the clock); its success/cost returns are used as ever.
     """
     if policy not in ("dynamic", "dynamic_load_aware"):
         raise ValueError(f"unsupported events policy {policy!r}: the static "
@@ -363,6 +380,19 @@ def run_events(
     if faults is not None and not isinstance(faults, FaultSchedule):
         raise TypeError("faults must be a repro.core.faults.FaultSchedule, "
                         f"got {type(faults).__name__}")
+    if work_model is not None:
+        if fleet_load is not None:
+            raise ValueError("work_model and fleet_load are mutually "
+                             "exclusive: the token calendar replaces the "
+                             "scalar slowdown model")
+        if load_probe is not None:
+            raise ValueError("work_model and load_probe are mutually "
+                             "exclusive: delta_e comes from the token "
+                             "calendar's own occupancy")
+        if getattr(work_model, "stage_tokens", None) is None:
+            raise ValueError("work_model.stage_tokens must be set: the "
+                             "token calendar needs per-stage "
+                             "(prefill, decode) token counts")
     if compiled:
         from repro.core.events_compiled import run_events_compiled
         return run_events_compiled(
@@ -370,7 +400,7 @@ def run_events(
             capacity=capacity, policy=policy, admission=admission,
             classes=classes, class_specs=class_specs, preempt=preempt,
             restrict_nodes=restrict_nodes, load_probe=load_probe,
-            fleet_load=fleet_load, t_start=t_start,
+            fleet_load=fleet_load, work_model=work_model, t_start=t_start,
             plan_variant=plan_variant,
             annotation_schedule=annotation_schedule, refresh=refresh,
             explore=explore, faults=faults, devices=devices,
@@ -570,6 +600,8 @@ def run_events(
         engines, C,
         slowdown=(lambda ei, n: fleet_load.slowdown(engines[ei], n))
         if (load_aware and fleet_load is not None) else None,
+        token_models=(dict(work_model.engines)
+                      if work_model is not None else None),
     )
     stats.peak_occupancy = {e: 0 for e in engines}
 
@@ -589,6 +621,7 @@ def run_events(
     stage_depth = np.full(C, -1, dtype=np.int64)   # dispatched stage's depth
     stage_cost_last = np.zeros(C)                  # dispatched stage's cost
     stage_work = np.zeros(C)                       # nominal (unloaded) work
+    stage_tok = np.zeros(C)         # stage tokens (prefill + decode)
     retry_t = np.full(C, np.inf)    # backoff-hold release time (faults)
     timeout_t = np.full(C, np.inf)  # in-service stage timeout (faults)
 
@@ -615,7 +648,11 @@ def run_events(
     # preempted requests checkpointed at their realized trie node:
     # (prefix u, stage model, stage success, remaining unloaded work,
     # elapsed cost, downgraded flag, stage depth, stage cost, nominal
-    # stage work) — restored verbatim on resume
+    # stage work, stage tokens) — restored verbatim on resume.  Under
+    # the token model the paused record's remaining work carries the
+    # stage's undecoded-token balance (in batch-1 seconds): the victim's
+    # KV reservation is released with its engine share at preempt time
+    # and re-acquired on resume, and no decoded token is ever re-charged
     paused: dict[int, tuple] = {}
 
     def release_slot(slot: int) -> None:
@@ -697,7 +734,7 @@ def run_events(
                      bool(stage_success[slot]), float(remw),
                      float(elapsed_cost[slot]), bool(downgraded[slot]),
                      int(stage_depth[slot]), float(stage_cost_last[slot]),
-                     float(stage_work[slot]))
+                     float(stage_work[slot]), float(stage_tok[slot]))
         stats.preemptions += 1
         stats.preempt_count[i] += 1
         release_slot(slot)
@@ -707,7 +744,7 @@ def run_events(
         """Restore a preempted request into ``slot`` and resume its paused
         stage with exactly the remaining work `preempt` captured — no
         replan, no re-execution, no double-charged cost."""
-        pu, pm, psucc, remw, pec, pdg, pd, psc, pw = paused.pop(i)
+        pu, pm, psucc, remw, pec, pdg, pd, psc, pw, ptk = paused.pop(i)
         u[slot] = pu
         elapsed_lat[slot] = t - arrivals[i]
         elapsed_cost[slot] = pec
@@ -728,6 +765,7 @@ def run_events(
         stage_depth[slot] = pd
         stage_cost_last[slot] = psc
         stage_work[slot] = pw
+        stage_tok[slot] = ptk
         sim.start(slot, int(engine_of_model[pm]), remw, t,
                   weight=float(weight_req[i]))
         stats.resumed += 1
@@ -800,10 +838,21 @@ def run_events(
                 # engine slowdowns inflate it), NOT the loaded wall time:
                 # queueing delay is the load-aware delta terms' job, and
                 # feeding it here would double-count load and over-shed
-                est.observe(int(stage_depth[slot]), m,
-                            bool(stage_success[slot]),
-                            float(stage_cost_last[slot]),
-                            float(stage_work[slot]))
+                if work_model is not None:
+                    # token mode additionally feeds the per-token latency
+                    # posterior (seconds of unloaded work per token), so
+                    # drift refresh tracks throughput drift, not just
+                    # stage-size drift
+                    est.observe(int(stage_depth[slot]), m,
+                                bool(stage_success[slot]),
+                                float(stage_cost_last[slot]),
+                                float(stage_work[slot]),
+                                tokens=float(stage_tok[slot]))
+                else:
+                    est.observe(int(stage_depth[slot]), m,
+                                bool(stage_success[slot]),
+                                float(stage_cost_last[slot]),
+                                float(stage_work[slot]))
                 pol.observe_service(float(stage_work[slot]),
                                     float(realized_s))
             models[i].append(m)
@@ -871,7 +920,8 @@ def run_events(
                         pu = 0 if fs.recovery == "restart" else int(u[slot])
                         paused[i] = (pu, -1, False, 0.0,
                                      float(elapsed_cost[slot]),
-                                     bool(downgraded[slot]), -1, 0.0, 0.0)
+                                     bool(downgraded[slot]), -1, 0.0, 0.0,
+                                     0.0)
                         displaced_w[i] = float(remw)
                         pol.note_displaced(float(remw))
                         release_slot(int(slot))
@@ -886,7 +936,7 @@ def run_events(
                         attempts[i, int(rec[6])] += 1
                         pu = 0 if fs.recovery == "restart" else int(rec[0])
                         paused[i] = (pu, -1, False, 0.0, rec[4], rec[5],
-                                     -1, 0.0, 0.0)
+                                     -1, 0.0, 0.0, 0.0)
                 down = ~avail
                 bd_col = (blocked_depth_table(
                     path_models_host, engine_of_model, down)
@@ -1063,7 +1113,15 @@ def run_events(
             delay_row = np.zeros(E, dtype=np.float32)
             delay_dict: dict[str, float] | None = None
             if load_aware:
-                if priorities:
+                if work_model is not None:
+                    # token mode: the KV/batch physics depends on how many
+                    # SEQUENCES hold residency, not on their PS weights —
+                    # plain occupancy counts feed delta_e even under
+                    # priority classes
+                    occ_l = sim.occupancies()
+                    occ_map = {e: float(occ_l[j])
+                               for j, e in enumerate(engines)}
+                elif priorities:
                     # weighted occupancy: a weight-4 job loads its engine
                     # like four weight-1 jobs (equals the plain count when
                     # every weight is 1)
@@ -1074,7 +1132,10 @@ def run_events(
                     occ_l = sim.occupancies()
                     occ_map = {e: int(occ_l[j])
                                for j, e in enumerate(engines)}
-                if fleet_load is not None:
+                if work_model is not None:
+                    delay_dict = work_model.delays(occ_map)
+                    delay_row[:] = [delay_dict.get(e, 0.0) for e in engines]
+                elif fleet_load is not None:
                     delay_dict = fleet_load.delays(occ_map)
                     delay_row[:] = [delay_dict.get(e, 0.0) for e in engines]
                 elif load_probe is not None:
@@ -1198,6 +1259,15 @@ def run_events(
                         fault_abort(i, int(slot), d, t)
                         continue
                 s, c, lat = executor(int(requests[i]), d, m, t_start + t)
+                if work_model is not None:
+                    # the stage's unloaded work is its token footprint in
+                    # batch-1 seconds; the executor's latency return is
+                    # superseded by the calendar (wall time = clock)
+                    ptok, dtok = work_model.stage_tokens(
+                        int(requests[i]), d, m)
+                    lat = work_model.work_of(
+                        engines[int(engine_of_model[m])], ptok, dtok)
+                    stage_tok[slot] = float(ptok) + float(dtok)
                 elapsed_cost[slot] += c
                 stage_model[slot] = m
                 stage_success[slot] = bool(s)

@@ -130,6 +130,11 @@ class _EngineConfig:
     n_bins: int            # streaming histogram bins (incl. under/overflow)
     n_shards: int = 1      # lane-axis mesh extent (1 = single device)
     explore: bool = False  # epsilon-greedy exploration lane (ISSUE 8)
+    # token-level calendar (ISSUE 10): job rates come from the continuous-
+    # batching decode-step throughput curve + KV cap instead of the PS
+    # concurrency knee; implies cfg.ps (remaining work tracked in jrm).
+    # The curve parameters themselves are traced operands (cn["tkw"] ...).
+    tokens: bool = False
     # fault injection (ISSUE 9): outage transitions and/or stage-failure
     # draws change the traced program; the schedule itself is operands
     fault_outages: bool = False
@@ -168,7 +173,7 @@ def _build_step(cfg: _EngineConfig):
 
     from repro.dist.sharding import LANE_AXIS
     from repro.serving.loadsim import traced_advance, traced_engine_rates, \
-        traced_job_rates
+        traced_job_rates, traced_token_rates
 
     C, K, E, M = cfg.capacity, cfg.n_classes, cfg.n_engines, cfg.n_models
     P = cfg.paused_cap
@@ -268,7 +273,11 @@ def _build_step(cfg: _EngineConfig):
         occ = jnp.zeros(E + 1, st["jrm"].dtype).at[
             jnp.where(act, jnp.clip(st["je"], 0, E - 1), E)].add(
             jnp.where(act, 1.0, 0.0))[:E]
-        rates = traced_engine_rates(occ, cn["conc"])
+        if cfg.tokens:
+            rates = traced_token_rates(occ, cn["tkw"], cn["tkv"],
+                                       cn["tkf"], cn["tkc"], cn["tk1"])
+        else:
+            rates = traced_engine_rates(occ, cn["conc"])
         return traced_job_rates(st["je"], st["jw"], act, rates, st["wtd"])
 
     def next_completion(st, cn):
@@ -928,7 +937,26 @@ def _build_step(cfg: _EngineConfig):
         if cfg.load_aware:
             act = st["je"] >= 0
             park = jnp.where(act, jnp.clip(st["je"], 0, E - 1), E)
-            if cfg.ps:
+            if cfg.tokens:
+                # TokenWorkModel.delays over the live sequence COUNT (the
+                # KV/batch physics depends on how many sequences share the
+                # decode step, never on priority weights); slowdown mirror
+                # of EngineTokenModel.slowdown with the same barriers as
+                # traced_token_rates so host == compiled bitwise
+                occw = jnp.zeros(E + 1, st["sec"].dtype).at[park].add(
+                    jnp.where(act, 1.0, 0.0))[:E]
+                n = occw + 1.0
+                b = jnp.minimum(n, cn["tkc"])
+                prod = lax.optimization_barrier(cn["tkv"] * b)
+                sb = jnp.maximum(cn["tkw"] + prod, cn["tkf"] * b)
+                q1 = lax.optimization_barrier(n / b)
+                q2 = lax.optimization_barrier(sb / cn["tk1"])
+                sd = lax.optimization_barrier(q1 * q2)
+                dr64 = (sd - 1.0) * cn["ms"]
+                # the host casts the dict values into a float32 row first
+                delay_row = jnp.where(cn["hasm"], dr64,
+                                      0.0).astype(jnp.float32)
+            elif cfg.ps:
                 # FleetLoadModel.delays over the live (weighted) occupancy
                 occw = jnp.zeros(E + 1, st["sec"].dtype).at[park].add(
                     jnp.where(act,
@@ -1209,8 +1237,11 @@ def _build_step(cfg: _EngineConfig):
         st = {**st, "ev": st["ev"] + 1, "snd": jnp.zeros(C, bool)}
         if cfg.ps:
             act = st["je"] >= 0
+            tok = (cn["tkw"], cn["tkv"], cn["tkf"], cn["tkc"],
+                   cn["tk1"]) if cfg.tokens else None
             jrm, tl = traced_advance(st["jrm"], st["tl"], t, st["je"],
-                                     st["jw"], act, cn["conc"], st["wtd"])
+                                     st["jw"], act, cn["conc"], st["wtd"],
+                                     tok=tok)
             st = {**st, "jrm": jrm, "tl": tl}
         st = phase_completions(st, cn, t)
         if cfg.fault_outages:
@@ -1277,7 +1308,9 @@ def _build_step(cfg: _EngineConfig):
 
 
 def _tabulate_executor(executor: StageExecutor, requests: np.ndarray,
-                       probe: np.ndarray, t_start: float):
+                       probe: np.ndarray, t_start: float,
+                       work_model=None, engines=None,
+                       engine_of_model=None):
     """Evaluate the executor over (unique request value, depth, model)
     once, producing the dense (U, D, M) tables the traced dispatch
     gathers from.  This is what makes executors compilable — and why the
@@ -1287,7 +1320,14 @@ def _tabulate_executor(executor: StageExecutor, requests: np.ndarray,
     model) pairs the trie can actually dispatch — only those cells are
     evaluated, so executors (like the oracle's) that index stage tables
     by depth never see out-of-range probes; unreachable cells stay at
-    benign zeros and are masked out of every traced use."""
+    benign zeros and are masked out of every traced use.
+
+    Under a ``work_model`` (token calendar, ISSUE 10) the latency cell is
+    the stage's token footprint in batch-1 seconds — the same host-side
+    `TokenWorkModel.work_of` the host loop calls at dispatch, so the two
+    calendars start from bit-identical work quanta; the requirement that
+    ``stage_tokens`` be a pure function of (request, depth, model) is what
+    makes the tabulation valid."""
     uniq, row = np.unique(requests, return_inverse=True)
     U = uniq.shape[0]
     D, M = probe.shape
@@ -1297,6 +1337,11 @@ def _tabulate_executor(executor: StageExecutor, requests: np.ndarray,
     for ui, rv in enumerate(uniq):
         for d, m in zip(*np.nonzero(probe)):
             s, c, lat = executor(int(rv), int(d), int(m), t_start)
+            if work_model is not None:
+                ptok, dtok = work_model.stage_tokens(int(rv), int(d),
+                                                     int(m))
+                lat = work_model.work_of(
+                    engines[int(engine_of_model[int(m)])], ptok, dtok)
             tab_s[ui, d, m] = bool(s)
             tab_c[ui, d, m] = float(c)
             tab_l[ui, d, m] = float(lat)
@@ -1320,6 +1365,7 @@ def run_events_compiled(
     restrict_nodes: np.ndarray | None = None,
     load_probe=None,
     fleet_load=None,
+    work_model=None,
     t_start: float = 0.0,
     plan_variant: str | None = None,
     annotation_schedule=None,
@@ -1373,6 +1419,16 @@ def run_events_compiled(
     here (use the host loop): ``timeout_k`` (needs host-side latency
     forecasts), ``recovery="restart"``, and combining faults with
     forecast/occupancy admission policies.
+
+    ``work_model`` (ISSUE 10) switches the engine calendar to the
+    token-level model, bit-compatible with the host loop: stage work is
+    tabulated host-side as the (prefill, decode) token footprint in
+    batch-1 seconds via `TokenWorkModel.work_of`, and the traced drain
+    uses the continuous-batching decode-step rate curve
+    (`traced_token_rates`) whose coefficients ride as (E,) operands —
+    new token models or curve parameters compile ZERO new programs.
+    Requires concrete `TokenWorkModel`/`EngineTokenModel` instances and
+    is mutually exclusive with ``fleet_load``/``load_probe``.
     """
     if policy not in ("dynamic", "dynamic_load_aware"):
         raise ValueError(f"unsupported events policy {policy!r}: the static "
@@ -1382,6 +1438,25 @@ def run_events_compiled(
         raise NotImplementedError(
             "compiled event engine cannot trace a host load_probe callback; "
             "use fleet_load=FleetLoadModel(...) or the host loop")
+    if work_model is not None:
+        if fleet_load is not None:
+            raise ValueError("work_model and fleet_load are mutually "
+                             "exclusive: the token calendar replaces the "
+                             "scalar slowdown model")
+        if getattr(work_model, "stage_tokens", None) is None:
+            raise ValueError("work_model.stage_tokens must be set: the "
+                             "token calendar needs per-stage "
+                             "(prefill, decode) token counts")
+        # like fleet_load: the traced calendar needs the concrete
+        # decode-step coefficients, not a duck-typed work model
+        from repro.serving.loadsim import EngineTokenModel, TokenWorkModel
+        if not isinstance(work_model, TokenWorkModel) or not all(
+                isinstance(m, EngineTokenModel)
+                for m in work_model.engines.values()):
+            raise NotImplementedError(
+                "compiled event engine supports TokenWorkModel with "
+                "EngineTokenModel entries; use the host loop for duck-typed "
+                "work models")
     if refresh is not None:
         raise NotImplementedError(
             "compiled event engine cannot run the online estimator refresh "
@@ -1524,8 +1599,33 @@ def run_events_compiled(
     conc = np.full(E, np.inf)
     ms = np.ones(E)
     hasm = np.zeros(E, dtype=bool)
-    ps = load_aware and fleet_load is not None
-    if ps:
+    tokens = work_model is not None
+    ps = tokens or (load_aware and fleet_load is not None)
+    if tokens:
+        # token calendar (ISSUE 10): the decode-step curve coefficients
+        # become (E,) traced operands; conc stays inf (shape source only
+        # — the rate curve never reads it).  tk1 = decode_step_s(1) is
+        # precomputed here so the trace and the host share one rounding.
+        tkw = np.zeros(E)
+        tkv = np.zeros(E)
+        tkf = np.zeros(E)
+        tkc = np.ones(E)
+        tk1 = np.ones(E)
+        for j, e in enumerate(engines):
+            m = work_model.engines.get(e)
+            if m is None:
+                raise ValueError(
+                    f"work_model has no token model for engine {e!r}: the "
+                    "token calendar needs every trie engine's decode curve")
+            tkw[j] = float(m.t_weights_s)
+            tkv[j] = float(m.t_kv_s)
+            tkf[j] = float(m.t_flop_s)
+            tkc[j] = float(m.kv_capacity)
+            tk1[j] = max(float(m.t_weights_s) + float(m.t_kv_s),
+                         float(m.t_flop_s))
+            ms[j] = float(work_model.mean_service_s.get(e, 1.0))
+            hasm[j] = True
+    elif ps:
         from repro.serving.loadsim import EngineLoadModel, FleetLoadModel
         if not isinstance(fleet_load, FleetLoadModel) or not all(
                 isinstance(m, EngineLoadModel)
@@ -1556,7 +1656,9 @@ def run_events_compiled(
     has_child = trie.child >= 0  # (n_nodes, M)
     np.logical_or.at(probe, node_depth, has_child)
     tab_s, tab_c, tab_l, row = _tabulate_executor(
-        executor, requests, probe, t_start)
+        executor, requests, probe, t_start, work_model=work_model,
+        engines=engines,
+        engine_of_model=np.asarray(td.engine_of_model, dtype=np.int64))
     best_acc, min_cost = _subtree_reductions(trie, ann, term_mask)
 
     n_shards = 1 if devices is None else int(devices)
@@ -1570,7 +1672,8 @@ def run_events_compiled(
     cfg = _EngineConfig(
         capacity=C, n_classes=K, n_engines=E, n_models=M,
         max_depth=max_depth, priorities=priorities, preempt=bool(preempt),
-        ps=ps, load_aware=load_aware, deadline_sheds=deadline_sheds,
+        ps=ps, load_aware=load_aware, tokens=tokens,
+        deadline_sheds=deadline_sheds,
         pol=tpol, kind=obj.kind, kind_dg="min_cost",
         variant=_resolve_variant(plan_variant), n_bins=sketch.n_bins,
         n_shards=n_shards, explore=explore_model is not None,
@@ -1618,6 +1721,14 @@ def run_events_compiled(
             "mcost": jnp.asarray(min_cost),
             "edges": jnp.asarray(sketch.edges),
         }
+        if tokens:
+            # added only under the token calendar so legacy configs keep
+            # their exact operand pytree (and compiled-program cache keys)
+            cn["tkw"] = jnp.asarray(tkw)
+            cn["tkv"] = jnp.asarray(tkv)
+            cn["tkf"] = jnp.asarray(tkf)
+            cn["tkc"] = jnp.asarray(tkc)
+            cn["tk1"] = jnp.asarray(tk1)
         if explore_model is not None:
             cn["xpm"] = jnp.asarray(explore_model)
         if fault_outages:

@@ -47,6 +47,25 @@ class Workload:
     # per-request SLO-class indices (None unless generated with class_mix=);
     # indices into whatever SLOClass table the serving layer is given
     classes: np.ndarray | None = None
+    # (n_q, D, M) realized output-token counts behind `cost`/`lat` — the
+    # decode-token source for the token-level engine calendar (ISSUE 10).
+    # Optional so hand-built workloads (tests) stay valid; generate_workload
+    # always fills it.
+    tokens: np.ndarray | None = None
+
+    def stage_tokens_fn(self, prompt_tokens: float = 256.0):
+        """(request, depth, model) -> (prefill, decode) token counts for a
+        `TokenWorkModel` — decode tokens come from the realized table, the
+        prompt is a fixed prefill footprint (the generator does not model
+        per-request prompts)."""
+        if self.tokens is None:
+            raise ValueError("workload has no token table; regenerate with "
+                             "generate_workload or set Workload.tokens")
+        tok = self.tokens
+
+        def stage_tokens(q: int, depth: int, model: int):
+            return float(prompt_tokens), float(tok[q, depth, model])
+        return stage_tokens
 
     @property
     def n_requests(self) -> int:
@@ -362,4 +381,5 @@ def generate_workload(
         lat=lat.astype(np.float64),
         difficulty=z,
         classes=classes,
+        tokens=tokens,
     )

@@ -43,12 +43,20 @@ class ServingEngine:
     has one core); the scheduler below provides batching and hedging."""
 
     def __init__(self, name: str, model, params, *, max_len: int = 512,
-                 price_per_1k: float = 1.0):
+                 price_per_1k: float = 1.0,
+                 prefill_price_per_1k: float | None = None):
         self.name = name
         self.model = model
         self.params = params
         self.max_len = max_len
         self.price_per_1k = price_per_1k
+        # per-model prefill pricing (ISSUE 10): prefill tokens get their
+        # own rate instead of the 0.25 discount that used to be hardcoded
+        # inside cost_of; None keeps that legacy ratio so existing engine
+        # configs price identically
+        self.prefill_price_per_1k = (0.25 * price_per_1k
+                                     if prefill_price_per_1k is None
+                                     else float(prefill_price_per_1k))
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill)
         self.inflight = 0  # live queue depth, read by the load model
@@ -85,7 +93,10 @@ class ServingEngine:
             self.inflight -= 1
 
     def cost_of(self, tokens_in: int, tokens_out: int) -> float:
-        return self.price_per_1k * (tokens_in * 0.25 + tokens_out) / 1000.0
+        """Dollar cost of one request, prefill and decode tokens each
+        priced at their own per-model rate (per 1k tokens)."""
+        return (self.prefill_price_per_1k * tokens_in
+                + self.price_per_1k * tokens_out) / 1000.0
 
 
 class ServingScheduler:

@@ -32,7 +32,11 @@ class EngineLoadModel:
     def slowdown(self, n_active: float, rng=None) -> float:
         base = max(1.0, (n_active + 1.0) / self.concurrency)
         if rng is not None:
-            base *= 1.0 + self.jitter * abs(rng.standard_normal())
+            # zero-mean measurement noise: abs() here would make every
+            # draw >= the noiseless curve and bias `fit_slowdown_curve`
+            # means up by jitter * E|z| ~ +4% at the default jitter
+            base *= max(1.0 + self.jitter * float(rng.standard_normal()),
+                        1e-6)
         return float(base)
 
 
@@ -114,6 +118,160 @@ class LoadTrace:
             }
 
         return probe
+
+
+# ----------------------------------------------------------------------
+# token-level engine model (continuous batching + KV-cache pressure)
+# ----------------------------------------------------------------------
+# Roofline constants shared with `benchmarks/roofline.py` (v5e-class
+# chip, bf16).  `EngineTokenModel.from_roofline` derives a decode-step
+# calendar from the same analytic model the kernel benchmarks
+# (flash_attention / ssd_scan) are scored against, so the simulator and
+# the roofline speak identical hardware units.
+PEAK_FLOPS = 197e12   # bf16 FLOP/s per chip
+HBM_BW = 819e9        # bytes/s per chip
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineTokenModel:
+    """Continuous-batching decode physics for ONE engine.
+
+    A decode step over a batch of ``b`` sequences emits one token per
+    sequence and costs
+
+        step(b) = max(t_weights_s + t_kv_s * b,  t_flop_s * b)
+
+    — the roofline maximum of the memory stream (weights are read once
+    per step regardless of batch; each sequence adds its own KV-cache
+    read) and the compute stream (FLOPs scale with batch).  Weight reads
+    amortize across the batch, so engine throughput ``b / step(b)``
+    rises with ``b`` until the KV/compute terms dominate, then saturates
+    — the familiar continuous-batching throughput curve.
+
+    ``kv_capacity`` is the KV-cache occupancy cap: at most that many
+    sequences hold KV residency concurrently.  With ``n > kv_capacity``
+    sequences assigned, the engine runs saturated batches of
+    ``kv_capacity`` and the sequences timeshare the saturated
+    throughput (`slowdown` folds both effects into one factor).
+
+    Prefill is compute-bound: ``prefill_tok_s`` seconds per prompt
+    token, independent of decode batching (chunked-prefill engines
+    interleave it; the calendar charges it up front as part of the
+    stage's unloaded work).
+    """
+
+    name: str
+    t_weights_s: float    # weight-stream seconds per decode step
+    t_kv_s: float         # per-sequence KV-read seconds per decode step
+    t_flop_s: float       # per-sequence compute seconds per decode step
+    kv_capacity: float    # max sequences concurrently KV-resident
+    prefill_tok_s: float  # seconds per prefill (prompt) token
+
+    def __post_init__(self):
+        if self.kv_capacity < 1:
+            raise ValueError(
+                f"{self.name}: kv_capacity must be >= 1, got "
+                f"{self.kv_capacity} — an engine that cannot hold one "
+                f"sequence cannot serve")
+        if self.decode_step_s(1.0) <= 0.0:
+            raise ValueError(
+                f"{self.name}: decode step time must be positive")
+
+    @classmethod
+    def from_roofline(cls, name: str, arch, *, context_len: int = 2048,
+                      kv_budget_bytes: float = 8 << 30,
+                      bytes_per_param: float = 2.0,
+                      peak_flops: float = PEAK_FLOPS,
+                      hbm_bw: float = HBM_BW) -> "EngineTokenModel":
+        """Derive the decode-step curve from an `ArchConfig` and the
+        chip roofline (same constants as `benchmarks/roofline.py`):
+        weight stream = active params x bytes / HBM bandwidth, KV stream
+        = 2 x layers x kv_heads x head_dim x bytes per token x context
+        length, compute = 2 x active params FLOPs per token, and the KV
+        cap = how many ``context_len`` sequences fit the KV budget."""
+        p = float(arch.active_param_count())
+        kv_per_tok = max(2.0 * arch.n_layers * arch.n_kv_heads
+                         * arch.head_dim * bytes_per_param, 1.0)
+        cap = float(int(kv_budget_bytes // (kv_per_tok * context_len)))
+        return cls(name,
+                   t_weights_s=p * bytes_per_param / hbm_bw,
+                   t_kv_s=kv_per_tok * context_len / hbm_bw,
+                   t_flop_s=2.0 * p / peak_flops,
+                   kv_capacity=max(cap, 1.0),
+                   prefill_tok_s=2.0 * p / peak_flops)
+
+    def decode_step_s(self, batch: float) -> float:
+        """Seconds per decode step over a batch of ``batch`` sequences."""
+        return max(self.t_weights_s + self.t_kv_s * batch,
+                   self.t_flop_s * batch)
+
+    def decode_tok_s(self, batch: float) -> float:
+        """Engine decode throughput (tokens/sec) with ``batch`` sequences
+        assigned: rises while weight reads amortize, saturates at the
+        KV cap."""
+        b = min(max(float(batch), 1.0), float(self.kv_capacity))
+        return b / self.decode_step_s(b)
+
+    def slowdown(self, n_active: float) -> float:
+        """Per-sequence service slowdown with ``n_active`` OTHER
+        sequences on the engine (the `EngineLoadModel.slowdown`
+        convention, so the planner's delta_e row and `fit_slowdown_curve`
+        work unchanged): batching ``b = min(n, kv_capacity)`` sequences
+        stretches the step to ``step(b)/step(1)``, and sequences beyond
+        the cap timeshare (factor ``n / b``)."""
+        n = float(max(n_active, 0.0)) + 1.0
+        b = min(n, float(self.kv_capacity))
+        sb = max(self.t_weights_s + self.t_kv_s * b, self.t_flop_s * b)
+        s1 = max(self.t_weights_s + self.t_kv_s, self.t_flop_s)
+        return float((n / b) * (sb / s1))
+
+
+@dataclasses.dataclass
+class TokenWorkModel:
+    """`run_events(..., work_model=)` input: the fleet's token-level
+    work model.  Each stage invocation is ``(prefill_tokens,
+    decode_tokens)`` (from `stage_tokens`); its *unloaded* work is the
+    batch-1 service time
+
+        work = prefill_tokens * prefill_tok_s
+             + decode_tokens  * decode_step_s(1)
+
+    and the engine calendar drains it at the token rate — the
+    continuous-batching throughput curve divided across resident
+    sequences — instead of the abstract processor-sharing rate.
+    `delays`/`slowdown` duck-type `FleetLoadModel`, so the planner's
+    delta_e(t) row is the same (slowdown - 1) x mean-service product,
+    now grounded in tokens/sec.
+
+    ``stage_tokens(request, depth, model) -> (prefill, decode)`` must be
+    a pure function of its arguments (same contract as the stage
+    executor): the compiled engine tabulates it over the cohort once."""
+
+    engines: dict[str, EngineTokenModel]
+    mean_service_s: dict[str, float]
+    stage_tokens: object = None
+
+    def work_of(self, engine: str, prefill_tokens: float,
+                decode_tokens: float) -> float:
+        """Unloaded (batch-1) seconds of service for one stage."""
+        m = self.engines[engine]
+        s1 = max(m.t_weights_s + m.t_kv_s, m.t_flop_s)
+        return float(prefill_tokens) * m.prefill_tok_s \
+            + float(decode_tokens) * s1
+
+    def delays(self, inflight: dict[str, float]) -> dict[str, float]:
+        """Planner-facing delta_e per engine: the extra latency a NEW
+        invocation would see, from the token throughput curve."""
+        return {
+            e: (m.slowdown(float(inflight.get(e, 0))) - 1.0)
+            * self.mean_service_s.get(e, 1.0)
+            for e, m in self.engines.items()
+        }
+
+    def slowdown(self, engine: str, n_others: int) -> float:
+        m = self.engines.get(engine)
+        return m.slowdown(float(max(n_others, 0))) if m is not None \
+            else 1.0
 
 
 class EngineSim:
@@ -283,9 +441,35 @@ class FleetEngineSim:
 
     _DONE_TOL = 1e-9  # remaining-work tolerance (matches EngineSim)
 
-    def __init__(self, engines: list[str], capacity: int, slowdown=None):
+    def __init__(self, engines: list[str], capacity: int, slowdown=None,
+                 token_models: dict[str, EngineTokenModel] | None = None):
         self.engines = list(engines)
         self._slowdown = slowdown
+        self._tokens = token_models is not None
+        # _ps: remaining-work calendar (shared-rate drains) vs absolute
+        # completion times — token engines always drain at a shared rate
+        self._ps = self._tokens or slowdown is not None
+        if self._tokens:
+            if slowdown is not None:
+                raise ValueError(
+                    "token_models and slowdown are mutually exclusive — "
+                    "the token calendar defines its own rate curve")
+            E = len(self.engines)
+            self._tok_w = np.zeros(E)
+            self._tok_kv = np.zeros(E)
+            self._tok_f = np.zeros(E)
+            self._tok_cap = np.ones(E)
+            self._tok_1 = np.ones(E)   # decode_step_s(1), precomputed
+            for j, e in enumerate(self.engines):
+                m = token_models.get(e)
+                if m is None:
+                    raise ValueError(
+                        f"token_models has no entry for engine {e!r}")
+                self._tok_w[j] = m.t_weights_s
+                self._tok_kv[j] = m.t_kv_s
+                self._tok_f[j] = m.t_flop_s
+                self._tok_cap[j] = m.kv_capacity
+                self._tok_1[j] = max(m.t_weights_s + m.t_kv_s, m.t_flop_s)
         c = int(capacity)
         self.job_engine = np.full(c, -1, dtype=np.int64)   # -1 = idle slot
         self._seq = np.zeros(c, dtype=np.int64)            # admission order
@@ -355,8 +539,27 @@ class FleetEngineSim:
         return r
 
     def _rates(self, occ: np.ndarray) -> np.ndarray:
-        """(E,) shared service rate per engine at the given occupancies."""
+        """(E,) shared service rate per engine at the given occupancies.
+
+        Token mode computes the rate *directly* as ``(b / occ) *
+        (step(1) / step(b))`` — batching stretch plus beyond-KV-cap
+        timesharing — rather than via ``1 / slowdown``: the reciprocal
+        of a product rounds differently from the product of quotients,
+        and `traced_token_rates` mirrors this exact op order so the
+        compiled calendar stays bit-compatible.  The rate is always in
+        (0, 1] (exactly 1.0 at occupancy <= 1), so ``t + remaining``
+        stays a certain completion lower bound under tokens too."""
         rates = np.ones(self.n_engines)
+        if self._tokens:
+            for e in range(self.n_engines):
+                if occ[e] > 0:
+                    occ_s = max(float(occ[e]), 1.0)
+                    b = min(occ_s, float(self._tok_cap[e]))
+                    sb = max(float(self._tok_w[e])
+                             + float(self._tok_kv[e]) * b,
+                             float(self._tok_f[e]) * b)
+                    rates[e] = (b / occ_s) * (float(self._tok_1[e]) / sb)
+            return rates
         for e in range(self.n_engines):
             if occ[e] > 0:
                 rates[e] = 1.0 / float(self._slowdown(e, int(occ[e]) - 1))
@@ -366,7 +569,7 @@ class FleetEngineSim:
         """Drain all engines at their current shared rates up to ``t``."""
         dt = t - self._t_last
         act = self.job_engine >= 0
-        if dt > 0.0 and self._slowdown is not None and act.any():
+        if dt > 0.0 and self._ps and act.any():
             rates = self._rates(self.occupancies())
             self._remaining[act] -= dt * self._job_rates(act, rates)
         self._t_last = max(self._t_last, t)
@@ -378,7 +581,7 @@ class FleetEngineSim:
         ``weight`` is the job's weighted-PS share (priority classes);
         resuming a preempted stage is the same call with ``work`` set to
         the remainder `preempt` returned."""
-        if self._slowdown is None:
+        if not self._ps:
             self._t_complete[slot] = t + work
             self._work[slot] = work
         else:
@@ -397,7 +600,7 @@ class FleetEngineSim:
         act = self.job_engine >= 0
         if not act.any():
             return float("inf")
-        if self._slowdown is None:
+        if not self._ps:
             return float(self._t_complete[act].min())
         occ = self.occupancies()
         rates = self._rates(occ)
@@ -416,7 +619,7 @@ class FleetEngineSim:
     def pop_completed(self, t: float) -> list:
         """Remove jobs finished by ``t``; [(slot, realized_s), ...] in
         (canonical engine order, admission order)."""
-        if self._slowdown is None:
+        if not self._ps:
             done = (self.job_engine >= 0) & (self._t_complete <= t)
         else:
             self._advance(t)
@@ -425,7 +628,7 @@ class FleetEngineSim:
         order = np.lexsort((self._seq[slots], self.job_engine[slots]))
         out = []
         for slot in slots[order]:
-            realized = (self._work[slot] if self._slowdown is None
+            realized = (self._work[slot] if not self._ps
                         else t - self._t_start[slot])
             out.append((int(slot), float(realized)))
             self._clear(int(slot))
@@ -448,7 +651,7 @@ class FleetEngineSim:
         shared rate, then its engine share is released.  Raises
         ``ValueError`` when the slot is idle (see `_require_in_service`)."""
         self._require_in_service(slot, "cancel")
-        if self._slowdown is not None:
+        if self._ps:
             self._advance(t)
         self._clear(slot)
         return True
@@ -464,7 +667,7 @@ class FleetEngineSim:
         Raises ``ValueError`` when the slot is idle (already completed /
         cancelled / paused — see `_require_in_service`)."""
         self._require_in_service(slot, "preempt")
-        if self._slowdown is None:
+        if not self._ps:
             rem = max(float(self._t_complete[slot]) - t, 0.0)
         else:
             self._advance(t)
@@ -483,7 +686,7 @@ class FleetEngineSim:
         act = self.job_engine >= 0
         if not act.any():
             return out
-        if self._slowdown is None:
+        if not self._ps:
             rem = np.maximum(self._t_complete - t, 0.0)[act]
             jr = np.ones(rem.shape)
         else:
@@ -508,7 +711,7 @@ class FleetEngineSim:
         act = self.job_engine >= 0
         if not act.any():
             return np.zeros(0)
-        if self._slowdown is None:
+        if not self._ps:
             return np.sort(self._t_complete[act])
         self._advance(t)
         rates = self._rates(self.occupancies())
@@ -522,7 +725,7 @@ class FleetEngineSim:
         exceeds 1, so ``t + remaining(t)`` lower-bounds every completion —
         the deadline-shed certainty test is one vectorized comparison."""
         act = self.job_engine >= 0
-        if self._slowdown is None:
+        if not self._ps:
             return np.where(act, np.maximum(self._t_complete - t, 0.0),
                             np.inf)
         self._advance(t)
@@ -565,6 +768,36 @@ def traced_engine_rates(occ, conc):
     from jax import lax
 
     return lax.optimization_barrier(1.0 / jnp.maximum(1.0, occ / conc))
+
+
+def traced_token_rates(occ, tkw, tkv, tkf, tkc, tk1):
+    """(E,) shared token-calendar rate per engine — the traced image of
+    `FleetEngineSim._rates` in token mode: ``(b / occ) * (step(1) /
+    step(b))`` with effective batch ``b = min(occ, kv_capacity)``.
+
+    ``occ`` is the (E,) active-sequence count (float); ``tkw``/``tkv``/
+    ``tkf``/``tkc`` the per-engine decode-step coefficients and KV cap;
+    ``tk1`` the engine's ``decode_step_s(1)`` **precomputed host-side**
+    and passed as an operand — recomputing ``max(tkw + tkv, tkf)`` in
+    the trace could round differently after simplifier rewrites.
+
+    Idle engines come out at exactly 1.0 (occ clamps to 1, so b = 1 and
+    step(b) == tk1 bitwise), matching the host loop that skips them.
+    The barriers pin the host's rounding sequence: one on ``tkv * b``
+    (LLVM would contract ``tkw + tkv * b`` to an FMA — one rounding
+    where the host takes two) and one per quotient (the algebraic
+    simplifier would fold ``(b / occ) * (tk1 / sb)`` into a single
+    fused division)."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    occ_s = jnp.maximum(occ, 1.0)
+    b = jnp.minimum(occ_s, tkc)
+    prod = lax.optimization_barrier(tkv * b)
+    sb = jnp.maximum(tkw + prod, tkf * b)
+    q1 = lax.optimization_barrier(b / occ_s)
+    q2 = lax.optimization_barrier(tk1 / sb)
+    return lax.optimization_barrier(q1 * q2)
 
 
 def traced_job_rates(job_engine, weight, active, rates, weighted):
@@ -628,13 +861,18 @@ def traced_job_rates(job_engine, weight, active, rates, weighted):
 
 
 def traced_advance(remaining, t_last, t, job_engine, weight, active,
-                   conc, weighted):
+                   conc, weighted, tok=None):
     """Drain the (C,) remaining-work column to virtual time ``t`` — the
     traced image of `FleetEngineSim._advance` for processor-sharing
     engines (unit-rate engines carry absolute completion times and never
     drain).  Returns ``(remaining, t_last)``; same guard as the host
     (positive dt and at least one active job), same single
-    ``remaining -= dt * job_rate`` update."""
+    ``remaining -= dt * job_rate`` update.
+
+    ``tok`` switches the engine rate curve to the token calendar: a
+    ``(tkw, tkv, tkf, tkc, tk1)`` tuple of (E,) decode-step coefficient
+    arrays (see `traced_token_rates`); ``conc`` is then only a shape
+    source."""
     import jax.numpy as jnp
 
     dt = t - t_last
@@ -642,7 +880,8 @@ def traced_advance(remaining, t_last, t, job_engine, weight, active,
         jnp.where(active, jnp.clip(job_engine, 0, conc.shape[0] - 1),
                   conc.shape[0])].add(
         jnp.where(active, 1.0, 0.0))[:conc.shape[0]]
-    rates = traced_engine_rates(occ, conc)
+    rates = (traced_token_rates(occ, *tok) if tok is not None
+             else traced_engine_rates(occ, conc))
     jr = traced_job_rates(job_engine, weight, active, rates, weighted)
     do = (dt > 0.0) & active.any()
     # the maximum() pins the host's two-rounding op order: a bare

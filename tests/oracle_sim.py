@@ -63,7 +63,8 @@ from repro.core.events import run_events
 from repro.core.trie import Trie, TrieAnnotations
 from repro.core.workflow import DecisionPoint, ModelSpec, WorkflowTemplate
 from repro.core.workload import SLOClass
-from repro.serving.loadsim import EngineLoadModel, FleetLoadModel
+from repro.serving.loadsim import (EngineLoadModel, EngineTokenModel,
+                                   FleetLoadModel, TokenWorkModel)
 
 MARGIN = 1e-4        # FeasibilityGate default queue-reject margin
 PLAN_SLACK = 1e-6    # device planner's latency-feasibility slack
@@ -110,6 +111,19 @@ class Scenario:
     # forced failed-attempt counts, (n, depth) int in [0, 3]: the first c
     # dispatch attempts of that (request, stage) fail (3 = exhaustion)
     failure_table: np.ndarray | None = None
+    # token calendar (ISSUE 10): non-None ptok switches the scenario to
+    # work_model="tokens" — per-engine decode-step coefficients on the
+    # binary grid plus (n, depth) per-stage token counts.  ``work`` is
+    # then IGNORED by the calendar (the executor still returns it, which
+    # pins that the engines supersede executor latency under tokens);
+    # same no-deadline regime as PS (off-grid drain timestamps).
+    tok_w: tuple = ()       # (n_engines,) weight-read seconds/step
+    tok_kv: tuple = ()      # (n_engines,) KV-read seconds/step/sequence
+    tok_f: tuple = ()       # (n_engines,) compute seconds/step/sequence
+    tok_cap: tuple = ()     # (n_engines,) KV-capacity batch bound
+    prefill_s: tuple = ()   # (n_engines,) prefill seconds/token
+    ptok: np.ndarray | None = None   # (n, depth) prefill tokens
+    dtok: np.ndarray | None = None   # (n, depth) decode tokens
 
 
 def random_scenario(seed: int) -> Scenario:
@@ -130,10 +144,29 @@ def random_scenario(seed: int) -> Scenario:
     preempt = bool(rng.random() < 0.7)
     if rng.random() < 0.5:
         # processor sharing: off-grid timestamps -> no deadlines anywhere
+        concurrency = int(rng.integers(1, 3))
+        if rng.random() < 0.45:
+            # token-calendar sub-draw (ISSUE 10): same no-deadline
+            # regime, but engines drain on the decode-step curve (the
+            # extra draws come LAST so non-token scenarios keep their
+            # exact pre-ISSUE-10 rng stream)
+            return Scenario(
+                n, depth, n_engines, engine_of_depth, capacity,
+                arrivals, work, succ, cost, ann_step,
+                lat_cap=None, admission="always", concurrency=None,
+                classes=classes, class_caps=(None, None), preempt=preempt,
+                tok_w=tuple(rng.integers(4, 17, size=n_engines) / 8.0),
+                tok_kv=tuple(rng.integers(1, 5, size=n_engines) / 16.0),
+                tok_f=tuple(rng.integers(1, 9, size=n_engines) / 16.0),
+                tok_cap=tuple(int(c)
+                              for c in rng.integers(1, 5, size=n_engines)),
+                prefill_s=tuple(rng.integers(1, 5, size=n_engines) / 64.0),
+                ptok=rng.integers(1, 17, size=(n, depth)).astype(np.float64),
+                dtok=rng.integers(1, 17, size=(n, depth)).astype(np.float64))
         return Scenario(n, depth, n_engines, engine_of_depth, capacity,
                         arrivals, work, succ, cost, ann_step,
                         lat_cap=None, admission="always",
-                        concurrency=int(rng.integers(1, 3)),
+                        concurrency=concurrency,
                         classes=classes, class_caps=(None, None),
                         preempt=preempt)
     admission = str(rng.choice(["always", "feasibility", "predictive"]))
@@ -200,6 +233,18 @@ def random_chaos_scenario(seed: int) -> Scenario:
             (float(t), rng.integers(2, 17, size=sc.depth) / 8.0)
             for t in ts))
     return sc
+
+
+def random_token_scenario(seed: int) -> Scenario:
+    """First token-calendar draw at or after ``seed`` (the token lane is
+    a probabilistic sub-branch of `random_scenario`; deterministically
+    step the seed until one lands — expected ~4 steps at the 0.5 x 0.45
+    branch rate)."""
+    for off in range(1000):
+        sc = random_scenario(seed + off)
+        if sc.ptok is not None:
+            return sc
+    raise AssertionError(f"no token scenario within 1000 seeds of {seed}")
 
 
 def drift_schedule(sc: Scenario, trie) -> list | None:
@@ -285,7 +330,23 @@ def run_subject(sc: Scenario, engine: str = "host",
 
     obj = Objective("max_acc", lat_cap=sc.lat_cap)
     kw = {}
-    if sc.concurrency is not None:
+    if sc.ptok is not None:
+        # token calendar: the same decode-step coefficients the oracle
+        # replays; load-aware policy exercises the token delay row in
+        # both engines (inert for planning — token scenarios carry no
+        # deadlines — but it must not perturb the calendar)
+        tms = {f"e{e}": EngineTokenModel(
+            name=f"e{e}", t_weights_s=sc.tok_w[e], t_kv_s=sc.tok_kv[e],
+            t_flop_s=sc.tok_f[e], kv_capacity=sc.tok_cap[e],
+            prefill_tok_s=sc.prefill_s[e])
+            for e in range(sc.n_engines)}
+        kw = dict(policy="dynamic_load_aware",
+                  work_model=TokenWorkModel(
+                      engines=tms,
+                      mean_service_s={e: 1.0 for e in tms},
+                      stage_tokens=lambda q, d, m: (float(sc.ptok[q, d]),
+                                                    float(sc.dtok[q, d]))))
+    elif sc.concurrency is not None:
         engines = {f"e{e}": EngineLoadModel(f"e{e}",
                                             concurrency=sc.concurrency,
                                             jitter=0.0)
@@ -331,7 +392,13 @@ def run_oracle(sc: Scenario) -> list[dict]:
         w_req = np.ones(n)
     shedding = sc.admission in ("feasibility", "predictive")
     deadline_sheds = shedding and bool(np.isfinite(cap_req).any())
-    ps = sc.concurrency is not None
+    tokens = sc.ptok is not None
+    ps = sc.concurrency is not None or tokens
+    # token calendar: batch-1 decode step per engine — the work unit the
+    # stage's decode tokens are denominated in (same inline max as
+    # `TokenWorkModel.work_of`, so the quanta are bit-identical)
+    step1 = ([max(sc.tok_w[e] + sc.tok_kv[e], sc.tok_f[e])
+              for e in range(sc.n_engines)] if tokens else None)
     weighted = sc.classes is not None
     # chaos lane: engine availability + resolved fault transitions (downs
     # before ups at one instant), forced failure counts, attempt ledger
@@ -378,7 +445,17 @@ def run_oracle(sc: Scenario) -> list[dict]:
             mine = [i for i in jobs if st[i]["stage"]["engine"] == e]
             if not mine:
                 continue
-            base = 1.0 / max(1.0, occ[e] / sc.concurrency)
+            if tokens:
+                # continuous-batching decode-step curve: effective batch
+                # b = min(occ, kv_cap), per-job rate = equal share of the
+                # batch throughput relative to batch-1 (same op order as
+                # `FleetEngineSim._rates` — two quotients, then product)
+                occ_s = max(occ[e], 1.0)
+                b = min(occ_s, float(sc.tok_cap[e]))
+                sb = max(sc.tok_w[e] + sc.tok_kv[e] * b, sc.tok_f[e] * b)
+                base = (b / occ_s) * (step1[e] / sb)
+            else:
+                base = 1.0 / max(1.0, occ[e] / sc.concurrency)
             if not weighted:
                 for i in mine:
                     out[i] = base
@@ -704,10 +781,17 @@ def run_oracle(sc: Scenario) -> list[dict]:
                         continue
                     if ps:
                         advance(t)
-                    st[i]["stage"] = dict(engine=int(sc.engine_of_depth[d]),
+                    e_d = int(sc.engine_of_depth[d])
+                    if tokens:
+                        # the stage's token footprint in batch-1 seconds
+                        # (TokenWorkModel.work_of's exact float op order)
+                        w = float(sc.ptok[i, d]) * sc.prefill_s[e_d] \
+                            + float(sc.dtok[i, d]) * step1[e_d]
+                    else:
+                        w = float(sc.work[i, d])
+                    st[i]["stage"] = dict(engine=e_d,
                                           ok=bool(sc.succ[i, d]), seq=seq,
-                                          tc=t + sc.work[i, d],
-                                          rem=float(sc.work[i, d]))
+                                          tc=t + w, rem=w)
                     seq += 1
                     st[i]["cost"] += float(sc.cost[i, d])
             need = []

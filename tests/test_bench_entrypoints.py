@@ -1,0 +1,52 @@
+"""Benchmark entrypoint smoke: standalone invocation + registry shape.
+
+Regression guards for two ways the benchmark harness has broken:
+
+- ``python benchmarks/fig7_frontier.py`` (file path, not ``-m``) used to
+  die with ModuleNotFoundError because the interpreter puts benchmarks/
+  itself on sys.path, so neither the ``benchmarks`` package nor ``repro``
+  (under src/) resolved — the module now bootstraps both; the subprocess
+  test proves it from a neutral cwd;
+- `benchmarks.run`'s registry silently lacked the event-engine
+  trajectory benchmarks (trace_replay / drift / chaos / token_calendar),
+  so ``python -m benchmarks.run`` never executed them.
+"""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_fig7_standalone_invocation_resolves_imports():
+    """`python benchmarks/fig7_frontier.py` must get past its imports
+    from any cwd (the --imports-only hook exits before the sweep)."""
+    env = dict(os.environ)
+    env.pop("PYTHONPATH", None)  # the bootstrap must not need it
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks",
+                                      "fig7_frontier.py"),
+         "--imports-only"],
+        cwd=os.path.join(REPO, "benchmarks"),  # worst-case cwd
+        env=env, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr
+    assert "imports-ok" in proc.stdout
+
+
+def test_registry_includes_trajectory_benchmarks():
+    """Every trajectory benchmark must be wired into `benchmarks.run`
+    with a CI-runnable (tiny-equivalent) registration, and expose the
+    registry contract: a `run` callable the harness can invoke."""
+    if REPO not in sys.path:
+        sys.path.insert(0, REPO)
+    import inspect
+
+    from benchmarks import (chaos, drift, run as bench_run, token_calendar,
+                            trace_replay)
+
+    for mod in (trace_replay, drift, chaos, token_calendar):
+        assert callable(getattr(mod, "run", None)), mod.__name__
+    src = inspect.getsource(bench_run.main)
+    for name in ("trace_replay", "drift", "chaos", "token_calendar"):
+        assert f'("{name}"' in src, (
+            f"{name} missing from the benchmarks.run registry")

@@ -253,7 +253,20 @@ def run_subject_epoch(sc, epoch):
         return bool(sc.succ[q, d]), float(sc.cost[q, d]), float(sc.work[q, d])
 
     kw = {}
-    if sc.concurrency is not None:
+    if sc.ptok is not None:
+        from repro.serving.loadsim import EngineTokenModel, TokenWorkModel
+        tms = {f"e{e}": EngineTokenModel(
+            name=f"e{e}", t_weights_s=sc.tok_w[e], t_kv_s=sc.tok_kv[e],
+            t_flop_s=sc.tok_f[e], kv_capacity=sc.tok_cap[e],
+            prefill_tok_s=sc.prefill_s[e])
+            for e in range(sc.n_engines)}
+        kw = dict(policy="dynamic_load_aware",
+                  work_model=TokenWorkModel(
+                      engines=tms,
+                      mean_service_s={e: 1.0 for e in tms},
+                      stage_tokens=lambda q, d, m: (float(sc.ptok[q, d]),
+                                                    float(sc.dtok[q, d]))))
+    elif sc.concurrency is not None:
         from repro.serving.loadsim import EngineLoadModel, FleetLoadModel
         engines = {f"e{e}": EngineLoadModel(f"e{e}",
                                             concurrency=sc.concurrency,
@@ -279,7 +292,8 @@ def run_subject_epoch(sc, epoch):
 def test_oracle_is_not_trivial():
     """Sanity on the harness itself: the sweep's scenarios actually reach
     the interesting regimes (preemptions, sheds, rejections, PS mode)."""
-    seen = {"preempts": 0, "shed": 0, "rejected": 0, "ps": 0, "classes": 0}
+    seen = {"preempts": 0, "shed": 0, "rejected": 0, "ps": 0, "classes": 0,
+            "tokens": 0, "token_preempts": 0}
     for seed in range(60):
         sc = random_scenario(seed)
         ref = run_oracle(sc)
@@ -288,4 +302,7 @@ def test_oracle_is_not_trivial():
         seen["rejected"] += sum(o["outcome"] == "rejected" for o in ref)
         seen["ps"] += sc.concurrency is not None
         seen["classes"] += sc.classes is not None
+        seen["tokens"] += sc.ptok is not None
+        if sc.ptok is not None:
+            seen["token_preempts"] += sum(o["preempts"] for o in ref)
     assert all(v > 0 for v in seen.values()), seen

@@ -253,3 +253,145 @@ def test_single_class_weighted_ps_bit_identical_to_pr4(seed, rate,
     assert bstats.admit_t.tolist() == ostats.admit_t.tolist()
     assert (bstats.events, bstats.replans) == (ostats.events, ostats.replans)
     assert ostats.preemptions == 0 and ostats.resumed == 0
+
+
+# ----------------------------------------------------------------------
+# token-calendar lane (ISSUE 10)
+# ----------------------------------------------------------------------
+@given(seed=st.integers(0, 10**6), pre=st.booleans())
+@settings(max_examples=_FUZZ_EXAMPLES, deadline=None)
+def test_fuzz_token_scenarios_match_oracle(seed, pre):
+    """Token-calendar fuzz: engines drain on the continuous-batching
+    decode-step curve + KV cap instead of the PS knee; the events engine
+    must match the oracle's independent token calendar request-for-
+    request, preemption forced both ways.  Matching completion times IS
+    the work-conservation statement: the oracle recomputes every stage
+    from its (prefill, decode) token counts from scratch, so a lost or
+    double-charged decode token in the engine's preempt/resume
+    bookkeeping shifts a done_t."""
+    from oracle_sim import random_token_scenario
+
+    sc = random_token_scenario(seed)
+    assert_scenario_matches(Scenario(**{**sc.__dict__, "preempt": pre}))
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(max_examples=15, deadline=None)
+def test_fuzz_token_scenarios_match_oracle_compiled(seed):
+    """Bounded compiled-lane token fuzz (each new (config, cohort-shape)
+    pair pays an XLA compile): the jitted token calendar — barrier-
+    guarded quotients mirroring the host's float64 op order — must stay
+    bitwise on the same scenario space."""
+    from oracle_sim import random_token_scenario
+
+    assert_scenario_matches(random_token_scenario(seed), engine="compiled")
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(max_examples=40, deadline=None)
+def test_fuzz_token_outage_checkpoints_match_oracle(seed):
+    """Token calendar under chaos: engine outages checkpoint in-service
+    token stages (remaining decode work paused at the realized node) and
+    stage failures retry under backoff.  The oracle match pins that no
+    decoded token is re-run or dropped across checkpoint/requeue/resume
+    — a bookkeeping slip shifts retry-shifted completion times."""
+    from oracle_sim import random_chaos_scenario, random_token_scenario
+
+    sc = random_token_scenario(seed)
+    chaos = random_chaos_scenario(seed)
+    sc = Scenario(**{**sc.__dict__, "outages": chaos.outages,
+                     "failure_table": (
+                         chaos.failure_table[:sc.n_requests, :sc.depth]
+                         if chaos.failure_table is not None and
+                         chaos.failure_table.shape[0] >= sc.n_requests and
+                         chaos.failure_table.shape[1] >= sc.depth
+                         else None)})
+    # outage engine indices from the chaos draw may exceed this
+    # scenario's engine count — clamp to valid engines
+    sc = Scenario(**{**sc.__dict__, "outages": tuple(
+        o for o in sc.outages if o[0] < sc.n_engines)})
+    assert_scenario_matches(sc)
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(max_examples=6, deadline=None)
+def test_token_epoch_widths_bit_identical(seed):
+    """Epoch width is a host-side chunking knob: under the token
+    calendar, widths 1 / 2 / 4096 must produce BIT-identical completion
+    times and outcomes to the host loop (acceptance pin for the traced
+    token operands: chunking cannot perturb the drain arithmetic)."""
+    from oracle_sim import random_token_scenario, run_subject
+    from test_oracle_differential import run_subject_epoch
+
+    sc = random_token_scenario(seed)
+    base, base_stats = run_subject(sc, engine="host")
+    for epoch in (1, 2, 4096):
+        res, stats = run_subject_epoch(sc, epoch)
+        assert [r.outcome for r in res] == [r.outcome for r in base]
+        assert [r.models for r in res] == [r.models for r in base]
+        assert stats.done_t.tolist() == base_stats.done_t.tolist()
+
+
+@given(seed=st.integers(0, 10**6))
+@settings(max_examples=40, deadline=None)
+def test_token_work_conserved_across_preempt_resume(seed):
+    """Random start/advance/preempt/resume walks on the TOKEN calendar:
+    drain is monotone at the curve rate, `preempt` returns exactly the
+    un-drained remainder (no decoded token lost or double-charged), and
+    every resumed job completes — the token-mode twin of the PS
+    conservation walk above."""
+    from repro.serving.loadsim import EngineTokenModel
+
+    rng = np.random.default_rng(seed)
+    E, C = int(rng.integers(1, 3)), 6
+    tms = {}
+    for j in range(E):
+        tms[f"e{j}"] = EngineTokenModel(
+            name=f"e{j}",
+            t_weights_s=float(rng.integers(4, 17)) / 8.0,
+            t_kv_s=float(rng.integers(1, 5)) / 16.0,
+            t_flop_s=float(rng.integers(1, 9)) / 16.0,
+            kv_capacity=int(rng.integers(1, 5)),
+            prefill_tok_s=float(rng.integers(1, 5)) / 64.0)
+    sim = FleetEngineSim([f"e{j}" for j in range(E)], C,
+                         token_models=tms)
+    injected = np.zeros(C)
+    paused: dict[int, float] = {}
+    t = 0.0
+    for _ in range(30):
+        t += float(rng.integers(0, 5)) / 8.0
+        for slot, _ in sim.pop_completed(t):
+            injected[slot] = 0.0
+        free = [s for s in range(C)
+                if sim.job_engine[s] < 0 and s not in paused]
+        act = [s for s in range(C) if sim.job_engine[s] >= 0]
+        move = rng.random()
+        if move < 0.5 and free:
+            slot = int(rng.choice(free))
+            e = int(rng.integers(0, E))
+            m = tms[f"e{e}"]
+            # work = decode tokens x batch-1 step (the token work unit)
+            w = float(rng.integers(1, 17)) * m.decode_step_s(1.0)
+            sim.start(slot, e, w, t)
+            injected[slot] = w
+        elif move < 0.75 and act:
+            slot = int(rng.choice(act))
+            rem = sim.preempt(slot, t)
+            assert rem is not None
+            assert -1e-9 <= rem <= injected[slot] + 1e-9
+            paused[slot] = rem
+        elif paused:
+            slot, rem = paused.popitem()
+            sim.start(slot, int(rng.integers(0, E)), rem, t)
+        rem_col = sim.remaining(t)
+        for s in range(C):
+            if sim.job_engine[s] >= 0:
+                assert rem_col[s] <= injected[s] + 1e-9
+            if s in paused:
+                assert paused[s] <= injected[s] + 1e-9
+    for _ in range(C + 1):
+        nc = sim.next_completion()
+        if not np.isfinite(nc):
+            break
+        sim.pop_completed(nc)
+    assert not np.isfinite(sim.next_completion())

@@ -58,3 +58,37 @@ def test_load_trace_and_probe():
     assert all(v >= 0 for v in d.values())
     # deterministic given time
     assert probe(5.0) == probe(5.0)
+
+
+def test_slowdown_jitter_is_zero_mean():
+    # regression for the `1 + jitter * abs(z)` bug: every draw sat >= the
+    # noiseless curve, biasing fitted means up by jitter * E|z| (~+4% at
+    # the default jitter).  The noise must be zero-mean.
+    m = EngineLoadModel("e", concurrency=4, jitter=0.05)
+    rng = np.random.default_rng(7)
+    draws = np.array([m.slowdown(0, rng) for _ in range(4000)])
+    assert abs(float(draws.mean()) - 1.0) < 0.01  # |z| form gives ~1.04
+    assert float(draws.std()) > 0.02              # noise is applied
+    assert float(draws.min()) < 1.0               # ...on both sides
+
+
+def test_fit_slowdown_curve_matches_analytic():
+    # with zero-mean jitter the fitted means converge on the noiseless
+    # curve max(1, (N+1)/c) and the saturated fit on (a, b) = (1/c, 1/c)
+    m = EngineLoadModel("e", concurrency=4, jitter=0.05)
+    lv, mu, (a, b) = fit_slowdown_curve(m, reps=2000, seed=3)
+    noiseless = np.maximum(1.0, (lv + 1.0) / m.concurrency)
+    assert np.all(np.abs(mu / noiseless - 1.0) < 0.01)
+    assert abs(a - 0.25) < 0.05
+    assert abs(b - 0.25) < 0.01
+
+
+def test_prefill_pricing(engine):
+    # default keeps the legacy 4:1 output:prefill ratio exactly
+    assert engine.prefill_price_per_1k == 0.25 * engine.price_per_1k
+    assert engine.cost_of(16, 8) == (0.25 * 16 + 1.0 * 8) / 1000.0
+    # an explicit prefill rate replaces the hardcoded discount
+    engine2 = ServingEngine("t2", engine.model, engine.params,
+                            price_per_1k=1.0, prefill_price_per_1k=0.5)
+    assert engine2.cost_of(1000, 0) == 0.5
+    assert engine2.cost_of(0, 1000) == 1.0
